@@ -1,0 +1,97 @@
+"""GC scheme comparison — the paper's experimental core (Figures 4-8).
+
+One harness per figure family, apples-to-apples: only the MVGC scheme varies;
+the multiversion data structures, workload generator and space accounting are
+shared (repro.core.sim.workload).  Simulated-time methodology documented in
+DESIGN.md (single hyperthread container: work units = shared-memory accesses
+of the lock-free algorithms; space = Java-style reachability in words).
+
+  fig4/5 : tree,  split workload (40/40/40 threads in the paper; scaled)
+  fig6   : hash,  split workload with large rtxs
+  fig7   : tree,  mixed workload (50% upd / 49% lookup / 1% rtx-1024)
+  fig8   : hash,  mixed workload
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core.sim.workload import WorkloadConfig, run_workload
+
+SCHEMES = ["ebr", "steam", "dlrt", "slrt", "bbf"]
+
+
+def _row(scheme: str, r: Dict) -> Dict:
+    return {
+        "scheme": scheme,
+        "updates_per_Mwork": round(r["updates_per_mwork"], 1),
+        "rtx_keys_per_Mwork": round(r["rtx_keys_per_mwork"], 1),
+        "ops_per_Mwork": round(r["ops_per_mwork"], 1),
+        "peak_space_words": r["peak_space"]["words"],
+        "peak_versions": r["peak_space"].get("versions", 0),
+        "avg_space_words": int(r["avg_space"]),
+        "end_versions_per_list": round(r["end_space"]["versions_per_list"], 3),
+        "avg_remove_chain_c": r["scheme_stats"].get("avg_remove_chain_c", "-"),
+        "wall_s": r["wall_s"],
+    }
+
+
+def run_figure(ds: str, mode: str, *, n_keys: int, rtx_size: int,
+               num_procs: int, ops_per_proc: int, seed: int = 7,
+               zipf: float = 0.99) -> List[Dict]:
+    rows = []
+    for scheme in SCHEMES:
+        kw = {}
+        if scheme in ("dlrt", "slrt", "bbf"):
+            kw["batch_size"] = max(8, num_procs)
+        cfg = WorkloadConfig(
+            ds=ds, scheme=scheme, n_keys=n_keys, num_procs=num_procs,
+            mode=mode, rtx_size=rtx_size, variable_rtx_max=n_keys,
+            mixed_rtx_size=min(1024, n_keys), ops_per_proc=ops_per_proc,
+            zipf=zipf, seed=seed, sample_every=256, scheme_kwargs=kw,
+        )
+        t0 = time.time()
+        r = run_workload(cfg)
+        r["wall_s"] = round(time.time() - t0, 1)
+        rows.append(_row(scheme, r))
+    return rows
+
+
+FIGURES = {
+    "fig4_tree_split_small": dict(ds="tree", mode="split", n_keys=1024,
+                                  rtx_size=16, num_procs=24, ops_per_proc=200),
+    "fig5_tree_split_large": dict(ds="tree", mode="split", n_keys=4096,
+                                  rtx_size=16, num_procs=24, ops_per_proc=150),
+    "fig6_hash_split_bigrtx": dict(ds="hash", mode="split", n_keys=1024,
+                                   rtx_size=512, num_procs=24, ops_per_proc=200),
+    "fig7_tree_mixed": dict(ds="tree", mode="mixed", n_keys=1024,
+                            rtx_size=16, num_procs=24, ops_per_proc=300),
+    "fig8_hash_mixed": dict(ds="hash", mode="mixed", n_keys=1024,
+                            rtx_size=16, num_procs=24, ops_per_proc=300),
+}
+
+
+def print_table(name: str, rows: List[Dict]) -> None:
+    cols = list(rows[0].keys())
+    print(f"\n== {name} ==")
+    print("  ".join(f"{c:>22s}" for c in cols))
+    for r in rows:
+        print("  ".join(f"{str(r[c]):>22s}" for c in cols))
+
+
+def main(fast: bool = True) -> Dict[str, List[Dict]]:
+    out = {}
+    for name, kw in FIGURES.items():
+        if fast:
+            kw = dict(kw)
+            kw["ops_per_proc"] = max(60, kw["ops_per_proc"] // 3)
+            kw["n_keys"] = max(256, kw["n_keys"] // 2)
+        rows = run_figure(**kw)
+        print_table(name, rows)
+        out[name] = rows
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    main(fast="--full" not in sys.argv)

@@ -1,0 +1,105 @@
+"""Kernel & vectorized-MVGC microbenchmarks.
+
+Wall-clock on this container measures the *XLA CPU* path (the production jit
+fallback) — real TPU kernel timing needs hardware; the Pallas kernels are
+validated in interpret mode (tests/kernels) and their roofline behaviour is
+derived in EXPERIMENTS.md.  What IS meaningful here:
+
+  * vectorized MVGC policy cost (needed-sweep / ring-flush / write) per
+    version — the serving control-plane budget,
+  * version_search (the rtx read path) throughput,
+  * the jnp flash-attention reference per-token cost (sanity scaling).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_mvgc_policies() -> List[Dict]:
+    from repro.core.mvgc import vstore
+    rows = []
+    S, V, P = 4096, 8, 64
+    for policy in ("slrt", "dlrt", "steam", "ebr", "sweep"):
+        state = vstore.make_state(S, V, P, ring_capacity=S)
+        ids = jnp.arange(256, dtype=jnp.int32)
+        pl = jnp.arange(256, dtype=jnp.int32)
+        m = jnp.ones((256,), bool)
+        wstep = jax.jit(lambda st: vstore.write_step(st, ids, pl, m,
+                                                     policy=policy)[0])
+        gstep = jax.jit(lambda st: vstore.gc_step(st, policy=policy)[0])
+        us_w = _time(wstep, state)
+        us_g = _time(gstep, state)
+        rows.append({
+            "name": f"mvgc_write_{policy}", "us_per_call": round(us_w, 1),
+            "derived": f"{256 / us_w:.2f} writes/us (S={S},V={V})",
+        })
+        rows.append({
+            "name": f"mvgc_gc_{policy}", "us_per_call": round(us_g, 1),
+            "derived": f"{S * V / us_g:.1f} entries/us swept",
+        })
+    return rows
+
+
+def bench_version_search() -> List[Dict]:
+    from repro.kernels.version_search.ref import search_ref
+    rows = []
+    for S, V, B in [(4096, 8, 1024), (65536, 8, 4096)]:
+        rng = np.random.default_rng(0)
+        ts = jnp.array(rng.integers(0, 1000, (S, V)), jnp.int32)
+        pay = jnp.array(rng.integers(0, 1 << 20, (S, V)), jnp.int32)
+        ids = jnp.array(rng.integers(0, S, B), jnp.int32)
+        t = jnp.array(rng.integers(0, 1000, B), jnp.int32)
+        f = jax.jit(search_ref)
+        us = _time(f, ts, pay, ids, t)
+        rows.append({
+            "name": f"version_search_S{S}_B{B}",
+            "us_per_call": round(us, 1),
+            "derived": f"{B / us:.2f} lookups/us (rtx read path)",
+        })
+    return rows
+
+
+def bench_flash_ref() -> List[Dict]:
+    from repro.kernels.flash_prefill.ref import attention_ref
+    rows = []
+    for B, H, T, D, win in [(1, 8, 512, 64, 0), (1, 8, 1024, 64, 256)]:
+        rng = np.random.default_rng(1)
+        q = jnp.array(rng.standard_normal((B, H, T, D)), jnp.float32)
+        k = jnp.array(rng.standard_normal((B, H, T, D)), jnp.float32)
+        v = jnp.array(rng.standard_normal((B, H, T, D)), jnp.float32)
+        f = jax.jit(lambda a, b, c: attention_ref(a, b, c, window=win))
+        us = _time(f, q, k, v, iters=5)
+        rows.append({
+            "name": f"attn_ref_T{T}_win{win}",
+            "us_per_call": round(us, 1),
+            "derived": f"{B * H * T / us:.2f} tok/us",
+        })
+    return rows
+
+
+def main() -> List[Dict]:
+    rows = bench_mvgc_policies() + bench_version_search() + bench_flash_ref()
+    print("\n== kernel / mvgc microbench ==")
+    print(f"{'name':32s} {'us_per_call':>12s}  derived")
+    for r in rows:
+        print(f"{r['name']:32s} {r['us_per_call']:>12.1f}  {r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows plus the full comparison tables.
+  python -m benchmarks.run            # fast mode (scaled-down workloads)
+  python -m benchmarks.run --full     # paper-scale workloads
+  python -m benchmarks.run --roofline # include roofline table (needs dryrun)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from benchmarks import gc_comparison, kernel_bench, space_bounds
+
+    csv_rows = []
+
+    figs = gc_comparison.main(fast=not full)
+    for name, rows in figs.items():
+        for r in rows:
+            csv_rows.append((f"{name}/{r['scheme']}/updates",
+                             1e6 / max(1e-9, r["updates_per_Mwork"]),
+                             f"peak_space={r['peak_space_words']}w"))
+
+    space_bounds.main()
+    for r in kernel_bench.main():
+        csv_rows.append((r["name"], r["us_per_call"], r["derived"]))
+
+    if "--roofline" in sys.argv:
+        try:
+            from repro.launch import roofline
+            rows = roofline.load_all("baseline")
+            print("\n== roofline (from dry-run artifacts) ==")
+            print(roofline.table(rows))
+        except Exception as e:  # dryrun artifacts may not exist yet
+            print(f"[roofline skipped: {e}]")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

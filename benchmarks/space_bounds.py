@@ -1,0 +1,84 @@
+"""Theorem 1 / space-bound validation (paper §3, §5).
+
+Measures, as the workload scales:
+  * PDL/SSL reachable nodes vs the L - R + P bound,
+  * RT-scheme reachable versions vs O(H + P^2 log P) (Theorem 1),
+  * EBR's unbounded growth under a pinned long rtx (the contrast).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from repro.core.sim.rangetracker import RangeTracker
+from repro.core.sim.schemes import make_scheme
+from repro.core.sim.ssl_list import MVEnv
+from repro.core.sim.vcas import VCas
+from repro.core.sim.workload import WorkloadConfig, measure_space, run_workload
+
+
+def theorem1_sweep() -> List[Dict]:
+    """Reachable versions under one pinned reader while updates flow."""
+    rows = []
+    for P in (4, 8, 16, 32):
+        for scheme_name in ("slrt", "ebr"):
+            env = MVEnv(P)
+            scheme = make_scheme(scheme_name, env)
+            objs = [VCas(env, scheme, 0) for _ in range(64)]
+            # reader pins t=now; H = 64 needed versions (one per object)
+            env.advance_ts()
+            t_pin = scheme.begin_rtx(0)
+            n_updates = 200 * P
+            for i in range(n_updates):
+                env.advance_ts()
+                objs[i % 64].cas(1 + (i % (P - 1)) if P > 1 else 0,
+                                 objs[i % 64].read(), i)
+            reach = sum(len(o.lst.reachable_nodes()) for o in objs)
+            aux = scheme.aux_space_words()
+            H = 2 * 64  # pinned + current version per object
+            bound = 4 * (H + P * P * max(1, int(math.log2(P)))) + 64
+            rows.append({
+                "P": P, "scheme": scheme_name, "updates": n_updates,
+                "reachable_versions": reach, "rt_aux_words": aux,
+                "thm1_bound": bound,
+                "within_bound": reach <= bound if scheme_name == "slrt" else "-",
+            })
+            scheme.end_rtx(0)
+    return rows
+
+
+def lrp_bound_sweep() -> List[Dict]:
+    """L - R + P bound on reachable list nodes at quiescence."""
+    rows = []
+    for scheme_name in ("slrt", "dlrt"):
+        for n_ops in (500, 2000):
+            cfg = WorkloadConfig(
+                ds="hash", scheme=scheme_name, n_keys=256, num_procs=12,
+                ops_per_proc=n_ops // 12, mode="split", sample_every=10_000,
+                seed=3, scheme_kwargs={"batch_size": 12},
+            )
+            r = run_workload(cfg)
+            s = r["end_space"]
+            rows.append({
+                "scheme": scheme_name, "ops": n_ops,
+                "end_versions": s["versions"], "lists": s["lists"],
+                "bound_L_R_P": s["lists"] + cfg.num_procs,
+                "ok": s["versions"] <= s["lists"] + cfg.num_procs,
+            })
+    return rows
+
+
+def main() -> Dict[str, List[Dict]]:
+    t1 = theorem1_sweep()
+    print("\n== Theorem 1: reachable versions under a pinned reader ==")
+    for r in t1:
+        print("   ", r)
+    l1 = lrp_bound_sweep()
+    print("\n== L - R + P bound at quiescence ==")
+    for r in l1:
+        print("   ", r)
+    return {"theorem1": t1, "lrp": l1}
+
+
+if __name__ == "__main__":
+    main()

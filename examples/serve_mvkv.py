@@ -1,0 +1,74 @@
+"""MV-Serve example: batched decoding with concurrent snapshot readers.
+
+Demonstrates the paper's workload at the serving layer: decode steps are the
+*updates* (one descriptor version per sequence per step), pinned scoring
+passes are the *rtxs*, and the SL-RT policy keeps descriptor space bounded
+(compare --gc-policy ebr to watch the paper's pathology).
+
+Run:  PYTHONPATH=src python examples/serve_mvkv.py [--gc-policy slrt|ebr]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.configs.base import RunConfig, SHAPES
+from repro.models import transformer as tf
+from repro.serve import engine as eng
+from repro.serve.engine import MVServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--gc-policy", default="slrt")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch)
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    gc_policy=args.gc_policy, versions_per_slot=64,
+                    reader_lanes=8)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    engine = MVServeEngine(cfg, run, params, batch=args.batch, max_len=128)
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.array(rng.integers(0, cfg.vocab_size, (args.batch, 12)),
+                       jnp.int32)
+    engine.prefill(prompt)
+    print(f"arch={cfg.name} (reduced)  policy={args.gc_policy}  "
+          f"batch={args.batch}")
+
+    # a long-running snapshot reader pins early
+    t_pin = engine.pin(lane=0)
+    snap0 = np.asarray(engine.lengths_at(t_pin))
+    print(f"[rtx] pinned t={t_pin}; snapshot lengths {snap0}")
+
+    for i in range(args.steps):
+        toks = engine.step()
+        if i % 10 == 0:
+            rep = engine.space()
+            print(f"step {i:3d}  live_versions={rep['live_versions']:4d}  "
+                  f"max_slot_occ={rep['max_slot_occupancy']}  "
+                  f"overflow={rep['overflows']}")
+    # the pinned snapshot is still exactly what it was
+    snap1 = np.asarray(engine.lengths_at(t_pin))
+    assert (snap0 == snap1).all(), "snapshot violated!"
+    print(f"[rtx] snapshot after {args.steps} decodes unchanged: {snap1}")
+
+    # score candidate tokens against the frozen snapshot while decode moved on
+    logits = eng.snapshot_score(engine.state, cfg,
+                                jnp.ones((args.batch, 1), jnp.int32),
+                                jnp.int32(t_pin))
+    print(f"[rtx] snapshot_score logits shape: {logits.shape}")
+
+    engine.unpin(0)
+    engine.step()
+    print(f"[gc] after unpin: {engine.space()}")
+
+
+if __name__ == "__main__":
+    main()

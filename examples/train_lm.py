@@ -1,0 +1,91 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+synthetic data, with checkpointing + MVGC retention + a simulated crash and
+restart at the midpoint.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(CPU: ~100M params is the xlstm-125m config at seq 128 / batch 8; pass
+--small for a 1-minute smoke run.)
+"""
+import argparse
+import dataclasses
+import functools
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import get_config, reduced_config
+from repro.configs.base import RunConfig, SHAPES
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.train.step import TrainState, init_state, train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.small:
+        cfg = reduced_config("xlstm-125m")
+        seq, batch, steps = 64, 8, min(args.steps, 60)
+    else:
+        # ~100M-param config: the xlstm-125m arch with a trimmed vocab so the
+        # CPU embedding matmul stays tractable
+        cfg = dataclasses.replace(get_config("xlstm-125m"), vocab_size=8192,
+                                  mlstm_chunk=32)
+        seq, batch, steps = 128, 8, args.steps
+
+    n_params_est = cfg.param_count()
+    print(f"arch={cfg.name}  ~{n_params_est/1e6:.0f}M params  "
+          f"seq={seq} batch={batch} steps={steps}")
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], lr=3e-3)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, seq, batch, copy_period=16))
+    mgr = CheckpointManager(args.ckpt_dir)
+    state = init_state(cfg, jax.random.PRNGKey(0))
+    print(f"actual params: "
+          f"{sum(x.size for x in jax.tree.leaves(state.params))/1e6:.1f}M")
+    step_fn = jax.jit(functools.partial(train_step, cfg=cfg, run=run))
+
+    crash_at = steps // 2
+    losses = []
+
+    def run_until(state, data, start, end):
+        for i in range(start, end):
+            t0 = time.time()
+            batch_i = {k: jnp.asarray(v) for k, v in next(data).items()}
+            state, m = step_fn(state, batch_i)
+            losses.append(float(m["loss"]))
+            if i % 20 == 0 or i == end - 1:
+                print(f"step {i:4d}  loss {losses[-1]:.4f}  "
+                      f"({(time.time()-t0)*1e3:.0f} ms)")
+            if (i + 1) % 50 == 0:
+                mgr.save(i + 1, state, extra=data.state_dict())
+                mgr.gc(keep_last=2)
+        return state
+
+    state = run_until(state, data, 0, crash_at)
+    mgr.save(crash_at, state, extra=data.state_dict())
+    print(f"\n[simulated crash at step {crash_at}; restarting from checkpoint]\n")
+
+    # restart path: fresh state objects, restore from disk
+    state2 = init_state(cfg, jax.random.PRNGKey(0))
+    restored, extra = mgr.restore(mgr.latest_step(), like=state2)
+    state2 = TrainState(*restored)
+    data2 = SyntheticLM(DataConfig(cfg.vocab_size, seq, batch, copy_period=16))
+    data2.load_state_dict(extra)
+    state2 = run_until(state2, data2, crash_at, steps)
+
+    first, last = losses[0], sum(losses[-10:]) / 10
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first - 0.3 else 'check config'})")
+    print(f"checkpoints kept after MVGC retention: {mgr.steps()}")
+
+
+if __name__ == "__main__":
+    main()

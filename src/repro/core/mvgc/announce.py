@@ -1,0 +1,65 @@
+"""Announcement board: the bulk-synchronous analogue of the paper's
+Announce[1..P] array plus the A1-A3 announce protocol (appendix B.2).
+
+One lane per concurrent snapshot reader (a serving request performing a
+multi-page snapshot read, an evaluator pinning a checkpoint, a speculative
+branch scoring pass).  Under SPMD the board is a small replicated-or-sharded
+i32 vector; announce/unannounce are masked scatters; the scan is a sort.
+Readers are sharded with their data shard, so each shard's GC pass only needs
+its local board — sharding gives the locality the GlobalAnnScan protocol had
+to engineer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mvgc.pool import EMPTY
+from repro.core.mvgc.needed import sort_announcements
+
+
+class AnnounceBoard(NamedTuple):
+    slots: jax.Array  # i32[P]: announced timestamp per reader lane; EMPTY = idle
+
+    @property
+    def num_lanes(self) -> int:
+        return self.slots.shape[0]
+
+
+def make_board(num_lanes: int) -> AnnounceBoard:
+    return AnnounceBoard(slots=jnp.full((num_lanes,), EMPTY, jnp.int32))
+
+
+def announce(
+    board: AnnounceBoard, lanes: jax.Array, ts: jax.Array, mask: jax.Array
+) -> AnnounceBoard:
+    """Pin timestamps: lanes[i] announces ts[i] where mask[i].
+
+    The A1-A3 validation loop is unnecessary here: the timestamp is taken and
+    published in the same synchronous step, so it can never be stale."""
+    ts = jnp.broadcast_to(jnp.asarray(ts, jnp.int32), lanes.shape)
+    upd = jnp.where(mask, ts, board.slots[lanes])
+    return AnnounceBoard(slots=board.slots.at[lanes].set(upd, mode="drop"))
+
+
+def unannounce(
+    board: AnnounceBoard, lanes: jax.Array, mask: jax.Array
+) -> AnnounceBoard:
+    upd = jnp.where(mask, EMPTY, board.slots[lanes])
+    return AnnounceBoard(slots=board.slots.at[lanes].set(upd, mode="drop"))
+
+
+def scan(board: AnnounceBoard) -> jax.Array:
+    """Sorted announcement snapshot (TS_MAX padded) for needed()."""
+    return sort_announcements(board.slots)
+
+
+def oldest(board: AnnounceBoard, now: jax.Array) -> jax.Array:
+    """Oldest pinned timestamp, or ``now`` if nothing is pinned (the EBR
+    epoch boundary)."""
+    active = board.slots != EMPTY
+    vals = jnp.where(active, board.slots, jnp.int32(2_147_483_647))
+    m = vals.min()
+    return jnp.where(active.any(), m, now).astype(jnp.int32)

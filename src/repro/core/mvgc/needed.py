@@ -1,0 +1,62 @@
+"""The needed(A, t) predicate, vectorized — the heart of the TPU adaptation.
+
+Paper §5: a version x is needed(A, t) iff
+  (1) x.ts > t (appended after the scan threshold), or
+  (2) x is the last appended node with ts <= t (i.e. still current at t), or
+  (3) for some announced a in A, x is the last appended node with ts <= a.
+
+With interval form (every version carries ``[ts, succ)``; succ = TS_MAX while
+current) this collapses to:
+
+    needed(x)  <=>  succ(x) > t   OR   exists a in A:  ts(x) <= a < succ(x)
+
+which is one ``searchsorted`` over the sorted announcement array per version —
+a pure VPU sweep with the announcement array resident in VMEM.  The SSL
+``compact`` merge pass computed exactly this predicate list-element by
+list-element; here it is evaluated for a whole [S, V] slab (or a gathered
+batch of retired entries) in one shot.  The Pallas kernel in
+``repro.kernels.compact`` implements the same contraction with explicit
+BlockSpec tiling; this module is its jnp reference and the jit fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mvgc.pool import TS_MAX, EMPTY, VersionStore
+
+
+def needed_intervals(
+    ts: jax.Array,        # i32[...]: version timestamps (EMPTY entries allowed)
+    succ: jax.Array,      # i32[...]: successor timestamps (TS_MAX = current)
+    ann_sorted: jax.Array,  # i32[P]: sorted announcements, TS_MAX padding
+    now: jax.Array,       # i32[]: scan threshold t (the current global time)
+) -> jax.Array:
+    """bool[...] — True where the version is needed(A, now)."""
+    P = ann_sorted.shape[0]
+    idx = jnp.searchsorted(ann_sorted, ts, side="left")  # first a >= ts
+    a = ann_sorted[jnp.minimum(idx, P - 1)]
+    pinned = (idx < P) & (a < succ)        # exists a: ts <= a < succ
+    current_or_future = succ > now         # case (1)/(2): interval still open
+    valid = ts != EMPTY
+    return valid & (pinned | current_or_future)
+
+
+def needed_mask(
+    store: VersionStore, ann_sorted: jax.Array, now: jax.Array
+) -> jax.Array:
+    """needed(A, now) for every entry of the store: bool[S, V]."""
+    return needed_intervals(store.ts, store.succ, ann_sorted, now)
+
+
+def sort_announcements(ann: jax.Array) -> jax.Array:
+    """Sort an announcement board into searchsorted form.
+
+    Un-announced lanes hold EMPTY (-1); they are mapped to TS_MAX so they sort
+    to the end and can never pin anything (TS_MAX < succ is False for every
+    closed interval, and open intervals are kept by the `succ > now` term).
+    This replaces the paper's GlobalAnnScan protocol: under bulk synchrony the
+    board is snapshotted collectively, which is strictly stronger than
+    Lemma 11's consistency requirement."""
+    ann = jnp.where(ann == EMPTY, TS_MAX, ann)
+    return jnp.sort(ann)

@@ -1,0 +1,163 @@
+"""TPU-native version store: structure-of-arrays version slabs.
+
+The paper's pointer-linked version lists become fixed-capacity **version
+slabs**: each versioned object (a *slot* — e.g. a KV page-table entry) owns a
+row of ``V`` entries.  An entry is a version ``(ts, succ, payload)`` where
+``succ`` is the timestamp at which it was overwritten (``TS_MAX`` while
+current).  The whole store is a pytree of ``[S, V]`` arrays — shardable along
+``S`` with the data it versions, updatable with masked scatters, and
+sweepable with VPU-friendly elementwise passes.  This is the hardware
+adaptation recorded in DESIGN.md §2: index-linked SoA instead of pointer
+chasing, bulk-synchronous masked updates instead of CAS.
+
+Capacity discipline: the paper's L-R+P bound becomes "occupancy stays below
+V provided GC runs at the configured cadence"; ``write`` returns an
+``overflow`` flag the engine must handle (it forces a GC pass — trivially
+possible under bulk synchrony).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+TS_MAX = jnp.iinfo(jnp.int32).max  # "current version" successor / padding
+EMPTY = jnp.int32(-1)
+
+
+class VersionStore(NamedTuple):
+    """[S, V] version slabs.  Entry invalid iff ts == EMPTY."""
+
+    ts: jax.Array        # i32[S, V]  version timestamp (EMPTY = free entry)
+    succ: jax.Array      # i32[S, V]  successor timestamp (TS_MAX = current)
+    payload: jax.Array   # i32[S, V]  opaque handle (e.g. page index), EMPTY = none
+
+    @property
+    def num_slots(self) -> int:
+        return self.ts.shape[0]
+
+    @property
+    def versions_per_slot(self) -> int:
+        return self.ts.shape[1]
+
+
+def make_store(num_slots: int, versions_per_slot: int) -> VersionStore:
+    shape = (num_slots, versions_per_slot)
+    return VersionStore(
+        ts=jnp.full(shape, EMPTY, jnp.int32),
+        succ=jnp.full(shape, TS_MAX, jnp.int32),
+        payload=jnp.full(shape, EMPTY, jnp.int32),
+    )
+
+
+def valid_mask(store: VersionStore) -> jax.Array:
+    return store.ts != EMPTY
+
+
+def occupancy(store: VersionStore) -> jax.Array:
+    """Versions currently held per slot: i32[S]."""
+    return valid_mask(store).sum(axis=1).astype(jnp.int32)
+
+
+def current_index(store: VersionStore) -> jax.Array:
+    """Index (into V) of the current version per slot; -1 if slot empty.
+
+    The current version is the one with succ == TS_MAX; there is at most one
+    per slot by construction.  i32[S]."""
+    cur = (store.succ == TS_MAX) & valid_mask(store)
+    idx = jnp.argmax(cur, axis=1).astype(jnp.int32)
+    return jnp.where(cur.any(axis=1), idx, EMPTY)
+
+
+def write(
+    store: VersionStore,
+    slot_ids: jax.Array,   # i32[B] distinct slots to write this step
+    new_ts: jax.Array,     # i32[] or i32[B] timestamp of the new versions
+    payloads: jax.Array,   # i32[B] payload handles for the new versions
+    write_mask: jax.Array, # bool[B] lanes actually writing
+) -> Tuple[VersionStore, jax.Array]:
+    """Append one new version to each (masked) slot.
+
+    The paper's ``tryAppend`` under bulk synchrony: the overwritten current
+    version gets ``succ = new_ts`` (closing its interval — this is what the
+    sim layer reports to the RangeTracker), and the new version lands in the
+    slot's first free entry.  Returns (new_store, overflow_mask[B]).
+    Precondition: slot_ids are unique among masked lanes (engine guarantees —
+    one writer per object per step, the SPMD analogue of CAS success).
+    """
+    S, V = store.ts.shape
+    B = slot_ids.shape[0]
+    new_ts = jnp.broadcast_to(jnp.asarray(new_ts, jnp.int32), (B,))
+    rows_ts = store.ts[slot_ids]          # [B, V]
+    rows_succ = store.succ[slot_ids]
+    rows_valid = rows_ts != EMPTY
+
+    # first free entry per row; a full row means the append fails (overflow)
+    free = ~rows_valid
+    has_free = free.any(axis=1)
+    ins = jnp.argmax(free, axis=1)        # first free position
+    overflow = write_mask & ~has_free
+    do = write_mask & has_free            # lanes that actually append
+
+    # close the overwritten current version's interval (only if appending)
+    is_cur = (rows_succ == TS_MAX) & rows_valid
+    rows_succ = jnp.where(is_cur & do[:, None], new_ts[:, None], rows_succ)
+
+    onehot = jax.nn.one_hot(ins, V, dtype=jnp.bool_) & do[:, None]
+    rows_ts = jnp.where(onehot, new_ts[:, None], rows_ts)
+    rows_succ = jnp.where(onehot, TS_MAX, rows_succ)
+    rows_pay = jnp.where(onehot, payloads[:, None], store.payload[slot_ids])
+
+    # scatter back only the appending lanes; inert lanes are routed to an
+    # out-of-range row and dropped, so duplicates/masked lanes can't clobber
+    dest = jnp.where(do, slot_ids, S)
+    new_store = VersionStore(
+        ts=store.ts.at[dest].set(rows_ts, mode="drop"),
+        succ=store.succ.at[dest].set(rows_succ, mode="drop"),
+        payload=store.payload.at[dest].set(rows_pay, mode="drop"),
+    )
+    return new_store, overflow
+
+
+def read_at(
+    store: VersionStore,
+    slot_ids: jax.Array,  # i32[B]
+    t: jax.Array,         # i32[] or i32[B] snapshot timestamps
+) -> Tuple[jax.Array, jax.Array]:
+    """The rtx read path (paper ``search(t)``): latest version with ts <= t.
+
+    Returns (payload[B], found[B]).  A data-parallel masked argmax over the
+    V-wide slab replaces the list traversal."""
+    B = slot_ids.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    rows_ts = store.ts[slot_ids]                     # [B, V]
+    ok = (rows_ts != EMPTY) & (rows_ts <= t[:, None])
+    # argmax of ts with invalid lanes at -inf
+    masked = jnp.where(ok, rows_ts, jnp.int32(-2_147_483_648))
+    idx = jnp.argmax(masked, axis=1)
+    found = ok.any(axis=1)
+    payload = jnp.take_along_axis(store.payload[slot_ids], idx[:, None], axis=1)[:, 0]
+    return jnp.where(found, payload, EMPTY), found
+
+
+def read_current(
+    store: VersionStore, slot_ids: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """peekHead: payload of the current version per queried slot."""
+    rows_succ = store.succ[slot_ids]
+    rows_ts = store.ts[slot_ids]
+    cur = (rows_succ == TS_MAX) & (rows_ts != EMPTY)
+    idx = jnp.argmax(cur, axis=1)
+    found = cur.any(axis=1)
+    payload = jnp.take_along_axis(store.payload[slot_ids], idx[:, None], axis=1)[:, 0]
+    return jnp.where(found, payload, EMPTY), found
+
+
+def free_entries(store: VersionStore, kill: jax.Array) -> VersionStore:
+    """Free every entry where kill[S, V] is True (the splice)."""
+    return VersionStore(
+        ts=jnp.where(kill, EMPTY, store.ts),
+        succ=jnp.where(kill, TS_MAX, store.succ),
+        payload=jnp.where(kill, EMPTY, store.payload),
+    )

@@ -1,0 +1,119 @@
+"""Batched RangeTracker — the BBF+ range-tracking object under bulk synchrony.
+
+The sim layer's RangeTracker keeps per-process local lists flushed through a
+shared queue; the TPU adaptation keeps one fixed-capacity **retire ring** per
+shard: retired versions (flat store index + closed interval) are pushed as
+they are overwritten; when occupancy crosses the flush threshold the whole
+ring is intersected against the sorted announcements *in one vectorized
+pass* — obsolete entries are freed from the store, still-needed ones are
+compacted to the front of the ring.  Amortized O(1) per retirement, O(B) per
+flush, exactly the BBF+ bound with the merge realized as a masked sweep
+instead of a sorted-list merge.
+
+Capacity = the paper's O(H + P^2 log P) space term: ring capacity must cover
+needed-retired versions (H) plus one flush batch; overflow is reported and
+handled by forcing a flush.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mvgc.needed import needed_intervals
+from repro.core.mvgc.pool import EMPTY, TS_MAX, VersionStore, free_entries
+
+
+class RetireRing(NamedTuple):
+    idx: jax.Array    # i32[B]: flat store index (slot * V + v); EMPTY = hole
+    low: jax.Array    # i32[B]: interval start (version ts)
+    high: jax.Array   # i32[B]: interval end (successor ts)
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[0]
+
+
+def make_ring(capacity: int) -> RetireRing:
+    return RetireRing(
+        idx=jnp.full((capacity,), EMPTY, jnp.int32),
+        low=jnp.full((capacity,), EMPTY, jnp.int32),
+        high=jnp.full((capacity,), TS_MAX, jnp.int32),
+    )
+
+
+def ring_size(ring: RetireRing) -> jax.Array:
+    return (ring.idx != EMPTY).sum().astype(jnp.int32)
+
+
+def push(
+    ring: RetireRing,
+    flat_idx: jax.Array,   # i32[K] flat store indices being retired
+    low: jax.Array,        # i32[K]
+    high: jax.Array,       # i32[K]
+    mask: jax.Array,       # bool[K]
+) -> Tuple[RetireRing, jax.Array]:
+    """Append retired intervals into ring holes.  Returns (ring, dropped[K]):
+    dropped lanes found no hole (caller must flush and retry — bulk-synchrony
+    makes that a pure control-flow decision)."""
+    B = ring.capacity
+    holes = ring.idx == EMPTY                       # bool[B]
+    # rank masked pushes and match them to hole positions in ascending order
+    want = mask
+    push_rank = jnp.cumsum(want.astype(jnp.int32)) - 1          # [K]
+    n_holes = holes.sum()
+    ok = want & (push_rank < n_holes)
+    hole_pos = jnp.sort(jnp.where(holes, jnp.arange(B, dtype=jnp.int32), B))
+    dest = jnp.where(ok, hole_pos[jnp.minimum(push_rank, B - 1)], B)  # B = drop
+    new_ring = RetireRing(
+        idx=ring.idx.at[dest].set(jnp.where(ok, flat_idx, EMPTY), mode="drop"),
+        low=ring.low.at[dest].set(jnp.where(ok, low, EMPTY), mode="drop"),
+        high=ring.high.at[dest].set(jnp.where(ok, high, TS_MAX), mode="drop"),
+    )
+    return new_ring, want & ~ok
+
+
+def flush(
+    ring: RetireRing,
+    store: VersionStore,
+    ann_sorted: jax.Array,
+    now: jax.Array,
+) -> Tuple[RetireRing, VersionStore, jax.Array]:
+    """Intersect the ring against announcements; free obsolete store entries.
+
+    Returns (ring', store', freed_payloads[B]) where freed_payloads holds the
+    payload handles of reclaimed versions (EMPTY elsewhere) so the caller can
+    return pages to its free pool."""
+    S, V = store.ts.shape
+    occupied = ring.idx != EMPTY
+    needed = needed_intervals(
+        jnp.where(occupied, ring.low, EMPTY), ring.high, ann_sorted, now
+    )
+    reclaim = occupied & ~needed
+    # free the store entries (out-of-range sentinel index drops masked lanes)
+    kill_flat = jnp.zeros((S * V,), jnp.bool_).at[
+        jnp.where(reclaim, ring.idx, S * V)
+    ].set(True, mode="drop")
+    freed_payloads = jnp.where(
+        reclaim, store.payload.reshape(-1)[jnp.minimum(ring.idx, S * V - 1)], EMPTY
+    )
+    store = free_entries(store, kill_flat.reshape(S, V))
+    # keep needed entries, compacted to the front of the ring
+    keep = occupied & needed
+    ring = _compact_ring(ring, keep)
+    return ring, store, freed_payloads
+
+
+def _compact_ring(ring: RetireRing, keep: jax.Array) -> RetireRing:
+    B = ring.capacity
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    dest = jnp.where(keep, rank, B)  # dropped
+    def scatter(arr, fill):
+        base = jnp.full((B,), fill, arr.dtype)
+        return base.at[dest].set(jnp.where(keep, arr, fill), mode="drop")
+    return RetireRing(
+        idx=scatter(ring.idx, EMPTY),
+        low=scatter(ring.low, EMPTY),
+        high=scatter(ring.high, TS_MAX),
+    )

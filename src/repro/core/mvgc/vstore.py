@@ -1,0 +1,263 @@
+"""Versioned object store: the deployable MVGC facade.
+
+Bundles the version slabs, announcement board, retire ring and the global
+timestamp into one pytree (`MVState`) with pure step functions, and exposes
+the paper's scheme menu as GC *policies* over identical state:
+
+* ``ebr``    — free every version whose interval closed before the oldest
+               pinned timestamp (epoch quiescence; cannot free "middle"
+               versions that closed while any older reader is live).
+* ``steam``  — compact-on-append: after each write step, sweep exactly the
+               written slots' slabs with needed(A, now).
+* ``dlrt``   — RangeTracker ring; flush frees exactly the retired entries
+               that became obsolete (the PDL splice-by-handle analogue).
+* ``slrt``   — ring flush *plus* a needed-sweep of the implicated slots'
+               whole slabs (SSL compact's preemptive splicing; default).
+* ``sweep``  — GVM/HANA analogue: sweep every slab each ``gc_every`` steps,
+               regardless of update activity (the baseline the paper's
+               related work improves on).
+
+All functions are jit/shard_map friendly: fixed shapes, masked updates, no
+host control flow on traced values.  Policy strings specialize at trace time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mvgc import announce as ann
+from repro.core.mvgc import pool, rangetracker as rt
+from repro.core.mvgc.needed import needed_mask, needed_intervals
+from repro.core.mvgc.pool import EMPTY, TS_MAX, VersionStore
+
+POLICIES = ("ebr", "steam", "dlrt", "slrt", "sweep")
+
+
+class MVState(NamedTuple):
+    store: VersionStore          # [S, V] version slabs
+    board: ann.AnnounceBoard     # [P] reader pins
+    ring: rt.RetireRing          # [B] retired intervals (RT policies)
+    now: jax.Array               # i32[] global timestamp (one tick per step)
+    overflow_count: jax.Array    # i32[] slab-overflow events (monitoring)
+    dropped_retires: jax.Array   # i32[] ring-overflow events (monitoring)
+
+
+def make_state(
+    num_slots: int,
+    versions_per_slot: int,
+    num_reader_lanes: int,
+    ring_capacity: Optional[int] = None,
+) -> MVState:
+    ring_capacity = ring_capacity or max(64, num_slots // 2)
+    return MVState(
+        store=pool.make_store(num_slots, versions_per_slot),
+        board=ann.make_board(num_reader_lanes),
+        ring=rt.make_ring(ring_capacity),
+        now=jnp.int32(0),
+        overflow_count=jnp.int32(0),
+        dropped_retires=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Write path
+# ---------------------------------------------------------------------------
+def write_step(
+    state: MVState,
+    slot_ids: jax.Array,   # i32[K] slots written this step (unique when masked)
+    payloads: jax.Array,   # i32[K] new payload handles
+    mask: jax.Array,       # bool[K]
+    policy: str = "slrt",
+) -> Tuple[MVState, jax.Array, jax.Array]:
+    """One bulk-synchronous update step: tick the clock, append versions,
+    retire the overwritten ones into the ring (RT policies), and return the
+    payload handles freed by any immediate policy action.
+
+    Returns (state', freed_payloads, overflow[K]) — freed_payloads is i32[...]
+    with EMPTY holes (callers recycle them, e.g. return KV pages to the free
+    pool); overflow marks lanes whose append failed because the slot's slab
+    was full — the engine must force a GC pass and retry those lanes (or, for
+    EBR, provision larger slabs: this is precisely the paper's unbounded-EBR
+    space pathology surfacing as a capacity requirement)."""
+    assert policy in POLICIES, policy
+    freed = jnp.full(slot_ids.shape, EMPTY, jnp.int32)
+    if policy == "steam":
+        # Steam compacts the list *when appending to it* (paper §2): sweep the
+        # written slots before the append so reclaimed entries make room.
+        state, freed = _sweep_slots(state, slot_ids, mask)
+    now = state.now + 1
+    store = state.store
+    S, V = store.ts.shape
+
+    # capture the overwritten (current) version per written slot BEFORE write
+    rows_ts = store.ts[slot_ids]
+    rows_succ = store.succ[slot_ids]
+    is_cur = (rows_succ == TS_MAX) & (rows_ts != EMPTY)
+    had_cur = is_cur.any(axis=1) & mask
+    cur_v = jnp.argmax(is_cur, axis=1).astype(jnp.int32)
+    retired_flat = slot_ids * V + cur_v
+    retired_low = jnp.take_along_axis(rows_ts, cur_v[:, None], axis=1)[:, 0]
+
+    store, overflow = pool.write(store, slot_ids, now, payloads, mask)
+    state = state._replace(
+        store=store,
+        now=now,
+        overflow_count=state.overflow_count + overflow.sum(),
+    )
+
+    if policy in ("dlrt", "slrt"):
+        ring, dropped = rt.push(
+            state.ring, retired_flat, retired_low, jnp.broadcast_to(now, retired_low.shape),
+            had_cur & ~overflow,  # overflowed lanes closed nothing
+        )
+        state = state._replace(
+            ring=ring, dropped_retires=state.dropped_retires + dropped.sum()
+        )
+    # ebr / sweep: nothing on the write path
+    return state, freed, overflow
+
+
+# ---------------------------------------------------------------------------
+# Reader path
+# ---------------------------------------------------------------------------
+def begin_snapshot(state: MVState, lanes: jax.Array, mask: jax.Array) -> Tuple[MVState, jax.Array]:
+    """Pin the current timestamp for the given reader lanes; returns their ts."""
+    board = ann.announce(state.board, lanes, state.now, mask)
+    return state._replace(board=board), jnp.broadcast_to(state.now, lanes.shape)
+
+
+def end_snapshot(state: MVState, lanes: jax.Array, mask: jax.Array) -> MVState:
+    return state._replace(board=ann.unannounce(state.board, lanes, mask))
+
+
+def snapshot_read(
+    state: MVState, slot_ids: jax.Array, t: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """rtx read: latest payload at-or-before t per slot (search(t))."""
+    return pool.read_at(state.store, slot_ids, t)
+
+
+def current_read(state: MVState, slot_ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    return pool.read_current(state.store, slot_ids)
+
+
+# ---------------------------------------------------------------------------
+# GC step
+# ---------------------------------------------------------------------------
+def gc_step(
+    state: MVState,
+    policy: str = "slrt",
+    force: bool = False,
+    flush_fraction: float = 0.5,
+) -> Tuple[MVState, jax.Array]:
+    """Run the policy's collection pass.  Returns (state', freed_payloads).
+
+    For RT policies the flush triggers when ring occupancy crosses
+    ``flush_fraction`` (or unconditionally when ``force``) — the batched
+    analogue of flushing every Θ(P log P) adds."""
+    assert policy in POLICIES, policy
+    S, V = state.store.ts.shape
+    if policy == "ebr":
+        bound = ann.oldest(state.board, state.now)
+        kill = (state.store.succ <= bound) & (state.store.ts != EMPTY)
+        freed = jnp.where(kill, state.store.payload, EMPTY).reshape(-1)
+        return state._replace(store=pool.free_entries(state.store, kill)), freed
+
+    if policy == "sweep":
+        A = ann.scan(state.board)
+        needed = needed_mask(state.store, A, state.now)
+        kill = ~needed & (state.store.ts != EMPTY)
+        freed = jnp.where(kill, state.store.payload, EMPTY).reshape(-1)
+        return state._replace(store=pool.free_entries(state.store, kill)), freed
+
+    if policy == "steam":
+        # steam does its work on the write path; the periodic GC step is a
+        # no-op (dusty corners live until the next append).  force=True is
+        # the engine's shutdown/pressure escape hatch: one full sweep.
+        if force:
+            return _sweep_all_needed(state)
+        return state, jnp.full((state.ring.capacity,), EMPTY, jnp.int32)
+
+    # dlrt / slrt
+    size = rt.ring_size(state.ring)
+    thresh = int(state.ring.capacity * flush_fraction)
+    do_flush = jnp.logical_or(size >= thresh, jnp.bool_(force))
+
+    B = state.ring.capacity
+
+    def _flush(st: MVState):
+        A = ann.scan(st.board)
+        # slots implicated by the ring content (the paper: the lists whose
+        # nodes the range tracker returned)
+        occ = st.ring.idx != EMPTY
+        touched = jnp.where(occ, st.ring.idx // V, 0)
+        ring, store, freed = rt.flush(st.ring, st.store, A, st.now)
+        st = st._replace(ring=ring, store=store)
+        if policy == "slrt":
+            # preemptive compaction of implicated slots (SSL compact): may
+            # free entries never returned by the tracker.  freed handles can
+            # repeat; payload recycling must be idempotent (bitmap set).
+            st, freed2 = _sweep_slots(st, touched, occ)
+            freed = jnp.concatenate([freed, freed2])
+        else:
+            freed = jnp.concatenate([freed, jnp.full((B * V,), EMPTY, jnp.int32)])
+        return st, freed
+
+    def _skip(st: MVState):
+        return st, jnp.full((B + B * V,), EMPTY, jnp.int32)
+
+    return jax.lax.cond(do_flush, _flush, _skip, state)
+
+
+def _sweep_all_needed(state: MVState) -> Tuple[MVState, jax.Array]:
+    A = ann.scan(state.board)
+    needed = needed_mask(state.store, A, state.now)
+    kill = ~needed & (state.store.ts != EMPTY)
+    freed = jnp.where(kill, state.store.payload, EMPTY).reshape(-1)
+    return state._replace(store=pool.free_entries(state.store, kill)), freed
+
+
+def _sweep_slots(
+    state: MVState, slot_ids: jax.Array, mask: jax.Array
+) -> Tuple[MVState, jax.Array]:
+    """needed-sweep restricted to the given slots (steam / slrt locality)."""
+    A = ann.scan(state.board)
+    rows_ts = state.store.ts[slot_ids]
+    rows_succ = state.store.succ[slot_ids]
+    needed = needed_intervals(rows_ts, rows_succ, A, state.now)
+    kill = ~needed & (rows_ts != EMPTY) & mask[:, None]
+    rows_pay = state.store.payload[slot_ids]
+    freed = jnp.where(kill, rows_pay, EMPTY).reshape(-1)
+    store = VersionStore(
+        ts=state.store.ts.at[slot_ids].set(
+            jnp.where(kill, EMPTY, rows_ts), mode="drop"
+        ),
+        succ=state.store.succ.at[slot_ids].set(
+            jnp.where(kill, TS_MAX, rows_succ), mode="drop"
+        ),
+        payload=state.store.payload.at[slot_ids].set(
+            jnp.where(kill, EMPTY, rows_pay), mode="drop"
+        ),
+    )
+    return state._replace(store=store), freed
+
+
+# ---------------------------------------------------------------------------
+# Monitoring
+# ---------------------------------------------------------------------------
+def live_versions(state: MVState) -> jax.Array:
+    return (state.store.ts != EMPTY).sum()
+
+
+def space_report(state: MVState) -> dict:
+    occ = pool.occupancy(state.store)
+    return {
+        "live_versions": int(live_versions(state)),
+        "max_slot_occupancy": int(occ.max()),
+        "ring_size": int(rt.ring_size(state.ring)),
+        "overflows": int(state.overflow_count),
+        "dropped_retires": int(state.dropped_retires),
+    }

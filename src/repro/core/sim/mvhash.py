@@ -1,0 +1,90 @@
+"""Multiversion hash table (paper §6.1).
+
+Separate chaining with **immutable** chains: insert/delete path-copy the
+bucket's chain (a sorted tuple of (key, value) pairs) and CAS the bucket's
+vCAS head to the new copy.  Load factor ~0.5 as in the paper.  Crucially, the
+values stored in versions are flat tuples — vCAS objects never point
+(indirectly) to other vCAS objects, which is what makes Steam behave well
+here and badly on the tree.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+from repro.core.sim.vcas import VCas
+
+
+class MVHashTable:
+    def __init__(self, env, scheme, expected_keys: int, load_factor: float = 0.5):
+        self.env = env
+        self.scheme = scheme
+        self.num_buckets = max(8, int(expected_keys / load_factor))
+        self.buckets: List[VCas] = [
+            VCas(env, scheme, ()) for _ in range(self.num_buckets)
+        ]
+
+    def _bucket(self, k: int) -> VCas:
+        # Fibonacci hashing: cheap, deterministic, well-spread for int keys.
+        h = (k * 11400714819323198485) & 0xFFFFFFFFFFFFFFFF
+        return self.buckets[h % self.num_buckets]
+
+    # -- update operations ---------------------------------------------------
+    def insert(self, pid: int, k: int, v: Any) -> bool:
+        """Upsert; returns True if the key was newly inserted."""
+        b = self._bucket(k)
+        while True:
+            head = b.head_node()
+            chain: Tuple = head.val
+            idx = _find(chain, k)
+            if idx >= 0:
+                new_chain = chain[:idx] + ((k, v),) + chain[idx + 1 :]
+                fresh = False
+            else:
+                new_chain = tuple(sorted(chain + ((k, v),)))
+                fresh = True
+            if b.cas_from_head(pid, head, new_chain):
+                return fresh
+
+    def delete(self, pid: int, k: int) -> bool:
+        b = self._bucket(k)
+        while True:
+            head = b.head_node()
+            chain: Tuple = head.val
+            idx = _find(chain, k)
+            if idx < 0:
+                return False
+            new_chain = chain[:idx] + chain[idx + 1 :]
+            if b.cas_from_head(pid, head, new_chain):
+                return True
+
+    # -- read operations -------------------------------------------------------
+    def lookup(self, pid: int, k: int) -> Optional[Any]:
+        chain = self._bucket(k).read()
+        idx = _find(chain, k)
+        return chain[idx][1] if idx >= 0 else None
+
+    def rtx_lookup(self, pid: int, k: int, t: float) -> Optional[Any]:
+        """Read key k in the snapshot at timestamp t (one key of an rtx)."""
+        chain = self._bucket(k).read_version(t)
+        idx = _find(chain, k)
+        return chain[idx][1] if idx >= 0 else None
+
+    def range_query(self, pid: int, lo: int, hi: int, t: float) -> List[Tuple]:
+        """Paper's hash-table rtx: check each individual key in [lo, hi)."""
+        out = []
+        for k in range(lo, hi):
+            v = self.rtx_lookup(pid, k, t)
+            if v is not None:
+                out.append((k, v))
+        return out
+
+    # -- space accounting --------------------------------------------------------
+    def root_vcas(self) -> List[VCas]:
+        return self.buckets
+
+
+def _find(chain: Tuple, k: int) -> int:
+    for i, (key, _) in enumerate(chain):
+        if key == k:
+            return i
+    return -1

@@ -1,0 +1,143 @@
+"""Multiversion external BST (paper §6.1's chromatic tree, simplified).
+
+Leaf-oriented BST whose child pointers are vCAS objects, so versions of a
+child pointer reference tree nodes that contain *other* vCAS objects — the
+indirection pattern ("vCAS objects do point indirectly to others") that makes
+Steam's dusty-corners problem cost up to 8x space on trees (paper §6.2).
+
+Simplification vs. the paper (recorded in DESIGN.md): the chromatic tree's
+lazy red-black rebalancing is dropped; with uniformly/zipf-drawn integer keys
+an unbalanced external BST has expected O(log n) depth, and rebalancing does
+not change the GC dynamics under study (it only adds more child-pointer
+writes, i.e. *more* versions — our variant is conservative for Steam).
+
+* insert(k): replace leaf l by internal(router, l, new-leaf) via one child
+  vCAS CAS — creates one internal + one leaf node.
+* delete(k): splice leaf + parent out by CAS'ing the grandparent's child
+  pointer to the sibling.
+* updates of an existing key's value replace the leaf node.
+* range rtx: snapshot traversal at timestamp t through child-pointer versions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, List, Optional, Tuple
+
+from repro.core.sim.vcas import VCas
+
+INF = math.inf
+
+
+class Leaf:
+    __slots__ = ("key", "val")
+    WORDS = 2
+
+    def __init__(self, key, val):
+        self.key = key
+        self.val = val
+
+
+class Internal:
+    __slots__ = ("router", "left_v", "right_v")
+    WORDS = 3
+
+    def __init__(self, env, scheme, router, left, right):
+        self.router = router          # keys < router go left; >= router go right
+        self.left_v = VCas(env, scheme, left)
+        self.right_v = VCas(env, scheme, right)
+
+
+class MVTree:
+    def __init__(self, env, scheme):
+        self.env = env
+        self.scheme = scheme
+        self.root_v = VCas(env, scheme, None)  # points at Leaf | Internal | None
+
+    # -- traversal helpers ----------------------------------------------------
+    def _descend(self, k: int):
+        """Return (grandparent_vcas, parent_vcas, leaf_or_none) at current time.
+        grandparent_vcas is the vCAS holding the parent Internal (or root_v)."""
+        g_v: Optional[VCas] = None
+        p_v: VCas = self.root_v
+        node = p_v.read()
+        while isinstance(node, Internal):
+            g_v = p_v
+            p_v = node.left_v if k < node.router else node.right_v
+            node = p_v.read()
+        return g_v, p_v, node
+
+    # -- updates ----------------------------------------------------------------
+    def insert(self, pid: int, k: int, v: Any) -> bool:
+        while True:
+            g_v, p_v, node = self._descend(k)
+            head = p_v.head_node()
+            if head.val is not node:
+                continue  # raced; retry with consistent head
+            if node is None:
+                if p_v.cas_from_head(pid, head, Leaf(k, v)):
+                    return True
+                continue
+            assert isinstance(node, Leaf)
+            if node.key == k:
+                if p_v.cas_from_head(pid, head, Leaf(k, v)):
+                    return False  # value update, not a fresh insert
+                continue
+            lo, hi = (node, Leaf(k, v)) if node.key < k else (Leaf(k, v), node)
+            internal = Internal(self.env, self.scheme, hi.key, lo, hi)
+            if p_v.cas_from_head(pid, head, internal):
+                return True
+
+    def delete(self, pid: int, k: int) -> bool:
+        while True:
+            g_v, p_v, node = self._descend(k)
+            if node is None or not isinstance(node, Leaf) or node.key != k:
+                return False
+            if g_v is None:
+                head = self.root_v.head_node()
+                if head.val is not node:
+                    continue
+                if self.root_v.cas_from_head(pid, head, None):
+                    return True
+                continue
+            parent = g_v.read()
+            if not isinstance(parent, Internal):
+                continue
+            # which side holds the leaf?
+            if p_v is parent.left_v:
+                sibling = parent.right_v.read()
+            elif p_v is parent.right_v:
+                sibling = parent.left_v.read()
+            else:
+                continue  # stale parent; retry
+            head = g_v.head_node()
+            if head.val is not parent:
+                continue
+            if g_v.cas_from_head(pid, head, sibling):
+                return True
+
+    # -- reads ---------------------------------------------------------------------
+    def lookup(self, pid: int, k: int) -> Optional[Any]:
+        _, _, node = self._descend(k)
+        return node.val if isinstance(node, Leaf) and node.key == k else None
+
+    def range_query(self, pid: int, lo: int, hi: int, t: float) -> List[Tuple]:
+        """Atomic range rtx at snapshot timestamp t (trees use the ordering)."""
+        out: List[Tuple] = []
+        self._collect(self.root_v.read_version(t), lo, hi, t, out)
+        return out
+
+    def _collect(self, node, lo, hi, t, out) -> None:
+        if node is None:
+            return
+        if isinstance(node, Leaf):
+            if lo <= node.key < hi:
+                out.append((node.key, node.val))
+            return
+        if lo < node.router:
+            self._collect(node.left_v.read_version(t), lo, hi, t, out)
+        if hi > node.router:
+            self._collect(node.right_v.read_version(t), lo, hi, t, out)
+
+    # -- space accounting -------------------------------------------------------------
+    def root_vcas(self) -> List[VCas]:
+        return [self.root_v]

@@ -1,0 +1,283 @@
+"""PDL — the paper's Practical Doubly-linked List (Algorithm 1), faithful.
+
+Two execution forms are provided:
+
+* **stepped** generators (``tryAppend_steps`` etc.) for the step-machine
+  scheduler: exactly one shared-memory access per ``yield``, transcribing the
+  pseudocode line-by-line.  Used by linearizability / invariant tests.
+* **direct** methods (``try_append`` etc.) that execute the same logic
+  atomically per call.  Used by the scheme-level benchmarks where operations
+  are interleaved at operation granularity by the discrete-event workload
+  driver; they additionally *account work* (number of shared accesses the
+  lock-free algorithm would perform) so throughput proxies stay faithful.
+
+Interface (paper §3): ``tryAppend(x, y)``, ``remove(x)``, ``peekHead()``,
+``search(key)``.  Preconditions (paper §4.1): ``y`` fresh; ``x`` read from
+``head``; keys nondecreasing; at most one ``remove`` per node, never on the
+sentinel, and only after ``tryAppend(x, *)`` returned true.
+"""
+from __future__ import annotations
+
+import math
+from typing import Generator, List, Optional
+
+from repro.core.sim.machine import cas
+
+
+class Node:
+    __slots__ = ("key", "val", "mark", "left", "right", "order", "_removed")
+
+    def __init__(self, key, val):
+        self.key = key
+        self.val = val
+        self.mark = False          # line 2: initially false
+        self.left: Optional[Node] = None
+        self.right: Optional[Node] = None
+        self.order = -1            # append rank; bookkeeping for invariants only
+        self._removed = False      # bookkeeping: remove() invoked
+
+    def __repr__(self):
+        return f"Node(key={self.key}, order={self.order})"
+
+    @property
+    def ts(self):
+        """Version lists use the timestamp as the sort key (paper §3)."""
+        return self.key
+
+
+class PDL:
+    """Doubly linked list; head points at the rightmost (newest) node."""
+
+    def __init__(self):
+        self.sentinel = Node(-math.inf, None)
+        self.sentinel.order = 0
+        self.head: Node = self.sentinel
+        # bookkeeping (not part of the algorithm): append order tracking for
+        # invariant checks and space accounting.
+        self.added: List[Node] = [self.sentinel]
+        self.appends = 0
+        self.removes_completed = 0
+        self.work = 0              # shared-access count for direct ops
+        self.remove_chain_total = 0   # sum of observed chain lengths c
+        self.remove_chain_max = 0
+
+    # ------------------------------------------------------------------
+    # bookkeeping helper: called at the linearization point of an append
+    def _record_add(self, y: Node) -> None:
+        y.order = len(self.added)
+        self.added.append(y)
+        self.appends += 1
+
+    # ------------------------------------------------------------------
+    # Stepped (generator) forms — one shared access per yield.
+    # ------------------------------------------------------------------
+    def peekHead_steps(self) -> Generator:
+        h = self.head                                   # line 6 (read head)
+        yield
+        return h.val
+
+    def readHead_steps(self) -> Generator:
+        """Atomic read of head returning the node (driver helper for vCAS use)."""
+        h = self.head
+        yield
+        return h
+
+    def search_steps(self, k) -> Generator:
+        x = self.head                                   # line 8
+        yield
+        while x.key > k:                                # line 9 (key immutable)
+            x = x.left                                  # line 10
+            yield
+        return x.val                                    # line 11
+
+    def tryAppend_steps(self, x: Node, y: Node) -> Generator:
+        w = x.left                                      # line 13
+        yield
+        if w is not None:                               # line 15: help tryAppend(w, x)
+            cas(w, "right", None, x)
+            yield
+        y.left = x                                      # line 16 (y is private until line 17)
+        yield
+        ok = cas(self, "head", x, y)                    # line 17
+        if ok:
+            self._record_add(y)
+        yield
+        if ok:
+            cas(x, "right", None, y)                    # line 18
+            yield
+            return True                                 # line 19
+        return False                                    # line 20
+
+    def remove_steps(self, x: Node) -> Generator:
+        x._removed = True
+        x.mark = True                                   # line 22 (plain write)
+        yield
+        left = x.left                                   # line 23
+        yield
+        right = x.right                                 # line 24
+        yield
+        chain = 0
+        while True:                                     # line 26
+            while True:                                 # line 27: while(left->marked)
+                m = left.mark
+                yield
+                if not m:
+                    break
+                left = left.left
+                chain += 1
+                yield
+            while True:                                 # line 28: while(right->marked)
+                m = right.mark
+                yield
+                if not m:
+                    break
+                right = right.right
+                chain += 1
+                yield
+            rightLeft = right.left                      # line 29
+            yield
+            leftRight = left.right                      # line 30
+            yield
+            m1 = left.mark                              # line 31 (two reads)
+            yield
+            m2 = right.mark
+            yield
+            if m1 or m2:
+                continue
+            ok = cas(right, "left", rightLeft, left)    # line 32
+            yield
+            if not ok:
+                continue
+            ok = cas(left, "right", leftRight, right)   # line 33
+            yield
+            if not ok:
+                continue
+            break                                       # line 34
+        self.removes_completed += 1
+        self.remove_chain_total += max(1, chain)
+        self.remove_chain_max = max(self.remove_chain_max, max(1, chain))
+        return None
+
+    # ------------------------------------------------------------------
+    # Direct forms (atomic per call, with work accounting).
+    # ------------------------------------------------------------------
+    def peek_head(self) -> Node:
+        self.work += 1
+        return self.head
+
+    def search(self, k):
+        x = self.head
+        self.work += 1
+        while x.key > k:
+            x = x.left
+            self.work += 1
+        return x.val
+
+    def search_node(self, k) -> Node:
+        x = self.head
+        self.work += 1
+        while x.key > k:
+            x = x.left
+            self.work += 1
+        return x
+
+    def try_append(self, x: Node, y: Node) -> bool:
+        self.work += 3
+        if x.left is not None:
+            cas(x.left, "right", None, x)
+        y.left = x
+        if cas(self, "head", x, y):
+            self._record_add(y)
+            cas(x, "right", None, y)
+            self.work += 2
+            return True
+        return False
+
+    def remove(self, x: Node) -> None:
+        """Direct remove; in atomic-per-call mode the CAS'es always succeed,
+        but we still walk past marked neighbours (concurrent removes that
+        were interleaved at operation granularity)."""
+        x._removed = True
+        x.mark = True
+        self.work += 3
+        left = x.left
+        right = x.right
+        chain = 0
+        while left.mark:
+            left = left.left
+            chain += 1
+            self.work += 1
+        while right.mark:
+            right = right.right
+            chain += 1
+            self.work += 1
+        right.left = left
+        left.right = right
+        self.work += 2
+        self.removes_completed += 1
+        self.remove_chain_total += max(1, chain)
+        self.remove_chain_max = max(self.remove_chain_max, max(1, chain))
+
+    # ------------------------------------------------------------------
+    # Abstract list & invariants (test instrumentation, not the algorithm).
+    # ------------------------------------------------------------------
+    def abstract_list(self) -> List[Node]:
+        """AL = nodes reachable from head via left pointers, oldest first."""
+        out = []
+        x = self.head
+        seen = set()
+        while x is not None:
+            assert id(x) not in seen, "cycle in left pointers!"
+            seen.add(id(x))
+            out.append(x)
+            x = x.left
+        return list(reversed(out))
+
+    def reachable_nodes(self) -> List[Node]:
+        """Non-sentinel nodes reachable via access pointers (left+right) from
+        head — the paper's reachability notion for the space bounds."""
+        seen = {}
+        stack = [self.head]
+        while stack:
+            n = stack.pop()
+            if n is None or id(n) in seen:
+                continue
+            seen[id(n)] = n
+            stack.append(n.left)
+            stack.append(n.right)
+        return [n for n in seen.values() if n is not self.sentinel]
+
+    def reachable_count(self) -> int:
+        return len(self.reachable_nodes())
+
+    def check_invariant2(self) -> None:
+        """Paper Invariant 2 (parts 1, 2, 4) at the current configuration."""
+        order = {id(n): n.order for n in self.added}
+        for y in self.added:
+            if y is self.sentinel:
+                assert y.left is None, "Invariant 2.4 violated: sentinel.left != null"
+                continue
+            if y.order < 0:
+                continue  # not yet added
+            lf = y.left
+            assert lf is not None and lf.order >= 0, "2.1: left not an added node"
+            assert lf.order < y.order, "2.1: y.left must be older than y"
+            for w in self.added[lf.order + 1 : y.order]:
+                assert w.mark, f"2.1: skipped node {w} not marked"
+            rt = y.right
+            if rt is not None:
+                assert rt.order >= 0 and rt.order > y.order, "2.2: right must be newer"
+                for w in self.added[y.order + 1 : rt.order]:
+                    assert w.mark, f"2.2: skipped node {w} not marked"
+
+    def check_al_sorted(self) -> None:
+        al = self.abstract_list()
+        assert al[0] is self.sentinel, "sentinel must stay at the left end"
+        for a, b in zip(al, al[1:]):
+            assert a.order < b.order, "AL must be ordered by append rank"
+            assert a.key <= b.key, "AL must be sorted by key"
+
+    def avg_remove_chain(self) -> float:
+        if self.removes_completed == 0:
+            return 1.0
+        return self.remove_chain_total / self.removes_completed

@@ -1,0 +1,473 @@
+"""The five MVGC schemes compared by the paper (§3, §6).
+
+=========  ==========  =====================  ===================================
+scheme     list        identifies obsolete    removes them by
+=========  ==========  =====================  ===================================
+EBR        SSL         epoch quiescence       truncating list tails (oldest suffix)
+STEAM+LF   SSL         compact on every       SSL.compact with cached AnnScan
+                       append                 (periodic-scan heuristic, §6.1)
+BBF+       PDL         RangeTracker           TreeDL-lite splice (deferred
+                                              internal nodes; emulation, see
+                                              DESIGN.md)
+DL-RT      PDL         RangeTracker           PDL.remove on the exact node
+SL-RT      SSL         RangeTracker           SSL.compact on the implicated list
+=========  ==========  =====================  ===================================
+
+All schemes run in the operation-atomic discrete-event harness
+(``workload.py``): updates/rtxs interleave at sub-operation granularity, which
+is what drives the space dynamics (long rtxs pinning timestamps/epochs while
+updates allocate versions).  Work units model the shared-memory accesses the
+lock-free algorithms would perform, so throughput proxies remain faithful;
+the fine-grained interleavings themselves are validated separately by the
+step-machine tests.
+
+Space model (paper: Java reachability): a version node costs ``NODE_WORDS``
+words (5 for PDL — key/val/left/right/mark; 3 for SSL — ts/val/left),
+matching the paper's observation that DL-RT pays for back pointers.
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.sim.pdl import PDL, Node
+from repro.core.sim.rangetracker import RangeTracker
+from repro.core.sim.ssl_list import SSL, SNode, MVEnv
+
+PDL_NODE_WORDS = 5  # key, val, left, right, mark
+SSL_NODE_WORDS = 3  # ts, val, left
+
+
+class SchemeBase:
+    """Common interface used by vCAS objects and the workload driver."""
+
+    name = "base"
+    node_words = SSL_NODE_WORDS
+
+    def __init__(self, env: MVEnv):
+        self.env = env
+        self.work = 0           # scheme-only overhead (list work is in lst.work)
+        self.gc_list_work = 0   # list work performed on behalf of GC (reporting)
+        self.lists: List[Any] = []
+
+    # -- list/node factories ----------------------------------------------
+    def new_list(self):
+        raise NotImplementedError
+
+    def new_node(self, ts, val):
+        raise NotImplementedError
+
+    def register_list(self, lst) -> None:
+        self.lists.append(lst)
+
+    # -- operation lifecycle -----------------------------------------------
+    def begin_update(self, pid: int) -> Any:
+        return None
+
+    def end_update(self, pid: int, ctx: Any) -> None:
+        pass
+
+    def begin_rtx(self, pid: int) -> float:
+        """Announce and return the rtx timestamp."""
+        ts = self.env.announce_ts(pid)
+        self.work += 2
+        return ts
+
+    def end_rtx(self, pid: int) -> None:
+        self.env.unannounce(pid)
+        self.work += 1
+
+    # -- the GC hook ---------------------------------------------------------
+    def on_overwrite(self, pid: int, lst, old_node, low: float, high: float) -> None:
+        raise NotImplementedError
+
+    def quiesce(self) -> None:
+        """Drain deferred reclamation at workload quiescence."""
+        pass
+
+    # -- accounting ----------------------------------------------------------
+    def aux_space_words(self) -> int:
+        """Words held by GC metadata (RT buffers, EBR buckets, ...)."""
+        return 0
+
+    def stats(self) -> Dict[str, Any]:
+        return {"gc_work": self.work}
+
+    def _announced(self) -> List[float]:
+        self.work += self.env.P
+        return [a for a in self.env.announce if a is not None]
+
+
+# ---------------------------------------------------------------------------
+# EBR
+# ---------------------------------------------------------------------------
+class EBRScheme(SchemeBase):
+    """Epoch-based MVGC (paper §2): versions overwritten before the previous
+    epoch are reclaimed; only list *tails* are ever truncated, so obsolete
+    versions in the middle of a list are never collected."""
+
+    name = "ebr"
+    node_words = SSL_NODE_WORDS
+
+    def __init__(self, env: MVEnv, advance_every: int = 64):
+        super().__init__(env)
+        self.epoch = 0
+        self.ann_epoch: List[Optional[int]] = [None] * env.P
+        self.buckets: Dict[int, List[Tuple[SSL, SNode]]] = defaultdict(list)
+        self.advance_every = advance_every
+        self._ops_since_advance = 0
+        self.freed = 0
+
+    def new_list(self):
+        return SSL()
+
+    def new_node(self, ts, val):
+        return SNode(ts, val)
+
+    # every operation (update or rtx) participates in the epoch protocol
+    def begin_update(self, pid: int):
+        self.ann_epoch[pid] = self.epoch
+        self.work += 2
+        return None
+
+    def end_update(self, pid: int, ctx) -> None:
+        self.ann_epoch[pid] = None
+        self.work += 1
+        self._maybe_advance()
+
+    def begin_rtx(self, pid: int) -> float:
+        self.ann_epoch[pid] = self.epoch
+        ts = self.env.announce_ts(pid)  # rtx still needs its read timestamp
+        self.work += 3
+        return ts
+
+    def end_rtx(self, pid: int) -> None:
+        self.ann_epoch[pid] = None
+        self.env.unannounce(pid)
+        self.work += 2
+        self._maybe_advance()
+
+    def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        self.buckets[self.epoch].append((lst, old_node))
+        self.work += 1
+
+    def _maybe_advance(self) -> None:
+        self._ops_since_advance += 1
+        if self._ops_since_advance < self.advance_every:
+            return
+        self._ops_since_advance = 0
+        self.work += self.env.P  # scan announcement epochs
+        cur = self.epoch
+        if all(e is None or e >= cur for e in self.ann_epoch):
+            self.epoch = cur + 1
+            self._free_old()
+
+    def _free_old(self) -> None:
+        safe = self.epoch - 2
+        for e in sorted(e for e in self.buckets if e <= safe):
+            by_list: Dict[int, Tuple[SSL, SNode]] = {}
+            for lst, node in self.buckets.pop(e):
+                self.freed += 1
+                key = id(lst)
+                prev = by_list.get(key)
+                # newest reclaimable version per list wins (append rank ties ts)
+                if prev is None or node.order > prev[1].order:
+                    by_list[key] = (lst, node)
+                self.work += 1
+            for lst, node in by_list.values():
+                self._truncate(lst, node)
+
+    def _truncate(self, lst: SSL, node: SNode) -> None:
+        """Drop the list suffix ending at ``node`` (the newest reclaimable
+        version of this list; the reclaimable set is always a suffix because
+        overwrite epochs are nondecreasing along a list)."""
+        x = lst.head
+        self.work += 1
+        while x is not lst.sentinel and x.left is not node:
+            x = x.left
+            self.work += 1
+        if x is not lst.sentinel:
+            x.left = lst.sentinel
+            self.work += 1
+
+    def quiesce(self) -> None:
+        # advance epochs with no active ops until everything frees
+        for _ in range(4):
+            self.epoch += 1
+            self._free_old()
+
+    def aux_space_words(self) -> int:
+        return sum(len(b) for b in self.buckets.values())
+
+    def stats(self):
+        return {"gc_work": self.work, "epoch": self.epoch, "freed": self.freed}
+
+
+# ---------------------------------------------------------------------------
+# STEAM+LF
+# ---------------------------------------------------------------------------
+class SteamLFScheme(SchemeBase):
+    """Lock-free Steam (paper's STEAM+LF): compact a version list on every
+    append to it, using a cached announcement scan refreshed every
+    ``scan_every`` GC events (the paper's 1 ms heuristic, §6.1; this trades
+    the O(P) per-list bound for speed, exactly as the paper describes)."""
+
+    name = "steam"
+    node_words = SSL_NODE_WORDS
+
+    def __init__(self, env: MVEnv, scan_every: int = 64):
+        super().__init__(env)
+        self.scan_every = scan_every
+        self._since_scan = scan_every  # force scan on first use
+        self._cached = None
+        self.compactions = 0
+        self.spliced = 0
+
+    def new_list(self):
+        return SSL()
+
+    def new_node(self, ts, val):
+        return SNode(ts, val)
+
+    def _scan(self):
+        self._since_scan += 1
+        if self._cached is None or self._since_scan >= self.scan_every:
+            self._cached = self.env.scan_announce()
+            self.work += self.env.P + 2
+            self._since_scan = 0
+        return self._cached
+
+    def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        scan = self._scan()
+        h = lst.peek_head()
+        w0 = lst.work
+        self.spliced += lst.compact(scan.A, scan.t, h)
+        self.gc_list_work += lst.work - w0
+        self.compactions += 1
+
+    def quiesce(self) -> None:
+        scan = self.env.scan_announce()
+        for lst in self.lists:
+            self.spliced += lst.compact(scan.A, scan.t, lst.peek_head())
+
+    def stats(self):
+        return {
+            "gc_work": self.work,
+            "compactions": self.compactions,
+            "spliced": self.spliced,
+        }
+
+
+# ---------------------------------------------------------------------------
+# RangeTracker-based schemes
+# ---------------------------------------------------------------------------
+class _RTScheme(SchemeBase):
+    def __init__(self, env: MVEnv, batch_size: Optional[int] = None):
+        super().__init__(env)
+        self.rt = RangeTracker(env.P, batch_size=batch_size)
+        self.reclaimed = 0
+
+    def aux_space_words(self) -> int:
+        return 3 * self.rt.size()  # payload, low, high
+
+    def _rt_add(self, pid, payload, low, high) -> List[Any]:
+        w0 = self.rt.work
+        out = self.rt.add(pid, payload, low, high, self._announced_nowork)
+        self.work += self.rt.work - w0
+        return out
+
+    def _announced_nowork(self) -> List[float]:
+        return [a for a in self.env.announce if a is not None]
+
+    def stats(self):
+        return {
+            "gc_work": self.work,
+            "reclaimed": self.reclaimed,
+            "rt_size": self.rt.size(),
+            "rt_flushes": self.rt.flushes,
+        }
+
+
+class DLRTScheme(_RTScheme):
+    """DL-RT: RangeTracker identifies the exact obsolete node; PDL.remove
+    splices it out given only the node pointer (paper §3, §4)."""
+
+    name = "dlrt"
+    node_words = PDL_NODE_WORDS
+
+    def new_list(self):
+        return PDL()
+
+    def new_node(self, ts, val):
+        return Node(ts, val)
+
+    def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        for plst, pnode in self._rt_add(pid, (lst, old_node), low, high):
+            w0 = plst.work
+            plst.remove(pnode)
+            self.gc_list_work += plst.work - w0
+            self.reclaimed += 1
+
+    def quiesce(self) -> None:
+        for plst, pnode in self.rt.drain(self._announced_nowork):
+            plst.remove(pnode)
+            self.reclaimed += 1
+
+    def avg_chain(self) -> float:
+        tot = sum(l.remove_chain_total for l in self.lists)
+        cnt = sum(l.removes_completed for l in self.lists)
+        return tot / cnt if cnt else 1.0
+
+    def stats(self):
+        s = super().stats()
+        s["avg_remove_chain_c"] = round(self.avg_chain(), 4)
+        return s
+
+
+class SLRTScheme(_RTScheme):
+    """SL-RT: RangeTracker identifies obsolete versions; the implicated lists
+    are compacted with SSL.compact (paper §3, §5).  Compacting preemptively
+    splices *all* currently-unneeded versions of those lists, not just the
+    returned ones — the paper credits this for SL-RT's space advantage."""
+
+    name = "slrt"
+    node_words = SSL_NODE_WORDS
+
+    def new_list(self):
+        return SSL()
+
+    def new_node(self, ts, val):
+        return SNode(ts, val)
+
+    def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        returned = self._rt_add(pid, (lst, old_node), low, high)
+        self._compact_lists(returned)
+
+    def _compact_lists(self, returned) -> None:
+        unique: Dict[int, SSL] = {}
+        for plst, _ in returned:
+            unique[id(plst)] = plst
+        if not unique:
+            return
+        # one GlobalAnnScan per flush batch (paper §5: compact takes its
+        # (A, t) from the shared AnnScan object, re-reading only head per list)
+        scan = self.env.scan_announce()
+        self.work += self.env.P + 2
+        for plst in unique.values():
+            h = plst.peek_head()
+            w0 = plst.work
+            self.reclaimed += plst.compact(scan.A, scan.t, h)
+            self.gc_list_work += plst.work - w0
+
+    def quiesce(self) -> None:
+        self._compact_lists(self.rt.drain(self._announced_nowork))
+
+
+class BBFScheme(_RTScheme):
+    """BBF+ emulation: RangeTracker + TreeDL-lite.
+
+    TreeDL lays an implicit binary tree over the list; only nodes whose
+    implicit subtree is otherwise empty can be spliced, so obsolete internal
+    nodes wait for their subtrees (the paper's 2(L-R) + O(P log Lmax) space
+    bound, vs. L-R+P for PDL/SSL).  We emulate exactly that deferral rule on
+    top of PDL splicing, plus a constant helping-overhead factor per removal;
+    see DESIGN.md §2 for the emulation rationale."""
+
+    name = "bbf"
+    node_words = PDL_NODE_WORDS + 2  # TreeDL carries extra per-node tree state
+    TREEDL_OVERHEAD = 6              # helping/consistency steps per splice
+
+    def __init__(self, env: MVEnv, batch_size: Optional[int] = None):
+        super().__init__(env, batch_size)
+        # per-list: rank -> pending node; set of spliced ranks
+        self.pending: Dict[int, Dict[int, Tuple[PDL, Node]]] = defaultdict(dict)
+        self.spliced_ranks: Dict[int, set] = defaultdict(set)
+
+    def new_list(self):
+        return PDL()
+
+    def new_node(self, ts, val):
+        return Node(ts, val)
+
+    @staticmethod
+    def _height(rank: int) -> int:
+        """In-order complete-BST height of a 1-indexed position: number of
+        trailing zero bits (odd ranks are leaves)."""
+        if rank <= 0:
+            return 0
+        h = 0
+        while rank % 2 == 0:
+            rank //= 2
+            h += 1
+        return h
+
+    def _removable(self, lid: int, lst: PDL, rank: int) -> bool:
+        h = self._height(rank)
+        if h == 0:
+            return True
+        lo, hi = rank - (1 << h) + 1, rank + (1 << h) - 1
+        done = self.spliced_ranks[lid]
+        self.work += 1 + (hi - lo) // 2
+        for r in range(lo, hi + 1):
+            if r == rank or r > lst.appends:  # own rank / not yet appended
+                continue
+            if r not in done:                 # any live occupant blocks removal
+                return False
+        return True
+
+    def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        for plst, pnode in self._rt_add(pid, (lst, old_node), low, high):
+            self._try_splice(plst, pnode)
+
+    def _try_splice(self, lst: PDL, node: Node) -> None:
+        lid = id(lst)
+        self.pending[lid][node.order] = (lst, node)
+        # repeatedly splice any pending node whose constraint is satisfied
+        progress = True
+        while progress:
+            progress = False
+            for rank in sorted(self.pending[lid]):
+                plst, pnode = self.pending[lid][rank]
+                # height check must ignore the node's own pending entry
+                del self.pending[lid][rank]
+                if self._removable(lid, plst, rank):
+                    w0 = plst.work
+                    plst.remove(pnode)
+                    self.gc_list_work += plst.work - w0
+                    self.work += self.TREEDL_OVERHEAD
+                    self.spliced_ranks[lid].add(rank)
+                    self.reclaimed += 1
+                    progress = True
+                else:
+                    self.pending[lid][rank] = (plst, pnode)
+
+    def quiesce(self) -> None:
+        for plst, pnode in self.rt.drain(self._announced_nowork):
+            self._try_splice(plst, pnode)
+        # final pass: splice everything still pending (system quiescent)
+        for lid in list(self.pending):
+            for rank in sorted(self.pending[lid]):
+                plst, pnode = self.pending[lid][rank]
+                plst.remove(pnode)
+                self.spliced_ranks[lid].add(rank)
+                self.reclaimed += 1
+            self.pending[lid] = {}
+
+    def aux_space_words(self) -> int:
+        return super().aux_space_words() + 2 * sum(
+            len(p) for p in self.pending.values()
+        )
+
+
+SCHEMES: Dict[str, Callable[..., SchemeBase]] = {
+    "ebr": EBRScheme,
+    "steam": SteamLFScheme,
+    "dlrt": DLRTScheme,
+    "slrt": SLRTScheme,
+    "bbf": BBFScheme,
+}
+
+
+def make_scheme(name: str, env: MVEnv, **kw) -> SchemeBase:
+    return SCHEMES[name](env, **kw)

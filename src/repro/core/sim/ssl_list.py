@@ -1,0 +1,282 @@
+"""SSL — the paper's Simple Singly-linked List with compaction (Algorithm 3).
+
+Faithful transcription including the ``scanAnnounce`` / ``GlobalAnnScan``
+protocol that makes concurrently-taken ``(A, t)`` snapshots mutually
+consistent (paper §5, Lemma 11), and the ``needed(A, t)`` predicate used by
+``compact``:
+
+    a node x is needed(A, t) iff
+      (1) x.ts > t, or
+      (2) x is the last appended node with timestamp <= t, or
+      (3) for some A[i], x is the last appended node with ts <= A[i].
+
+Stepped generator forms (one shared access per yield) drive the
+linearizability / Proposition 17 tests; direct forms drive the scheme-level
+benchmarks with work accounting.
+"""
+from __future__ import annotations
+
+import math
+from typing import Generator, List, Optional
+
+from repro.core.sim.machine import cas
+
+NEG_INF = -math.inf
+
+
+class SNode:
+    __slots__ = ("ts", "val", "left", "order")
+
+    def __init__(self, ts, val):
+        self.ts = ts
+        self.val = val
+        self.left: Optional["SNode"] = None
+        self.order = -1  # append rank (instrumentation only)
+
+    def __repr__(self):
+        return f"SNode(ts={self.ts}, order={self.order})"
+
+
+class AnnScan:
+    __slots__ = ("A", "t")
+
+    def __init__(self, A: List[float], t: float):
+        self.A = A  # sorted announcement snapshot
+        self.t = t  # global timestamp read *before* A was collected
+
+
+class MVEnv:
+    """Shared multiversioning environment: global timestamp, announcement
+    array, and the GlobalAnnScan variable of Algorithm 3."""
+
+    def __init__(self, num_procs: int):
+        self.P = num_procs
+        self.global_ts: int = 0
+        self.announce: List[Optional[float]] = [None] * num_procs
+        self.global_ann_scan = AnnScan([], -1)
+
+    # -- timestamp management (paper §6.1 backoff counter, simplified) ----
+    def advance_ts(self) -> int:
+        self.global_ts += 1
+        return self.global_ts
+
+    def read_ts(self) -> int:
+        return self.global_ts
+
+    # -- rtx announcement (appendix B.2 lock-free scheme, direct form) ----
+    def announce_ts(self, pid: int) -> int:
+        while True:
+            t = self.global_ts                     # A1
+            self.announce[pid] = t                 # A2
+            if self.global_ts == t:                # A3 (validate)
+                return t
+
+    def unannounce(self, pid: int) -> None:
+        self.announce[pid] = None
+
+    # -- scanAnnounce, direct form (lines 3-10) ----------------------------
+    def scan_announce(self) -> AnnScan:
+        for _ in range(2):                         # line 5: repeat twice
+            old = self.global_ann_scan             # line 6
+            t = self.global_ts                     # line 7
+            A = sorted(a for a in self.announce if a is not None)  # line 8
+            new = AnnScan(A, t)
+            if cas(self, "global_ann_scan", old, new):  # line 9
+                return new
+        return self.global_ann_scan                # line 10
+
+    # -- scanAnnounce, stepped form ----------------------------------------
+    def scan_announce_steps(self) -> Generator:
+        for _ in range(2):
+            old = self.global_ann_scan             # line 6
+            yield
+            t = self.global_ts                     # line 7
+            yield
+            vals = []
+            for i in range(self.P):                # line 8: one read per step
+                vals.append(self.announce[i])
+                yield
+            new = AnnScan(sorted(v for v in vals if v is not None), t)
+            ok = cas(self, "global_ann_scan", old, new)  # line 9
+            yield
+            if ok:
+                return new
+        scan = self.global_ann_scan                # line 10
+        yield
+        return scan
+
+
+class SSL:
+    """Singly-linked version list with wait-free compact (Algorithm 3)."""
+
+    def __init__(self):
+        self.sentinel = SNode(NEG_INF, None)
+        self.sentinel.order = 0
+        self.head: SNode = self.sentinel
+        self.added: List[SNode] = [self.sentinel]
+        self.appends = 0
+        self.work = 0
+
+    def _record_add(self, y: SNode) -> None:
+        y.order = len(self.added)
+        self.added.append(y)
+        self.appends += 1
+
+    # ------------------------------------------------------------------
+    # Stepped forms.
+    # ------------------------------------------------------------------
+    def tryAppend_steps(self, x: SNode, y: SNode) -> Generator:
+        y.left = x                                  # line 33 (y private)
+        yield
+        ok = cas(self, "head", x, y)                # line 34
+        if ok:
+            self._record_add(y)
+        yield
+        return ok
+
+    def readHead_steps(self) -> Generator:
+        h = self.head
+        yield
+        return h
+
+    def search_steps(self, k) -> Generator:
+        x = self.head                               # line 36
+        yield
+        while x.ts > k:                             # line 37 (ts immutable)
+            x = x.left                              # line 38
+            yield
+        return x.val                                # line 39
+
+    def compact_steps(self, A: List[float], t: float, h: SNode) -> Generator:
+        """Lines 11-31.  ``A`` must be sorted ascending; ``h`` read from head
+        together with (A, t) per the snapshot discipline of §5."""
+        A = [-1.0] + list(A)                        # line 12: padding
+        i = len(A) - 1                              # line 13
+        cur = h                                     # line 14
+        while cur is not self.sentinel:             # line 15
+            nxt = cur.left                          # line 16
+            yield
+            if cur.ts > t:                          # line 18
+                cur = nxt                           # line 19
+            else:
+                while A[i] >= cur.ts:               # line 21
+                    i -= 1
+                if A[i] >= nxt.ts:                  # line 22: next is needed
+                    cur = nxt                       # line 23
+                else:                               # line 24: next not needed
+                    newNext = nxt.left              # line 25
+                    yield
+                    while A[i] < newNext.ts:        # line 26
+                        newNext = newNext.left      # line 27
+                        yield
+                    while True:                     # line 28
+                        ok = cas(cur, "left", nxt, newNext)
+                        yield
+                        if ok:
+                            break
+                        nxt = cur.left              # line 29
+                        yield
+                        if nxt.ts <= newNext.ts:    # line 30
+                            break
+                    cur = cur.left                  # line 31
+                    yield
+        return None
+
+    # ------------------------------------------------------------------
+    # Direct forms (atomic per call, work-accounted).
+    # ------------------------------------------------------------------
+    def peek_head(self) -> SNode:
+        self.work += 1
+        return self.head
+
+    def try_append(self, x: SNode, y: SNode) -> bool:
+        self.work += 2
+        y.left = x
+        if cas(self, "head", x, y):
+            self._record_add(y)
+            return True
+        return False
+
+    def search(self, k):
+        x = self.head
+        self.work += 1
+        while x.ts > k:
+            x = x.left
+            self.work += 1
+        return x.val
+
+    def compact(self, A: List[float], t: float, h: SNode) -> int:
+        """Direct single-threaded compact.  Returns #nodes spliced out."""
+        A = [-1.0] + list(A)
+        i = len(A) - 1
+        cur = h
+        spliced = 0
+        self.work += 1
+        while cur is not self.sentinel:
+            nxt = cur.left
+            self.work += 1
+            if cur.ts > t:
+                cur = nxt
+            else:
+                while A[i] >= cur.ts:
+                    i -= 1
+                    self.work += 1
+                if A[i] >= nxt.ts:
+                    cur = nxt
+                else:
+                    newNext = nxt.left
+                    self.work += 1
+                    while A[i] < newNext.ts:
+                        newNext = newNext.left
+                        self.work += 1
+                    # count reachable nodes being spliced: hops nxt -> newNext
+                    n = nxt
+                    while n is not newNext:
+                        spliced += 1
+                        n = n.left
+                    cur.left = newNext
+                    self.work += 1
+                    cur = cur.left
+        return spliced
+
+    # ------------------------------------------------------------------
+    # Instrumentation.
+    # ------------------------------------------------------------------
+    def abstract_list(self) -> List[SNode]:
+        out = []
+        x = self.head
+        seen = set()
+        while x is not None:
+            assert id(x) not in seen, "cycle in left pointers!"
+            seen.add(id(x))
+            out.append(x)
+            x = x.left
+        return list(reversed(out))
+
+    def reachable_count(self) -> int:
+        return len(self.abstract_list()) - 1  # excl. sentinel
+
+    def reachable_nodes(self) -> List[SNode]:
+        return [n for n in self.abstract_list() if n is not self.sentinel]
+
+    def needed(self, x: SNode, A: List[float], t: float) -> bool:
+        """Reference needed(A, t) predicate over the *full appended history*."""
+        if x.ts > t:
+            return True
+        if self._is_last_leq(x, t):
+            return True
+        return any(self._is_last_leq(x, a) for a in A)
+
+    def _is_last_leq(self, x: SNode, bound: float) -> bool:
+        if x.ts > bound:
+            return False
+        for y in self.added[x.order + 1 :]:
+            if y.ts <= bound:
+                return False
+        return True
+
+    def check_sorted(self) -> None:
+        al = self.abstract_list()
+        assert al[0] is self.sentinel
+        for a, b in zip(al, al[1:]):
+            assert a.order < b.order and a.ts <= b.ts

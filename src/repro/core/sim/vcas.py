@@ -1,0 +1,64 @@
+"""Versioned CAS objects (Wei et al. [53]) backed by PDL or SSL version lists.
+
+A vCAS object is a CAS object that additionally supports reading older values
+given a timestamp.  ``cas(old, new)`` peeks the head version, validates the
+value, and tryAppends a new version stamped with the current global
+timestamp; on success the overwritten version (interval ``[old.ts, new.ts)``)
+is handed to the active MVGC scheme.  ``read_version(t)`` is the rtx read
+path: the latest version with ``ts <= t``.
+
+Per the recorded-once optimization (paper §6.1) a real implementation inlines
+the head version into the object; here the head pointer *is* the list head,
+which models the same single-indirection layout.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.sim.pdl import PDL, Node
+from repro.core.sim.ssl_list import SSL, SNode, MVEnv
+
+
+class VCas:
+    __slots__ = ("env", "scheme", "lst")
+
+    def __init__(self, env: MVEnv, scheme, init_val: Any, init_ts: float = 0.0):
+        self.env = env
+        self.scheme = scheme
+        self.lst = scheme.new_list()
+        scheme.register_list(self.lst)
+        node = scheme.new_node(init_ts, init_val)
+        ok = self.lst.try_append(self.lst.head, node)
+        assert ok
+
+    # -- current-value ops -------------------------------------------------
+    def read(self) -> Any:
+        return self.lst.peek_head().val
+
+    def head_node(self):
+        return self.lst.peek_head()
+
+    def read_version(self, t: float) -> Any:
+        """rtx read: latest value whose version timestamp is <= t."""
+        return self.lst.search(t)
+
+    def cas(self, pid: int, old: Any, new: Any) -> bool:
+        h = self.lst.peek_head()
+        if h.val is not old and h.val != old:
+            return False
+        ts = max(self.env.read_ts(), h.ts)
+        node = self.scheme.new_node(ts, new)
+        if self.lst.try_append(h, node):
+            # h is never the sentinel (ctor installs an initial version)
+            self.scheme.on_overwrite(pid, self.lst, h, low=h.ts, high=ts)
+            return True
+        return False
+
+    def cas_from_head(self, pid: int, h, new: Any) -> bool:
+        """CAS given an already-peeked head node (saves the re-peek)."""
+        ts = max(self.env.read_ts(), h.ts)
+        node = self.scheme.new_node(ts, new)
+        if self.lst.try_append(h, node):
+            self.scheme.on_overwrite(pid, self.lst, h, low=h.ts, high=ts)
+            return True
+        return False

@@ -1,0 +1,299 @@
+"""Discrete-event workload driver for the MVGC scheme comparison (paper §6).
+
+Reproduces the paper's benchmark methodology on this container's single core:
+P logical processes execute a mix of updates (insert/delete, equal numbers),
+lookups and read-only transactions (range queries of size s) against one of
+the two multiversion data structures, with keys drawn uniformly or Zipfian
+(0.99, the YCSB default).  Processes interleave at *sub-operation* slices —
+an rtx spans many slices, pinning its timestamp/epoch while updates create
+versions — which is exactly the dynamic that differentiates the schemes'
+space behaviour.
+
+Measurements:
+* **space**: words reachable from the data structure roots (Java GC model —
+  version nodes at the scheme's per-node cost, chain cells, tree nodes
+  reachable through old child-pointer versions, GC metadata).  Peak + final.
+* **throughput proxy**: completed ops per million *work units*, where work
+  units count the shared-memory accesses the lock-free algorithms would
+  execute (list traversals, compactions, RT flushes, announcement scans).
+  Wall-clock threading is meaningless on a single hyperthread; relative work
+  is the faithful signal and reproduces the paper's qualitative ordering.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, Generator, List, Optional
+
+import numpy as np
+
+from repro.core.sim.mvhash import MVHashTable
+from repro.core.sim.mvtree import MVTree, Leaf, Internal
+from repro.core.sim.schemes import SchemeBase, make_scheme
+from repro.core.sim.ssl_list import MVEnv
+
+
+# ---------------------------------------------------------------------------
+# Space accounting (Java reachability model)
+# ---------------------------------------------------------------------------
+def measure_space(ds, scheme: SchemeBase) -> Dict[str, int]:
+    words = 0
+    versions = 0
+    lists_seen = 0
+    seen_vcas, seen_obj = set(), set()
+    stack = list(ds.root_vcas())
+    while stack:
+        vc = stack.pop()
+        if id(vc) in seen_vcas:
+            continue
+        seen_vcas.add(id(vc))
+        lists_seen += 1
+        words += 2  # the vCAS head cell + header
+        for n in vc.lst.reachable_nodes():
+            versions += 1
+            words += scheme.node_words
+            words += _payload_words(n.val, stack, seen_obj)
+    words += scheme.aux_space_words()
+    return {
+        "words": words,
+        "versions": versions,
+        "lists": lists_seen,
+        "versions_per_list": versions / max(1, lists_seen),
+    }
+
+
+def _payload_words(val, stack, seen_obj) -> int:
+    if val is None:
+        return 0
+    if isinstance(val, tuple):  # hash chain (path-copied, immutable)
+        return 1 + 2 * len(val)
+    if isinstance(val, Leaf):
+        if id(val) in seen_obj:
+            return 0
+        seen_obj.add(id(val))
+        return Leaf.WORDS
+    if isinstance(val, Internal):
+        if id(val) in seen_obj:
+            return 0
+        seen_obj.add(id(val))
+        stack.append(val.left_v)
+        stack.append(val.right_v)
+        return Internal.WORDS
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Key samplers
+# ---------------------------------------------------------------------------
+class KeySampler:
+    def __init__(self, key_range: int, zipf: float, seed: int):
+        self.key_range = key_range
+        self.rng = np.random.default_rng(seed)
+        if zipf and zipf > 0:
+            ranks = np.arange(1, key_range + 1, dtype=np.float64)
+            p = 1.0 / ranks**zipf
+            p /= p.sum()
+            # shuffle so hot keys are spread across the key space
+            perm = self.rng.permutation(key_range)
+            self.p = p[perm]
+        else:
+            self.p = None
+        self._buf: List[int] = []
+
+    def __call__(self) -> int:
+        if not self._buf:
+            if self.p is None:
+                self._buf = list(self.rng.integers(1, self.key_range + 1, 4096))
+            else:
+                self._buf = list(
+                    self.rng.choice(self.key_range, size=4096, p=self.p) + 1
+                )
+        return int(self._buf.pop())
+
+
+# ---------------------------------------------------------------------------
+# Workload configuration
+# ---------------------------------------------------------------------------
+@dataclass
+class WorkloadConfig:
+    ds: str = "hash"                  # 'hash' | 'tree'
+    scheme: str = "slrt"              # ebr | steam | dlrt | slrt | bbf
+    n_keys: int = 1024
+    num_procs: int = 24
+    mode: str = "split"               # 'split' (Figs 4-6) | 'mixed' (Figs 7-8)
+    # split mode: procs divided update / fixed-rtx / variable-rtx (paper ratio)
+    rtx_size: int = 16
+    variable_rtx_max: Optional[int] = None   # default: n_keys
+    # mixed mode fractions (paper: 50% updates, 49% lookups, 1% rtx of 1024)
+    mixed_update_frac: float = 0.5
+    mixed_lookup_frac: float = 0.49
+    mixed_rtx_size: int = 256
+    ops_per_proc: int = 200
+    zipf: float = 0.99                # 0 => uniform
+    seed: int = 0
+    rtx_chunk: int = 8                # keys per rtx slice
+    sample_every: int = 256           # slices between space samples
+    scheme_kwargs: Dict[str, Any] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Process scripts (generators; one yield per slice)
+# ---------------------------------------------------------------------------
+def _do_update(pid, ds, env, scheme, sampler, rng, counters):
+    ctx = scheme.begin_update(pid)
+    env.advance_ts()
+    k = sampler()
+    if rng.random() < 0.5:
+        ds.insert(pid, k, rng.randrange(1 << 30))
+    else:
+        ds.delete(pid, k)
+    scheme.end_update(pid, ctx)
+    counters["updates"] += 1
+
+
+def _rtx_slices(pid, ds, env, scheme, rng, size, key_range, chunk, counters):
+    t = scheme.begin_rtx(pid)
+    a = rng.randrange(1, max(2, key_range - size + 1))
+    done = 0
+    while done < size:
+        c = min(chunk, size - done)
+        ds.range_query(pid, a + done, a + done + c, t)
+        done += c
+        yield
+    scheme.end_rtx(pid)
+    counters["rtx"] += 1
+    counters["rtx_keys"] += size
+
+
+def update_script(pid, ds, env, scheme, sampler, rng, n_ops, counters) -> Generator:
+    for _ in range(n_ops):
+        _do_update(pid, ds, env, scheme, sampler, rng, counters)
+        yield
+
+
+def rtx_script(
+    pid, ds, env, scheme, rng, n_ops, size_fn, key_range, chunk, counters
+) -> Generator:
+    for _ in range(n_ops):
+        yield from _rtx_slices(
+            pid, ds, env, scheme, rng, size_fn(), key_range, chunk, counters
+        )
+        yield
+
+
+def mixed_script(
+    pid, ds, env, scheme, sampler, rng, cfg: WorkloadConfig, key_range, counters
+) -> Generator:
+    for _ in range(cfg.ops_per_proc):
+        r = rng.random()
+        if r < cfg.mixed_update_frac:
+            _do_update(pid, ds, env, scheme, sampler, rng, counters)
+            yield
+        elif r < cfg.mixed_update_frac + cfg.mixed_lookup_frac:
+            ds.lookup(pid, sampler())
+            counters["lookups"] += 1
+            yield
+        else:
+            yield from _rtx_slices(
+                pid, ds, env, scheme, rng, cfg.mixed_rtx_size, key_range,
+                cfg.rtx_chunk, counters,
+            )
+            yield
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
+    env = MVEnv(cfg.num_procs)
+    scheme = make_scheme(cfg.scheme, env, **cfg.scheme_kwargs)
+    rng = random.Random(cfg.seed)
+    key_range = 2 * cfg.n_keys
+    sampler = KeySampler(key_range, cfg.zipf, cfg.seed + 1)
+
+    ds = MVHashTable(env, scheme, cfg.n_keys) if cfg.ds == "hash" else MVTree(env, scheme)
+    # prefill to ~n_keys live keys
+    prefill = rng.sample(range(1, key_range + 1), cfg.n_keys)
+    for k in prefill:
+        env.advance_ts()
+        ds.insert(0, k, k)
+    scheme.quiesce()
+    base_work = _total_work(scheme)
+    counters: Dict[str, int] = {"updates": 0, "rtx": 0, "rtx_keys": 0, "lookups": 0}
+
+    scripts: List[Generator] = []
+    if cfg.mode == "split":
+        per = cfg.num_procs // 3
+        vmax = cfg.variable_rtx_max or cfg.n_keys
+        for pid in range(per):  # update threads
+            scripts.append(
+                update_script(pid, ds, env, scheme, sampler, rng, cfg.ops_per_proc, counters)
+            )
+        for pid in range(per, 2 * per):  # fixed-size rtx threads
+            scripts.append(
+                rtx_script(pid, ds, env, scheme, rng,
+                           max(1, cfg.ops_per_proc // 4),
+                           lambda: cfg.rtx_size, key_range, cfg.rtx_chunk, counters)
+            )
+        sizes = [max(1, vmax >> i) for i in range(per)] or [vmax]
+        for j, pid in enumerate(range(2 * per, cfg.num_procs)):  # variable-size rtx
+            size = sizes[j % len(sizes)]
+            scripts.append(
+                rtx_script(pid, ds, env, scheme, rng,
+                           max(1, cfg.ops_per_proc // 8),
+                           lambda s=size: s, key_range, cfg.rtx_chunk, counters)
+            )
+    else:
+        for pid in range(cfg.num_procs):
+            scripts.append(
+                mixed_script(pid, ds, env, scheme, sampler, rng, cfg, key_range, counters)
+            )
+
+    # round-robin at slice granularity
+    live = list(scripts)
+    slices = 0
+    peak = {"words": 0}
+    space_samples: List[int] = []
+    while live:
+        nxt = []
+        for g in live:
+            try:
+                next(g)
+                nxt.append(g)
+            except StopIteration:
+                pass
+            slices += 1
+            if slices % cfg.sample_every == 0:
+                s = measure_space(ds, scheme)
+                space_samples.append(s["words"])
+                if s["words"] > peak["words"]:
+                    peak = s
+        live = nxt
+
+    end_space_pre_quiesce = measure_space(ds, scheme)
+    space_samples.append(end_space_pre_quiesce["words"])
+    if end_space_pre_quiesce["words"] > peak["words"]:
+        peak = end_space_pre_quiesce
+    scheme.quiesce()
+    end_space = measure_space(ds, scheme)
+    total_work = _total_work(scheme) - base_work
+
+    return {
+        "config": cfg,
+        "counters": dict(counters),
+        "total_work": total_work,
+        "updates_per_mwork": counters["updates"] * 1e6 / max(1, total_work),
+        "rtx_keys_per_mwork": counters["rtx_keys"] * 1e6 / max(1, total_work),
+        "ops_per_mwork": (counters["updates"] + counters["rtx"] + counters["lookups"])
+        * 1e6 / max(1, total_work),
+        "peak_space": peak,
+        "avg_space": sum(space_samples) / max(1, len(space_samples)),
+        "end_space": end_space,
+        "end_space_pre_quiesce": end_space_pre_quiesce,
+        "scheme_stats": scheme.stats(),
+    }
+
+
+def _total_work(scheme: SchemeBase) -> int:
+    return scheme.work + sum(l.work for l in scheme.lists)

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: the SSL compact sweep (needed(A,t) mask over slabs).
+
+Hardware mapping (DESIGN.md §6): the paper's merge pass over (version list ×
+sorted announcements) becomes a VPU broadcast-compare — the announcement
+vector (P is at most a few thousand: KBs) stays resident in VMEM while the
+[S, V] slab streams through in (BLOCK_S, V) tiles.  Arithmetic intensity is
+O(P) per element, so for realistic P (>= 64) the sweep is compute-bound on
+the VPU rather than HBM-bound — which is why fusing the mask computation into
+one pass (instead of searchsorted's gather-heavy form) is the right TPU
+shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EMPTY = -1  # plain int: kernels must not capture traced constants
+DEFAULT_BLOCK_S = 256
+
+
+def _compact_kernel(now_ref, ts_ref, succ_ref, ann_ref, out_ref):
+    ts = ts_ref[...]            # (BS, V)
+    succ = succ_ref[...]        # (BS, V)
+    A = ann_ref[...]            # (P,)
+    now = now_ref[0]
+    pinned = (
+        (ts[..., None] <= A[None, None, :]) & (A[None, None, :] < succ[..., None])
+    ).any(-1)
+    out_ref[...] = ((ts != EMPTY) & (pinned | (succ > now))).astype(jnp.int8)
+
+
+def needed_pallas(
+    ts: jax.Array,
+    succ: jax.Array,
+    ann_sorted: jax.Array,
+    now: jax.Array,
+    *,
+    block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jax.Array:
+    """needed(A, now) as int8[S, V] (1 = needed)."""
+    S, V = ts.shape
+    P = ann_sorted.shape[0]
+    bs = min(block_s, S)
+    grid = (pl.cdiv(S, bs),)
+    now_arr = jnp.reshape(jnp.asarray(now, jnp.int32), (1,))
+    out = pl.pallas_call(
+        _compact_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # now (scalar)
+            pl.BlockSpec((bs, V), lambda i: (i, 0)),           # ts tile
+            pl.BlockSpec((bs, V), lambda i: (i, 0)),           # succ tile
+            pl.BlockSpec((P,), lambda i: (0,)),                # announcements (resident)
+        ],
+        out_specs=pl.BlockSpec((bs, V), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, V), jnp.int8),
+        interpret=interpret,
+    )(now_arr, ts, succ, ann_sorted)
+    return out

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the compact kernel with backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compact.kernel import needed_pallas
+from repro.kernels.compact.ref import needed_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_s"))
+def needed(
+    ts: jax.Array,
+    succ: jax.Array,
+    ann_sorted: jax.Array,
+    now: jax.Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,   # CPU container: interpret by default; False on TPU
+    block_s: int = 256,
+) -> jax.Array:
+    """bool[S, V] needed mask; Pallas kernel on TPU, jnp reference otherwise."""
+    if use_kernel:
+        return needed_pallas(
+            ts, succ, ann_sorted, now, block_s=block_s, interpret=interpret
+        ).astype(jnp.bool_)
+    return needed_ref(ts, succ, ann_sorted, now)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the compact kernel: needed(A, t) over version slabs.
+
+This is definitionally the same predicate as ``repro.core.mvgc.needed`` (the
+jit fallback); re-implemented here with the broadcast-compare formulation so
+the kernel and the searchsorted formulation check each other.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+
+def needed_ref(
+    ts: jax.Array,          # i32[S, V]
+    succ: jax.Array,        # i32[S, V]
+    ann_sorted: jax.Array,  # i32[P] (TS_MAX padded)
+    now: jax.Array,         # i32[]
+) -> jax.Array:
+    """bool[S, V]: needed(A, now) per entry (EMPTY entries are not needed)."""
+    A = ann_sorted
+    pinned = (
+        (ts[..., None] <= A[None, None, :]) & (A[None, None, :] < succ[..., None])
+    ).any(-1)
+    return (ts != EMPTY) & (pinned | (succ > now))

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: paged flash-decode over the versioned KV pool.
+
+Grid ``(B, Hkv, MP)`` — batch x kv-head x page — with the page dimension
+innermost.  The page table (the MVGC snapshot-read result) is **scalar
+prefetched**, so each grid step's BlockSpec index_map steers the page DMA:
+``k_pages`` block ``(1, PS, 1, D)`` at row ``table[b, p]``.  Online-softmax
+statistics for the G grouped query heads accumulate in VMEM scratch and are
+finalized on the last page.  Padding pages are masked via ``lengths`` (also
+prefetched) — the pool row they point at is never trusted.
+
+This is the serving hot path the paper's rtx corresponds to: a snapshot read
+of many versioned objects (pages) followed by the actual attention compute.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    table_ref, len_ref,            # scalar-prefetch operands
+    q_ref, k_ref, v_ref,           # tensor operands
+    o_ref,                         # output
+    m_scr, l_scr, acc_scr,         # VMEM scratch
+    *, ps: int, n_pages: int, scale: float,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    page_start = p * ps
+
+    @pl.when(page_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (PS, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (PS, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # (G, PS)
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(pos < length, logits, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_cur = jnp.max(logits, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pexp = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * alpha + pexp.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def paged_decode_pallas(
+    q: jax.Array,           # [B, Hq, D]
+    k_pages: jax.Array,     # [N, PS, Hkv, D]
+    v_pages: jax.Array,     # [N, PS, Hkv, D]
+    page_table: jax.Array,  # i32[B, MP]
+    lengths: jax.Array,     # i32[B]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    N, PS, Hkv, _ = k_pages.shape
+    MP = page_table.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    # reshape q so a (b, j) block is the G query heads of kv head j
+    q_g = q.reshape(B, Hkv, G, D)
+
+    grid = (B, Hkv, MP)
+    kernel = functools.partial(_decode_kernel, ps=PS, n_pages=MP, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, j, p, tbl, ln: (b, j, 0, 0)),
+            pl.BlockSpec(
+                (1, PS, 1, D),
+                lambda b, j, p, tbl, ln: (tbl[b, p], 0, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, PS, 1, D),
+                lambda b, j, p, tbl, ln: (tbl[b, p], 0, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, j, p, tbl, ln: (b, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q_g, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: flash-decode over a paged, versioned KV pool.
+
+One new query token per sequence attends to ``length`` cached tokens whose KV
+live in pages selected by a page table — the page table entries being exactly
+the payload handles returned by the MVGC snapshot read (the rtx read path at
+serving scale).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_ref(
+    q: jax.Array,           # [B, Hq, D] one query token per sequence
+    k_pages: jax.Array,     # [N, PS, Hkv, D] page pool
+    v_pages: jax.Array,     # [N, PS, Hkv, D]
+    page_table: jax.Array,  # i32[B, MP] page ids per sequence (padded arbitrary)
+    lengths: jax.Array,     # i32[B] valid token count per sequence
+) -> jax.Array:
+    B, Hq, D = q.shape
+    N, PS, Hkv, _ = k_pages.shape
+    MP = page_table.shape[1]
+    G = Hq // Hkv
+    # gather per-sequence K/V: [B, MP*PS, Hkv, D]
+    k = k_pages[page_table].reshape(B, MP * PS, Hkv, D)
+    v = v_pages[page_table].reshape(B, MP * PS, Hkv, D)
+    kf = jnp.repeat(k, G, axis=2)   # [B, T, Hq, D]
+    vf = jnp.repeat(v, G, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    pos = jnp.arange(MP * PS)[None, :]
+    mask = pos < lengths[:, None]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows (length 0)
+    return jnp.einsum("bht,bthd->bhd", p, vf.astype(jnp.float32)).astype(q.dtype)

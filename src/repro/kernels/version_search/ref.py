@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for version_search: batched search(t) over version slabs."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+NEG_INF_I32 = jnp.int32(-2_147_483_648)
+
+
+def search_ref(
+    ts: jax.Array,        # i32[S, V]
+    payload: jax.Array,   # i32[S, V]
+    slot_ids: jax.Array,  # i32[B]
+    t: jax.Array,         # i32[B]
+) -> Tuple[jax.Array, jax.Array]:
+    """(payload[B], found[B]): latest version with ts <= t per queried slot."""
+    rows_ts = ts[slot_ids]                       # [B, V]
+    ok = (rows_ts != EMPTY) & (rows_ts <= t[:, None])
+    masked = jnp.where(ok, rows_ts, NEG_INF_I32)
+    idx = jnp.argmax(masked, axis=1)
+    found = ok.any(axis=1)
+    pay = jnp.take_along_axis(payload[slot_ids], idx[:, None], axis=1)[:, 0]
+    return jnp.where(found, pay, EMPTY), found

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512" + (
+    " " + os.environ["XLA_FLAGS"] if "XLA_FLAGS" in os.environ else "")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * builds the jitted step (train_step / prefill / MV-Serve decode) with
+    production in/out shardings,
+  * ``.lower(**ShapeDtypeStructs).compile()`` — success proves the sharding
+    config is coherent; failures are bugs,
+  * records ``memory_analysis()`` (fits-per-device), ``cost_analysis()``
+    (FLOPs/bytes) and the collective-byte census parsed from the optimized
+    HLO into ``results/dryrun/<arch>__<shape>__<mesh>.json`` for the roofline
+    pass (benchmarks/roofline.py).
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun --all
+      PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh pod
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import list_archs, runnable
+from repro.configs.base import SHAPES
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute)(?:-start|-done)?\((.*)$")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind byte counts from the optimized (per-device) HLO.
+
+    Byte model (per device): all-reduce moves ~2x its result bytes on a ring
+    (reduce-scatter + all-gather phases); all-gather / all-to-all /
+    collective-permute move ~their result bytes; reduce-scatter moves ~its
+    operand bytes."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        result_shapes, kind, operands = m.groups()
+        if kind.endswith("-done"):
+            continue
+        res_b = _shape_bytes(result_shapes)
+        opd_b = _shape_bytes(operands)
+        factor = {"all-reduce": 2.0, "all-gather": 1.0, "all-to-all": 1.0,
+                  "collective-permute": 1.0, "reduce-scatter": 0.0}[kind]
+        moved = factor * res_b + (opd_b if kind == "reduce-scatter" else 0.0)
+        d = out.setdefault(kind, {"count": 0, "bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += moved
+    return out
+
+
+def dryrun_cell(arch: str, shape: str, mesh_name: str,
+                variant: str = "baseline", **overrides) -> Dict:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    sh = SHAPES[shape]
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if sh.kind == "train":
+            step, arg_shapes, in_sh, out_sh = S.build_train_cell(
+                arch, mesh, shape, **overrides)
+        else:
+            step, arg_shapes, in_sh, out_sh = S.build_serve_cell(
+                arch, mesh, shape, **overrides)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0,))
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (XLA's cost_analysis counts while bodies
+        # once — verified; analyze_hlo multiplies by known_trip_count)
+        hc = analyze_hlo(hlo)
+        # persist the HLO for re-analysis without recompiling
+        import gzip
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        hlo_path = cell_path(arch, shape, mesh_name, variant).replace(
+            ".json", ".hlo.gz")
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "variant": variant,
+        "chips": int(jax.device_count()) if mesh_name == "multipod" else 256,
+        "seq_len": sh.seq_len, "global_batch": sh.global_batch,
+        "kind": sh.kind,
+        "flops_per_device": float(hc["flops"]),
+        "bytes_per_device": float(hc["traffic_bytes"]),
+        "fused_bytes_per_device": float(hc["fused_traffic_bytes"]),
+        "fused_bf16_bytes_per_device": float(hc["fused_bf16_traffic_bytes"]),
+        "transcendentals": float(hc["transcendentals"]),
+        "xla_raw_flops": float(ca.get("flops", 0.0)),
+        "collectives": hc["collectives"],
+        "collective_bytes_per_device": float(hc["collective_bytes"]),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh_name: str,
+              variant: str = "baseline") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    return os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def run_and_save(arch: str, shape: str, mesh_name: str,
+                 variant: str = "baseline", force: bool = False,
+                 **overrides) -> Optional[Dict]:
+    path = cell_path(arch, shape, mesh_name, variant)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        rec = dryrun_cell(arch, shape, mesh_name, variant, **overrides)
+    except Exception as e:  # record the failure — it is a bug to fix
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "variant": variant, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["pod", "multipod"]
+
+    ok = fail = skip = 0
+    for arch in archs:
+        for shape in shapes:
+            if not runnable(arch, shape):
+                print(f"SKIP  {arch:24s} {shape:12s} (documented skip)")
+                skip += 1
+                continue
+            for mesh_name in meshes:
+                t0 = time.time()
+                rec = run_and_save(arch, shape, mesh_name,
+                                   variant=args.variant, force=args.force)
+                if "error" in rec:
+                    fail += 1
+                    print(f"FAIL  {arch:24s} {shape:12s} {mesh_name:8s} "
+                          f"{rec['error'][:90]}")
+                else:
+                    ok += 1
+                    gf = rec["flops_per_device"] / 1e9
+                    cb = rec["collective_bytes_per_device"] / 1e6
+                    print(f"OK    {arch:24s} {shape:12s} {mesh_name:8s} "
+                          f"{gf:10.1f} GF/dev  coll {cb:8.1f} MB/dev  "
+                          f"mem {rec['memory']['argument_bytes']/1e9:6.2f}+"
+                          f"{rec['memory']['temp_bytes']/1e9:5.2f} GB  "
+                          f"[{time.time()-t0:5.1f}s]")
+    print(f"\n{ok} ok, {fail} failed, {skip} skipped")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,457 @@
+"""HLO-text cost analyzer with while-loop trip-count multiplication.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop *body
+once* (verified by probe — scan length does not change reported FLOPs),
+which silently undercounts every scan-over-layers model.  This module parses
+the optimized per-device HLO instead:
+
+* **FLOPs**: dot ops as 2 * |result| * |contracted dims| (shapes resolved
+  through a per-computation symbol table); elementwise arithmetic at
+  1 flop/element; reduces at |input|; fusions/calls recursed; **while bodies
+  multiplied by** ``backend_config.known_trip_count`` (with a
+  condition-constant fallback).
+* **HBM traffic**: per top-level instruction, operands + results — fusion
+  internals excluded, which models fused execution; parameters / tuples /
+  bitcasts excluded.
+* **Collective census**: op kind -> {count, bytes} with the same trip
+  multiplication, using the ring byte model (all-reduce 2x result;
+  gather/permute/a2a 1x result; reduce-scatter 1x operand).
+
+All numbers are per-device (the compiled module is the per-device SPMD
+program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "not", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "power",
+    "atan2",
+}
+TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                  "sine", "cosine", "exponential-minus-one", "log-plus-one",
+                  "erf", "cbrt"}
+NO_COST = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+           "after-all", "partition-id", "replica-id", "iota", "copy-start",
+           "copy-done", "rng-get-and-update-state", "opt-barrier"}
+COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute"}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPNAME = re.compile(r"^([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+
+
+def _parse_instr(line: str):
+    """Procedural instruction parse — tuple result shapes contain
+    ``/*index=N*/`` comments that defeat naive regexes."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rhs = s[eq + 3:]
+    if rhs.startswith("("):            # tuple shape: match parens
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape_text = rhs[:end + 1]
+        rest0 = rhs[end + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape_text = rhs[:sp]
+        rest0 = rhs[sp + 1:].lstrip()
+    m = _OPNAME.match(rest0)
+    if not m:
+        return None
+    op, rest = m.groups()
+    return name, shape_text, op, rest
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_NAMES = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over every shape token in `text`."""
+    elems = tot = 0
+    for dt, dims in _SHAPE_TOKEN.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        tot += n * DTYPE_BYTES[dt]
+    return elems, tot
+
+
+class Instr:
+    __slots__ = ("name", "shape_text", "op", "rest", "elems", "bytes",
+                 "bytes_bf16")
+
+    def __init__(self, name, shape_text, op, rest):
+        self.name = name
+        self.shape_text = shape_text
+        self.op = op
+        self.rest = rest
+        self.elems, self.bytes = _shape_elems_bytes(shape_text)
+        # bytes if every f32 tensor were bf16: corrects the CPU backend's
+        # convert-to-f32 canonicalization of bf16 matmul operands (TPU MXUs
+        # consume bf16 directly; the f32 copies are compile-target artifacts)
+        self.bytes_bf16 = self._bf16_bytes(shape_text)
+
+    @staticmethod
+    def _bf16_bytes(text: str) -> int:
+        tot = 0
+        for dt, dims in _SHAPE_TOKEN.findall(text):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            tot += n * (2 if dt == "f32" else DTYPE_BYTES[dt])
+        return tot
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._symtab: Dict[str, Dict[str, Instr]] = {
+            cname: {i.name: i for i in instrs}
+            for cname, instrs in self.computations.items()
+        }
+        self._memo: Dict[str, Tuple[float, float, float, Dict]] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR.match(line.strip())
+                if m and "{" in line:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            parsed = _parse_instr(line)
+            if parsed:
+                self.computations[cur].append(Instr(*parsed))
+
+    # -- cost of one computation (recursive, memoized) ----------------------
+    def cost(self, cname: Optional[str] = None):
+        """Returns (flops, traffic_bytes, transcendental_elems, census,
+        fused_traffic_bytes).
+
+        traffic_bytes: unfused upper bound (every top-level op pays
+        operands+results).  fused_traffic_bytes: fused lower bound — only
+        dots/convs (operands+result), slices/gathers (2x result), DUS
+        (2x update), reduces and collectives pay; elementwise chains are
+        assumed fused into their producers, which is the TPU steady state."""
+        cname = cname or self.entry
+        if cname in self._memo:
+            return self._memo[cname]
+        flops = traffic = trans = fused = fused16 = 0.0
+        census: Dict[str, Dict[str, float]] = {}
+        sym = self._symtab.get(cname, {})
+        for ins in self.computations.get(cname, []):
+            op = ins.op
+            if op in NO_COST or op == "parameter":
+                continue
+            if op == "while":
+                body = _BODY.search(ins.rest)
+                cond = _COND.search(ins.rest)
+                trips = 1
+                mt = _TRIP.search(ins.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                bres = self.cost(body.group(1)) if body else (0, 0, 0, {}, 0, 0)
+                cres = self.cost(cond.group(1)) if cond else (0, 0, 0, {}, 0, 0)
+                (bf, bt, btr, bc, bfu, bfu16) = bres
+                (cf, ct, ctr, cc, cfu, cfu16) = cres
+                flops += trips * (bf + cf)
+                traffic += trips * (bt + ct)
+                fused += trips * (bfu + cfu)
+                fused16 += trips * (bfu16 + cfu16)
+                trans += trips * (btr + ctr)
+                for sub in (bc, cc):
+                    for k, v in sub.items():
+                        d = census.setdefault(k, {"count": 0, "bytes": 0.0})
+                        d["count"] += trips * v["count"]
+                        d["bytes"] += trips * v["bytes"]
+                continue
+            if op in ("fusion", "call", "async-start"):
+                mcalls = _CALLS.search(ins.rest)
+                t_int = 0.0
+                if mcalls:
+                    f, t_int, tr, cen, fu, fu16 = self.cost(mcalls.group(1))
+                    flops += f
+                    trans += tr
+                    fused += fu
+                    fused16 += fu16
+                    for k, v in cen.items():
+                        d = census.setdefault(k, {"count": 0, "bytes": 0.0})
+                        d["count"] += v["count"]
+                        d["bytes"] += v["bytes"]
+                # traffic: boundary model (operands + result) is right for
+                # compute fusions; the internal model is right for gather/
+                # slice fusions whose call-site operands include whole tables
+                # they barely touch.  min() picks the correct regime.
+                t_bnd = ins.bytes + self._operand_bytes(sym, ins)
+                traffic += min(t_int, t_bnd) if t_int > 0 else t_bnd
+                continue
+            if op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", ins.rest)
+                names = []
+                if branches:
+                    names = [b.strip().lstrip("%") for b in branches[0].split(",")]
+                else:
+                    names = [m for m in
+                             re.findall(r"(?:true|false)_computation=%?([\w.\-]+)", ins.rest)]
+                if names:
+                    costs = [self.cost(n) for n in names]
+                    best = max(costs, key=lambda c: c[0])
+                    flops += best[0]
+                    traffic += best[1]
+                    trans += best[2]
+                    fused += best[4]
+                    fused16 += best[5]
+                continue
+            if op in COLLECTIVES or any(op == c + "-start" for c in COLLECTIVES):
+                kind = op.replace("-start", "")
+                res_b = ins.bytes
+                opd_b = self._operand_bytes(sym, ins)
+                factor = {"all-reduce": 2.0, "all-gather": 1.0,
+                          "all-to-all": 1.0, "collective-permute": 1.0,
+                          "reduce-scatter": 0.0}[kind]
+                moved = factor * res_b + (opd_b if kind == "reduce-scatter" else 0)
+                d = census.setdefault(kind, {"count": 0, "bytes": 0.0})
+                d["count"] += 1
+                d["bytes"] += moved
+                traffic += res_b + opd_b
+                fused += res_b + opd_b
+                fused16 += ins.bytes_bf16 + self._operand_bytes16(sym, ins)
+                continue
+            if op == "dot":
+                mres = ins.elems
+                lhs_names = _OPERAND_NAMES.findall(ins.rest.split(")")[0])
+                k = 1
+                mcon = _CONTRACT.search(ins.rest)
+                if mcon and lhs_names and lhs_names[0] in sym:
+                    lhs_shape = sym[lhs_names[0]].shape_text
+                    dims_m = _SHAPE_TOKEN.search(lhs_shape)
+                    if dims_m:
+                        dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                        for ci in mcon.group(1).split(","):
+                            if ci:
+                                k *= dims[int(ci)]
+                flops += 2.0 * mres * k
+                traffic += ins.bytes + self._operand_bytes(sym, ins)
+                fused += ins.bytes + self._operand_bytes(sym, ins)
+                fused16 += ins.bytes_bf16 + self._operand_bytes16(sym, ins)
+                continue
+            if op == "convolution":
+                # flops ~ 2 * |result| * kernel_elems (per output feature)
+                names = _OPERAND_NAMES.findall(ins.rest.split(")")[0])
+                kelems = 1
+                if len(names) >= 2 and names[1] in sym:
+                    kelems = max(1, sym[names[1]].elems)
+                flops += 2.0 * ins.elems * kelems
+                traffic += ins.bytes + self._operand_bytes(sym, ins)
+                fused += ins.bytes + self._operand_bytes(sym, ins)
+                fused16 += ins.bytes_bf16 + self._operand_bytes16(sym, ins)
+                continue
+            if op in ("reduce", "reduce-window"):
+                inb = self._operand_bytes(sym, ins)
+                flops += self._operand_elems(sym, ins)
+                traffic += ins.bytes + inb
+                fused += ins.bytes + inb
+                fused16 += ins.bytes_bf16 + self._operand_bytes16(sym, ins)
+                continue
+            if op in ELEMENTWISE_1FLOP:
+                flops += ins.elems
+                traffic += ins.bytes + self._operand_bytes(sym, ins)
+                continue
+            if op in TRANSCENDENTAL:
+                flops += ins.elems
+                trans += ins.elems
+                traffic += ins.bytes + self._operand_bytes(sym, ins)
+                continue
+            if op in ("dynamic-update-slice",):
+                # in-place update: traffic = update operand + result window
+                names = _OPERAND_NAMES.findall(ins.rest)
+                ub = sym[names[1]].bytes if len(names) > 1 and names[1] in sym else 0
+                ub16 = sym[names[1]].bytes_bf16 if len(names) > 1 and names[1] in sym else 0
+                traffic += 2 * ub
+                fused += 2 * ub
+                fused16 += 2 * ub16
+                continue
+            if op in ("slice", "dynamic-slice", "gather"):
+                # reads only the selected window, NOT the whole operand — a
+                # scan body slicing its layer from the [L, ...] stack touches
+                # one layer per trip, and embedding gathers touch rows, so
+                # counting full operands would overcount by the stack/table
+                # size.  result bytes (read) + result bytes (write).
+                traffic += 2 * ins.bytes
+                fused += 2 * ins.bytes
+                fused16 += 2 * ins.bytes_bf16
+                continue
+            if op in ("transpose", "reshape", "broadcast", "convert",
+                      "bitcast-convert", "reduce-precision", "reverse",
+                      "dynamic-reshape"):
+                # layout/dtype ops: usually fused away on TPU; charge the
+                # result write only
+                traffic += ins.bytes
+                continue
+            if op in ("copy", "concatenate", "pad", "scatter", "sort",
+                      "rng", "custom-call", "cholesky", "triangular-solve",
+                      "domain", "map", "all-reduce-done", "all-gather-done",
+                      "copy-done", "collective-permute-done", "async-done",
+                      "log1p"):
+                traffic += ins.bytes + self._operand_bytes(sym, ins)
+                continue
+            # default: treat like elementwise
+            flops += ins.elems
+            traffic += ins.bytes + self._operand_bytes(sym, ins)
+
+        self._memo[cname] = (flops, traffic, trans, census, fused, fused16)
+        return self._memo[cname]
+
+    def _operand_bytes16(self, sym, ins) -> int:
+        total = 0
+        opnames = _OPERAND_NAMES.findall(ins.rest.split("), ")[0])
+        for n in opnames:
+            if n in sym:
+                total += sym[n].bytes_bf16
+        return total
+
+    def _operand_bytes(self, sym, ins) -> int:
+        total = 0
+        # operand list ends at matching close-paren; heuristically take the
+        # text before ', ' attribute markers
+        opnames = _OPERAND_NAMES.findall(ins.rest.split("), ")[0])
+        for n in opnames:
+            if n in sym:
+                total += sym[n].bytes
+        return total
+
+    def _operand_elems(self, sym, ins) -> int:
+        total = 0
+        opnames = _OPERAND_NAMES.findall(ins.rest.split("), ")[0])
+        for n in opnames:
+            if n in sym:
+                total += sym[n].elems
+        return total
+
+
+def computation_multipliers(mod: "HloModule") -> Dict[str, int]:
+    """Trip multiplier per computation (product of enclosing while trips)."""
+    mult: Dict[str, int] = {mod.entry: 1}
+    stack = [mod.entry]
+    while stack:
+        cname = stack.pop()
+        m = mult[cname]
+        for ins in mod.computations.get(cname, []):
+            subs = []
+            trips = 1
+            if ins.op == "while":
+                mt = _TRIP.search(ins.rest)
+                trips = int(mt.group(1)) if mt else 1
+                b = _BODY.search(ins.rest)
+                c = _COND.search(ins.rest)
+                subs = [x.group(1) for x in (b, c) if x]
+            else:
+                mc = _CALLS.search(ins.rest)
+                if mc:
+                    subs = [mc.group(1)]
+            for s in subs:
+                if mult.get(s, 0) < m * trips:
+                    mult[s] = m * trips
+                    stack.append(s)
+    return mult
+
+
+def top_traffic(text: str, n: int = 15):
+    """The hillclimb profiler: top-n instructions by fused-traffic x trips."""
+    mod = HloModule(text)
+    mult = computation_multipliers(mod)
+    import re as _re
+    rows = []
+    for cname, instrs in mod.computations.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        sym = mod._symtab[cname]
+        for ins in instrs:
+            if ins.op in NO_COST:
+                continue
+            if ins.op == "dot":
+                t = ins.bytes + mod._operand_bytes(sym, ins)
+            elif ins.op in ("slice", "dynamic-slice", "gather"):
+                t = 2 * ins.bytes
+            elif ins.op in COLLECTIVES:
+                t = ins.bytes + mod._operand_bytes(sym, ins)
+            elif ins.op == "dynamic-update-slice":
+                names = _OPERAND_NAMES.findall(ins.rest)
+                ub = sym[names[1]].bytes if len(names) > 1 and names[1] in sym else 0
+                t = 2 * ub
+            elif ins.op in ("reduce", "convolution"):
+                t = ins.bytes + mod._operand_bytes(sym, ins)
+            else:
+                continue  # fused model: elementwise/layout excluded
+            op_name = ""
+            mm = _re.search(r'op_name="([^"]*)"', ins.rest)
+            if mm:
+                op_name = mm.group(1)
+            rows.append((t * m, t, m, ins.op, ins.shape_text[:48], op_name[-80:]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def analyze_hlo(text: str) -> Dict:
+    mod = HloModule(text)
+    flops, traffic, trans, census, fused, fused16 = mod.cost()
+    return {
+        "flops": flops,
+        "traffic_bytes": traffic,          # unfused upper bound
+        "fused_traffic_bytes": fused,      # fused lower bound (CPU dtypes)
+        "fused_bf16_traffic_bytes": fused16,  # + f32-convert-artifact correction
+        "transcendentals": trans,
+        "collectives": census,
+        "collective_bytes": sum(v["bytes"] for v in census.values()),
+    }

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod
+    axis crosses the DCN; gradient reduction over it is what the int8
+    compression path targets."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh(
+        (data, max(1, min(model, n // data))), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

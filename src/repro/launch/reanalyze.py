@@ -1,0 +1,38 @@
+"""Re-run hlo_cost over the saved .hlo.gz artifacts and refresh the JSONs —
+iterate on the cost model without recompiling 66 cells."""
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.dryrun import RESULTS_DIR
+
+
+def main() -> None:
+    n = 0
+    for jpath in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.gz")
+        if not os.path.exists(hpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if "error" in rec:
+            continue
+        hc = analyze_hlo(gzip.open(hpath, "rt").read())
+        rec["flops_per_device"] = float(hc["flops"])
+        rec["bytes_per_device"] = float(hc["traffic_bytes"])
+        rec["fused_bytes_per_device"] = float(hc["fused_traffic_bytes"])
+        rec["fused_bf16_bytes_per_device"] = float(hc["fused_bf16_traffic_bytes"])
+        rec["transcendentals"] = float(hc["transcendentals"])
+        rec["collectives"] = hc["collectives"]
+        rec["collective_bytes_per_device"] = float(hc["collective_bytes"])
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, derives the three terms (seconds/step):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+Hardware constants (TPU v5e, from the brief): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.  ``cost_analysis()`` was verified per-device in this
+jaxlib (probe: global FLOPs / device_count).  MODEL_FLOPS uses 6*N*D (dense)
+or 6*N_active*D (MoE) + attention term, so the useful-compute ratio catches
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link (per-chip effective, 1-link model)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def model_flops_per_device(rec: Dict) -> float:
+    """Analytic useful FLOPs per device per step (forward[+backward])."""
+    cfg = ARCHS[rec["arch"]]
+    n_active = cfg.active_param_count()
+    B, S = rec["global_batch"], rec["seq_len"]
+    chips = 512 if rec["mesh"] == "multipod" else 256
+    if rec["kind"] == "train":
+        tokens = B * S
+        flops = 6 * n_active * tokens           # fwd 2ND + bwd 4ND
+        # causal attention term: 6*B*S^2*H*hd per layer (fwd 2 + bwd 4),
+        # halved for causality; local layers capped at the window
+        attn = 0.0
+        for i in range(cfg.num_layers):
+            kind = cfg.layer_pattern[i % len(cfg.layer_pattern)]
+            if kind in ("attn", "local"):
+                span = min(S, cfg.local_window) if kind == "local" and cfg.local_window else S
+                attn += 6 * B * S * span * cfg.num_heads * cfg.hd * 0.5 * 2
+        flops += attn
+    elif rec["kind"] == "prefill":
+        tokens = B * S
+        flops = 2 * n_active * tokens
+        attn = 0.0
+        for i in range(cfg.num_layers):
+            kind = cfg.layer_pattern[i % len(cfg.layer_pattern)]
+            if kind in ("attn", "local"):
+                span = min(S, cfg.local_window) if kind == "local" and cfg.local_window else S
+                attn += 2 * B * S * span * cfg.num_heads * cfg.hd * 0.5 * 2
+        flops += attn
+    else:  # decode: one token over a cache of S
+        tokens = B * 1
+        flops = 2 * n_active * tokens
+        attn = 0.0
+        for i in range(cfg.num_layers):
+            kind = cfg.layer_pattern[i % len(cfg.layer_pattern)]
+            if kind in ("attn", "local"):
+                span = min(S, cfg.local_window) if kind == "local" and cfg.local_window else S
+                attn += 2 * B * 1 * span * cfg.num_heads * cfg.hd * 2
+        flops += attn
+    return flops / chips
+
+
+def analyze(rec: Dict) -> Dict:
+    if "error" in rec:
+        return {**rec, "status": "FAILED"}
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    # memory term: fused (TPU-like) lower bound with the f32-convert-artifact
+    # correction (bf16 matmul operands charged at 2B/elem; the CPU backend
+    # materializes f32 copies the MXU pipeline never would); the unfused
+    # upper bound is reported alongside (t_memory_unfused_s)
+    fused = rec.get("fused_bf16_bytes_per_device",
+                    rec.get("fused_bytes_per_device", rec["bytes_per_device"]))
+    t_mem = fused / HBM_BW
+    t_mem_unfused = rec["bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = mf / rec["flops_per_device"] if rec["flops_per_device"] else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model FLOPs vs what the dominant term allows
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant", "baseline"),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "t_memory_unfused_s": t_mem_unfused,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "hbm_per_device_gb": (rec["memory"]["argument_bytes"]
+                              + rec["memory"]["temp_bytes"]) / 1e9,
+        "collectives": rec["collectives"],
+        "status": "ok",
+    }
+
+
+def load_all(variant: Optional[str] = None) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if variant is not None and rec.get("variant", "baseline") != variant:
+            continue
+        out.append(analyze(rec))
+    return out
+
+
+def table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'comp(ms)':>9s} "
+           f"{'mem(ms)':>9s} {'coll(ms)':>9s} {'bound':>10s} {'useful':>7s} "
+           f"{'roofline':>8s} {'HBM(GB)':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} "
+                         f"{r.get('mesh', '?'):8s} FAILED: {r.get('error', '')[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+            f"{r['t_compute_s']*1e3:9.2f} {r['t_memory_s']*1e3:9.2f} "
+            f"{r['t_collective_s']*1e3:9.2f} {r['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} {r['roofline_fraction']:8.3f} "
+            f"{r['hbm_per_device_gb']:8.2f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    rows = load_all(args.variant)
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,283 @@
+"""input_specs + sharding trees for every (arch x shape x mesh) cell.
+
+Everything here is ShapeDtypeStruct-based: no device allocation ever happens
+in the dry-run (jax.eval_shape builds the state trees; jit().lower() consumes
+the specs)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, ARCHS
+from repro.configs.base import ModelConfig, RunConfig, SHAPES, ShapeConfig
+from repro.dist.sharding import (_keypath_parts, batch_spec, param_shardings)
+from repro.models import transformer as tf
+from repro.train import step as train_mod
+from repro.serve import engine as eng
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def run_config(arch: str, shape: str, gc_policy: str = "slrt") -> RunConfig:
+    cfg = get_config(arch)
+    big = cfg.param_count() * 2 > 8e9   # >= ~4B params: shard params over data
+    return RunConfig(
+        model=cfg, shape=SHAPES[shape], fsdp=big and shape == "train_4k",
+        gc_policy=gc_policy,
+        microbatches=1,
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    B = sh.global_batch
+    if sh.kind == "train":
+        T_text = sh.seq_len
+        out: Dict[str, Any] = {}
+        if cfg.encoder_layers:                      # whisper: frames go to enc
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_tokens, cfg.d_model), COMPUTE_DTYPE)
+        elif cfg.frontend != "none":                # vlm: patch prefix
+            T_text = sh.seq_len - cfg.frontend_tokens
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), COMPUTE_DTYPE)
+        out["tokens"] = jax.ShapeDtypeStruct((B, T_text), jnp.int32)
+        out["loss_mask"] = jax.ShapeDtypeStruct((B, T_text), jnp.float32)
+        return out
+    if sh.kind == "prefill":
+        T_text = sh.seq_len
+        out = {}
+        if cfg.encoder_layers:
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_tokens, cfg.d_model), COMPUTE_DTYPE)
+        elif cfg.frontend != "none":
+            T_text = sh.seq_len - cfg.frontend_tokens
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), COMPUTE_DTYPE)
+        out["tokens"] = jax.ShapeDtypeStruct((B, T_text), jnp.int32)
+        return out
+    # decode: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# sharding rules for non-param state
+# ---------------------------------------------------------------------------
+def _dim_shardable(n: int, mesh: Mesh, axes) -> bool:
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= mesh.shape.get(a, 1)
+    return n % total == 0 and n >= total
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, cfg: ModelConfig, B: int):
+    """Sharding tree for the decode cache pytree (KV/ring/recurrent states).
+
+    Policy: batch over (pod, data) when divisible; KV sequence dim over
+    'model' (sequence-parallel decode) unless kv-heads divide the model axis,
+    in which case heads go on 'model'.  When the batch can't cover the data
+    axes (long_500k B=1) the sequence dim takes BOTH (data, model)."""
+    baxes = batch_axes(mesh)
+    b_ok = _dim_shardable(B, mesh, baxes)
+    heads_on_model = cfg.num_kv_heads % mesh.shape.get("model", 1) == 0 and \
+        cfg.num_kv_heads >= mesh.shape.get("model", 1)
+
+    def leaf_spec(path_parts, leaf) -> P:
+        name = path_parts[-1]
+        shp = leaf.shape
+        stacked = path_parts[0] == "sb"          # leading scan dim
+        core = shp[1:] if stacked else shp
+        bspec = baxes if b_ok else None
+        if name in ("k", "v") and len(core) == 4:        # [B, L, H, D]
+            if heads_on_model:
+                spec = P(bspec, None, "model", None)
+            else:
+                seq_ax = ("data", "model") if not b_ok and _dim_shardable(
+                    core[1], mesh, ("data", "model")) else "model"
+                if not _dim_shardable(core[1], mesh, seq_ax):
+                    seq_ax = None
+                spec = P(bspec, seq_ax, None, None)
+        elif name == "pos" and len(core) == 2:            # local ring positions
+            seq_ax = "model" if _dim_shardable(core[1], mesh, "model") else None
+            spec = P(bspec, seq_ax)
+        elif name in ("C",) and len(core) == 4:           # mlstm [B,H,dk,dv]
+            spec = P(bspec, None, None, None)
+        elif name in ("n",) and len(core) == 3:
+            spec = P(bspec, None, None)
+        elif name in ("c", "m", "h") and len(core) == 3:  # slstm [B,H,hd]
+            spec = P(bspec, None, None)
+        elif name == "h" and len(core) == 2:              # rglru [B, w]
+            w_ax = "model" if _dim_shardable(core[1], mesh, "model") else None
+            spec = P(bspec, w_ax)
+        elif name == "conv" and len(core) == 3:           # rglru [B, W-1, w]
+            w_ax = "model" if _dim_shardable(core[2], mesh, "model") else None
+            spec = P(bspec, None, w_ax)
+        else:
+            spec = P(*([bspec] + [None] * (len(core) - 1))) if len(core) else P()
+        if stacked:
+            spec = P(None, *spec)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: leaf_spec(_keypath_parts(kp), leaf), cache_shapes)
+
+
+def mv_shardings(mv_shapes, mesh: Mesh, B: int):
+    """Descriptor store: slots follow the batch sharding; board/ring/scalars
+    replicated (they are tiny and read by every shard's GC pass)."""
+    baxes = batch_axes(mesh)
+    b_ok = _dim_shardable(B, mesh, baxes)
+
+    def leaf_spec(path_parts, leaf) -> P:
+        shp = leaf.shape
+        if len(shp) >= 1 and shp[0] == B and b_ok and path_parts[0] == "store":
+            return NamedSharding(mesh, P(baxes, *([None] * (len(shp) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: leaf_spec(_keypath_parts(kp), leaf), mv_shapes)
+
+
+def batch_shardings(batch_specs, mesh: Mesh, B: int):
+    baxes = batch_axes(mesh)
+    b_ok = _dim_shardable(B, mesh, baxes)
+    bspec = baxes if b_ok else None
+
+    def leaf(x):
+        return NamedSharding(mesh, P(*([bspec] + [None] * (len(x.shape) - 1))))
+
+    return jax.tree.map(leaf, batch_specs)
+
+
+def replicate(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# cell builders: (step_fn, arg_specs, in_shardings, out_shardings)
+# ---------------------------------------------------------------------------
+def _pad_heads_cfg(cfg: ModelConfig, mesh: Mesh) -> ModelConfig:
+    """Round head counts up to the model-axis multiple (zero-padded heads in
+    deployment): keeps the softmax shard-local where 40-head models would
+    otherwise replicate attention 16x."""
+    m = mesh.shape.get("model", 1)
+    pad = lambda h: ((h + m - 1) // m) * m
+    return dataclasses.replace(cfg, num_heads=pad(cfg.num_heads),
+                               num_kv_heads=pad(cfg.num_kv_heads),
+                               head_dim=cfg.hd)
+
+
+def build_train_cell(arch: str, mesh: Mesh, shape: str = "train_4k",
+                     fsdp: Optional[bool] = None, microbatches: int = 1,
+                     attn_hd_shard: bool = False, attn_gather_qkv: bool = False,
+                     moe_dispatch: Optional[str] = None,
+                     moe_replicate: bool = False, pad_heads: bool = False):
+    cfg = get_config(arch)
+    if pad_heads:
+        cfg = _pad_heads_cfg(cfg, mesh)
+    if moe_dispatch:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    if attn_gather_qkv:
+        cfg = dataclasses.replace(cfg, attn_gather_qkv=True)
+    run = run_config(arch, shape)
+    if fsdp is not None:
+        run = dataclasses.replace(run, fsdp=fsdp)
+    if microbatches != 1:
+        run = dataclasses.replace(run, microbatches=microbatches)
+
+    state_shapes = jax.eval_shape(
+        lambda: train_mod.init_state(cfg, jax.random.PRNGKey(0),
+                                     dtype=COMPUTE_DTYPE))
+    bspecs = input_specs(arch, shape)
+
+    pshard = param_shardings(state_shapes.params, mesh, fsdp=run.fsdp,
+                             attn_hd_shard=attn_hd_shard,
+                             moe_replicate=moe_replicate)
+    state_shard = train_mod.TrainState(
+        params=pshard,
+        opt=type(state_shapes.opt)(
+            step=NamedSharding(mesh, P()),
+            mu=pshard, nu=pshard),
+        err=pshard if run.grad_compression else replicate(state_shapes.err, mesh),
+        step=NamedSharding(mesh, P()),
+    )
+    bshard = batch_shardings(bspecs, mesh, SHAPES[shape].global_batch)
+
+    def step(state, batch):
+        return train_mod.train_step(state, batch, cfg, run)
+
+    out_shard = (state_shard, None)  # metrics: let XLA choose
+    return step, (state_shapes, bspecs), (state_shard, bshard), out_shard
+
+
+def build_serve_cell(arch: str, mesh: Mesh, shape: str,
+                     gc_policy: str = "slrt", attn_hd_shard: bool = False,
+                     attn_gather_qkv: bool = False,
+                     moe_dispatch: Optional[str] = None,
+                     moe_replicate: bool = False, pad_heads: bool = False):
+    """decode (serve_step) or prefill cell."""
+    cfg = get_config(arch)
+    if pad_heads:
+        cfg = _pad_heads_cfg(cfg, mesh)
+    if moe_dispatch:
+        cfg = dataclasses.replace(cfg, moe_dispatch=moe_dispatch)
+    if attn_gather_qkv:
+        cfg = dataclasses.replace(cfg, attn_gather_qkv=True)
+    sh = SHAPES[shape]
+    run = run_config(arch, shape, gc_policy)
+    B, L = sh.global_batch, sh.seq_len
+
+    params_shapes = jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.PRNGKey(0), dtype=COMPUTE_DTYPE))
+    pshard = param_shardings(params_shapes, mesh, fsdp=False,
+                             attn_hd_shard=attn_hd_shard,
+                             moe_replicate=moe_replicate)
+
+    if sh.kind == "prefill":
+        cache_shapes = jax.eval_shape(
+            lambda: tf.init_cache(cfg, B, L, COMPUTE_DTYPE))
+        cshard = cache_shardings(cache_shapes, mesh, cfg, B)
+        bspecs = input_specs(arch, shape)
+        bshard = batch_shardings(bspecs, mesh, B)
+
+        def step(params, cache, batch):
+            return tf.prefill(params, cfg, batch["tokens"], cache,
+                              frontend_embeds=batch.get("frontend"))
+
+        return (step, (params_shapes, cache_shapes, bspecs),
+                (pshard, cshard, bshard), None)
+
+    # decode: full MV-Serve step (model decode + descriptor write + GC)
+    state_shapes = jax.eval_shape(
+        lambda: eng.make_serve_state(cfg, run, params_shapes, B, L,
+                                     COMPUTE_DTYPE))
+    cshard = cache_shardings(state_shapes.cache, mesh, cfg, B)
+    mvshard = mv_shardings(state_shapes.mv, mesh, B)
+    bspec = batch_axes(mesh) if _dim_shardable(B, mesh, batch_axes(mesh)) else None
+    sshard = eng.ServeState(
+        params=pshard,
+        cache=cshard,
+        cache_len=NamedSharding(mesh, P(bspec)),
+        mv=mvshard,
+        last_tokens=NamedSharding(mesh, P(bspec, None)),
+    )
+
+    def step(state):
+        new_state, toks, freed = eng.decode_one(state, cfg, run)
+        return new_state, toks
+
+    return step, (state_shapes,), (sshard,), (sshard, NamedSharding(mesh, P(bspec, None)))

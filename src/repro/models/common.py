@@ -1,0 +1,106 @@
+"""Shared model primitives: norms, RoPE, initializers, losses."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(
+    x: jax.Array,            # [..., T, H, D] or [..., T, D]
+    positions: jax.Array,    # i32[..., T]
+    theta: float = 10_000.0,
+) -> jax.Array:
+    """Rotary position embedding, pair-interleaved layout.
+
+    Pairs are adjacent (2i, 2i+1) and rotated via a trailing size-2 reshape,
+    so the op stays **shard-local when the head dim is sharded** (the
+    split-halves layout would permute across shards).  Mathematically a fixed
+    basis permutation of the classic form."""
+    dt = x.dtype
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:  # head dim present: [..., T, H, D]
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    xp = x.astype(jnp.float32).reshape(*x.shape[:-1], half, 2)
+    x1, x2 = xp[..., 0], xp[..., 1]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.reshape(*x.shape).astype(dt)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis]
+    std = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+            ).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+def cross_entropy_loss(
+    logits: jax.Array,      # [B, T, Vocab] (float32 recommended)
+    labels: jax.Array,      # i32[B, T]
+    mask: Optional[jax.Array] = None,
+    z_loss: float = 1e-4,
+) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss > 0:
+        loss = loss + z_loss * lse**2  # logit drift regularizer (PaLM)
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1)
+    return loss.mean()
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin the leading (batch) dim of an activation to the data axes.
+
+    GSPMD left to its own devices sometimes propagates the *parameter*
+    sharding into activations (e.g. vocab-sharded embeddings turning [B,T,d]
+    into a batch-replicated, d-sharded layout), silently serializing data
+    parallelism.  This constraint re-anchors activations to batch-DP at every
+    superblock boundary.  No-op outside a mesh context (unit tests)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names or "data" not in mesh.axis_names:
+            return x
+        baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        total = 1
+        for a in baxes:
+            total *= dict(mesh.shape)[a]
+        if x.shape[0] % total != 0:
+            return x
+        spec = P(baxes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ImportError, AttributeError, ValueError):
+        return x

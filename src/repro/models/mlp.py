@@ -1,0 +1,31 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.float32, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wu": dense_init(ks[1], (d, f), dtype=dtype),
+        "wd": dense_init(ks[2], (f, d), dtype=dtype),
+    }
+    if cfg.gated_mlp:
+        p["wg"] = dense_init(ks[0], (d, f), dtype=dtype)
+    return p
+
+
+def mlp(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    act = jax.nn.gelu if cfg.act in ("gelu", "geglu") else jax.nn.silu
+    u = jnp.einsum("btd,df->btf", x, params["wu"])
+    if cfg.gated_mlp:
+        g = act(jnp.einsum("btd,df->btf", x, params["wg"]))
+        h = g * u
+    else:
+        h = act(u)
+    return jnp.einsum("btf,fd->btd", h, params["wd"])

@@ -1,0 +1,232 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, sequential with exponential-gate stabilization).
+
+Numerics note (recorded in DESIGN.md): the input gate uses log-sigmoid
+(bounded) rather than the paper's raw-exp with max-stabilizer for the mLSTM —
+every exponent in the chunkwise form is then <= 0, so the chunk matmuls are
+overflow-free on bf16-accumulating hardware; the sLSTM keeps the original
+exp-input-gate with the m_t stabilizer since it is sequential anyway.  The
+chunkwise train path is validated against the step-recurrent reference
+exactly (tests/models).
+
+mLSTM chunkwise layout: scan over T/L chunks; within a chunk everything is
+(L x L) / (L x dh) matmuls — MXU-shaped — and the (C, n) state crosses chunk
+boundaries, giving O(T * L * dh) work instead of O(T * dh^2) outer products.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm
+
+NEG = -1e30
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di = int(cfg.proj_factor * d)
+    H, hd = cfg.num_heads, max(1, di // cfg.num_heads)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, di), dtype=dtype),       # mixer input
+        "w_gate": dense_init(ks[1], (d, di), dtype=dtype),     # output gate z
+        "wq": dense_init(ks[2], (di, H, hd), dtype=dtype),
+        "wk": dense_init(ks[3], (di, H, hd), dtype=dtype),
+        "wv": dense_init(ks[4], (di, H, hd), dtype=dtype),
+        "w_if": dense_init(ks[5], (di, H, 2), dtype=jnp.float32),  # i,f gates
+        "ln_out": jnp.zeros((di,), dtype),
+        "w_down": dense_init(ks[6], (di, d), dtype=dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # [B, H, dk, dv] matrix memory
+    n: jax.Array   # [B, H, dk]     normalizer
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MLSTMState:
+    di = int(cfg.proj_factor * cfg.d_model)
+    H, hd = cfg.num_heads, max(1, di // cfg.num_heads)
+    return MLSTMState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+    )
+
+
+def _qkv_gates(params, cfg, xm):
+    q = jnp.einsum("btd,dhk->bthk", xm, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", xm, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", xm, params["wv"])
+    gates = jnp.einsum("btd,dhg->bthg", xm.astype(jnp.float32), params["w_if"])
+    li = jax.nn.log_sigmoid(gates[..., 0])  # [B,T,H] log input gate (<= 0)
+    lf = jax.nn.log_sigmoid(gates[..., 1])  # [B,T,H] log forget gate (<= 0)
+    return q, k, v, li, lf
+
+
+def mlstm_chunkwise(params, cfg: ModelConfig, x: jax.Array,
+                    state: MLSTMState | None = None
+                    ) -> Tuple[jax.Array, MLSTMState]:
+    """Train/prefill path: chunk-parallel over [B, T, d]."""
+    B, T, d = x.shape
+    L = min(cfg.mlstm_chunk, T)
+    xm = jnp.einsum("btd,de->bte", x, params["w_up"])
+    z = jnp.einsum("btd,de->bte", x, params["w_gate"])
+    q, k, v, li, lf = _qkv_gates(params, cfg, xm)
+    T_orig = T
+    pad = (-T) % L
+    if pad:
+        # ragged tail: padded steps carry f=1 (log 0), i=0 (log -inf) so the
+        # state passes through unchanged and padded outputs are dropped.
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+        T = T + pad
+    nC = T // L
+    H, hd = q.shape[2], q.shape[3]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    def split(a):  # [B,T,...] -> [nC, B, L, ...]
+        return a.reshape(B, nC, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    qs, ks_, vs = split(q), split(k), split(v)
+    lis, lfs = split(li), split(lf)
+
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+
+    tri = jnp.tril(jnp.ones((L, L), jnp.float32))           # i >= j
+    idx = jnp.arange(L)
+
+    def chunk_body(carry, blk):
+        C, n = carry                                         # [B,H,dk,dv], [B,H,dk]
+        qc, kc, vc, lic, lfc = blk                           # [B,L,H,*]
+        b = jnp.cumsum(lfc, axis=1)                          # [B,L,H] log decay
+        qf = qc.astype(jnp.float32) * scale
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        # inter-chunk: exp(b_i) * q_i @ C_prev
+        inter = jnp.einsum("blhk,bhkv->blhv", qf * jnp.exp(b)[..., None], C)
+        n_inter = jnp.exp(b)[..., None] * n[:, None]         # [B,L,H,dk]
+        # intra-chunk decay D_ij = exp(b_i - b_j + li_j), i >= j
+        logD = (b[:, :, None] - b[:, None, :] + lic[:, None, :, :])  # [B,L(i),L(j),H]
+        D = jnp.exp(jnp.where(tri[None, :, :, None] > 0, logD, NEG))
+        S = jnp.einsum("blhk,bmhk->blmh", qf, kf) * D        # [B,L,L,H]
+        intra = jnp.einsum("blmh,bmhv->blhv", S, vf)
+        n_intra = jnp.einsum("blmh,bmhk->blhk", D, kf)
+        # combine + normalize
+        num = inter + intra
+        nn = n_inter + n_intra
+        denom = jnp.abs(jnp.einsum("blhk,blhk->blh", qf, nn))
+        h = num / jnp.maximum(denom, 1.0)[..., None]         # [B,L,H,dv]
+        # state update to chunk end
+        decay_end = jnp.exp(b[:, -1])                        # [B,H]
+        w_j = jnp.exp(b[:, -1][:, None] - b + lic)           # [B,L,H]
+        C_new = decay_end[..., None, None] * C + jnp.einsum(
+            "blhk,blhv->bhkv", kf * w_j[..., None], vf)
+        n_new = decay_end[..., None] * n + jnp.einsum(
+            "blh,blhk->bhk", w_j, kf)
+        return (C_new, n_new), h
+
+    (C, n), hs = jax.lax.scan(chunk_body, (state.C, state.n),
+                              (qs, ks_, vs, lis, lfs))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, T, H * hd)[:, :T_orig]  # [B,T,di]
+    h = rms_norm(h, params["ln_out"], cfg.norm_eps)
+    out = h.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", out, params["w_down"]), MLSTMState(C, n)
+
+
+def mlstm_decode(params, cfg: ModelConfig, x: jax.Array,
+                 state: MLSTMState) -> Tuple[jax.Array, MLSTMState]:
+    """Recurrent single/multi-token step (the step-exact reference)."""
+    B, T, d = x.shape
+    xm = jnp.einsum("btd,de->bte", x, params["w_up"])
+    z = jnp.einsum("btd,de->bte", x, params["w_gate"])
+    q, k, v, li, lf = _qkv_gates(params, cfg, xm)
+    H, hd = q.shape[2], q.shape[3]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    def step(carry, t):
+        C, n = carry
+        qt = q[:, t].astype(jnp.float32) * scale             # [B,H,dk]
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        f = jnp.exp(lf[:, t])[..., None]                     # [B,H,1]
+        i = jnp.exp(li[:, t])[..., None]
+        C = f[..., None] * C + i[..., None] * kt[..., :, None] * vt[..., None, :]
+        n = f * n + i * kt
+        denom = jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n))
+        h = jnp.einsum("bhk,bhkv->bhv", qt, C) / jnp.maximum(denom, 1.0)[..., None]
+        return (C, n), h
+
+    (C, n), hs = jax.lax.scan(step, (state.C, state.n), jnp.arange(T))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, H * hd)
+    h = rms_norm(h, params["ln_out"], cfg.norm_eps)
+    out = h.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", out, params["w_down"]), MLSTMState(C, n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H, hd = cfg.num_heads, d // cfg.num_heads
+    ks = jax.random.split(key, 3)
+    wx = dense_init(ks[0], (d, H, 4 * hd), dtype=dtype)     # z,i,f,o inputs
+    wr = dense_init(ks[1], (H, hd, 4 * hd), in_axis=1, dtype=dtype)  # recurrent
+    return {
+        "wx_s": wx,
+        "wr": wr,
+        "b": jnp.zeros((H, 4 * hd), jnp.float32),
+        "ln_out": jnp.zeros((d,), dtype),
+        "w_down": dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B,H,hd]
+    n: jax.Array   # [B,H,hd]
+    m: jax.Array   # [B,H,hd] stabilizer
+    h: jax.Array   # [B,H,hd]
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    H, hd = cfg.num_heads, cfg.d_model // cfg.num_heads
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(z, z, jnp.full_like(z, -1e30), z)
+
+
+def slstm(params, cfg: ModelConfig, x: jax.Array,
+          state: SLSTMState | None = None) -> Tuple[jax.Array, SLSTMState]:
+    """Sequential sLSTM over [B, T, d] (xLSTM exp-gating with m stabilizer)."""
+    B, T, d = x.shape
+    H, hd = cfg.num_heads, d // cfg.num_heads
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    xproj = jnp.einsum("btd,dhg->bthg", x, params["wx_s"]).astype(jnp.float32)
+
+    def step(carry, t):
+        c, n, m, h = carry
+        rec = jnp.einsum("bhk,hkg->bhg", h, params["wr"].astype(jnp.float32))
+        g = xproj[:, t] + rec + params["b"]
+        zt, it, ft, ot = jnp.split(g, 4, axis=-1)            # each [B,H,hd]
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)                      # stabilizer
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    carry, hs = jax.lax.scan(step, tuple(state), jnp.arange(T))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, d)
+    h = rms_norm(h, params["ln_out"], cfg.norm_eps).astype(x.dtype)
+    return jnp.einsum("btd,de->bte", h, params["w_down"]), SLSTMState(*carry)

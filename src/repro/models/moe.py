@@ -1,0 +1,159 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bucketed sparse dispatch
+(+ optional shared experts, DeepSeekMoE-style fine-grained experts).
+
+Dispatch strategy (TPU/EP-aware): tokens are flattened, argsorted by expert
+assignment, scattered into per-expert capacity buckets ``[E, C, d]``, run
+through a single batched expert einsum (E shardable over the ``model`` axis =
+expert parallelism), and combined back with router weights.  All shapes are
+static; overflow beyond capacity drops tokens (GShard-style) with the
+capacity factor sized so drops are rare.  FLOPs scale with active experts,
+keeping the MODEL_FLOPS/HLO_FLOPS roofline ratio honest for MoE archs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import constrain_batch, dense_init
+from repro.models.mlp import init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=jnp.float32),  # router in f32
+        "wg": dense_init(ks[1], (E, d, f), in_axis=1, dtype=dtype),
+        "wu": dense_init(ks[2], (E, d, f), in_axis=1, dtype=dtype),
+        "wd": dense_init(ks[3], (E, f, d), in_axis=1, dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, dtype=dtype,
+                               d_ff=cfg.d_ff * cfg.num_shared_experts)
+    return p
+
+
+def moe(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_dispatch == "grouped":
+        return moe_grouped(params, cfg, x)
+    return moe_global(params, cfg, x)
+
+
+def moe_global(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out [B,T,d], aux_loss (load-balance)).
+
+    Baseline dispatch: one global argsort over all B*T*k assignments.  Under
+    GSPMD with tokens data-sharded this forces the capacity buckets to be
+    assembled with full-array all-reduces (34 GB/layer for granite-moe at
+    train_4k — see EXPERIMENTS.md §Perf); ``moe_grouped`` is the fix."""
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    N = B * T
+    xf = x.reshape(N, d)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                 # [N, k]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch): E * sum(frac_tokens * frac_probs)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (N * k)
+    aux = E * jnp.sum(me * ce)
+
+    # --- capacity-bucketed dispatch -------------------------------------
+    # dropless floor for small token pools (decode steps, tests): capacity
+    # min(N*k, 128) guarantees no drops when N is small, while the capacity-
+    # factor term dominates (and bounds memory) for training-size pools.
+    C = max(1, int(cfg.moe_capacity_factor * N * k / E), min(N * k, 128))
+    flat_e = gate_idx.reshape(-1)                                  # [N*k]
+    order = jnp.argsort(flat_e)                                    # stable
+    sorted_e = flat_e[order]
+    # rank within expert = position - first position of that expert
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(N * k) - first
+    dest = jnp.where(rank < C, sorted_e * C + rank, E * C)         # E*C = drop
+    tok = order // k                                               # source token
+    buckets = jnp.zeros((E * C, d), x.dtype).at[dest].set(xf[tok], mode="drop")
+    be = buckets.reshape(E, C, d)
+
+    # --- expert compute (E shardable over the model axis = EP) ----------
+    act = jax.nn.gelu if cfg.act in ("gelu", "geglu") else jax.nn.silu
+    g = act(jnp.einsum("ecd,edf->ecf", be, params["wg"]))
+    u = jnp.einsum("ecd,edf->ecf", be, params["wu"])
+    eo = jnp.einsum("ecf,efd->ecd", g * u, params["wd"]).reshape(E * C, d)
+
+    # --- combine ---------------------------------------------------------
+    w = gate_vals.reshape(-1)[order]                               # weight per slot
+    gathered = eo[jnp.minimum(dest, E * C - 1)]                    # [N*k, d]
+    keep = (dest < E * C)[:, None]
+    contrib = jnp.where(keep, gathered * w[:, None].astype(x.dtype), 0)
+    out = jnp.zeros((N, d), x.dtype).at[tok].add(contrib)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(params["shared"], cfg, x).reshape(N, d)
+    return out.reshape(B, T, d), aux
+
+
+def moe_grouped(params, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-sequence (grouped) dispatch — the GSPMD-friendly formulation.
+
+    Routing, sort, rank and capacity are computed independently per batch row
+    (group); every dispatch op then carries the batch dim, so GSPMD keeps
+    buckets sharded on the data axes end-to-end and the expert einsum runs
+    with buckets data-sharded x experts model-sharded — no bucket all-reduce.
+    Capacity is per-group (cf * T * k / E), so the drop behaviour matches the
+    global formulation in distribution."""
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    # materialize the residual stream HERE: if x arrives model-partial (from
+    # a row-parallel projection) the psum must happen on [B,T,d] — deferring
+    # it into the dispatch gathers costs k x the bytes (measured 8x, §Perf b4)
+    x = constrain_batch(x)
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                 # [B, T, k]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (B * T * k)
+    aux = E * jnp.sum(me * ce)
+
+    C = max(1, int(cfg.moe_capacity_factor * T * k / E), min(T * k, 128))
+    flat_e = gate_idx.reshape(B, T * k)                            # per group
+    order = jnp.argsort(flat_e, axis=1)                            # [B, T*k]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, se, side="left"))(sorted_e)
+    rank = jnp.arange(T * k)[None, :] - first
+    dest = jnp.where(rank < C, sorted_e * C + rank, E * C)         # E*C = drop
+    tok = order // k                                               # [B, T*k]
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T * k))
+    xg = constrain_batch(jnp.take_along_axis(x, tok[..., None], axis=1))
+    buckets = jnp.zeros((B, E * C, d), x.dtype).at[bidx, dest].set(
+        xg, mode="drop")
+    # pin the dispatch to batch-DP: without this GSPMD reshards the buckets
+    # and implements the gathers/scatters with full-array all-reduces
+    buckets = constrain_batch(buckets)
+    be = buckets.reshape(B, E, C, d)
+
+    act = jax.nn.gelu if cfg.act in ("gelu", "geglu") else jax.nn.silu
+    g = act(jnp.einsum("becd,edf->becf", be, params["wg"]))
+    u = jnp.einsum("becd,edf->becf", be, params["wu"])
+    eo = jnp.einsum("becf,efd->becd", g * u, params["wd"]).reshape(B, E * C, d)
+    eo = constrain_batch(eo)
+
+    w = jnp.take_along_axis(gate_vals.reshape(B, T * k), order, axis=1)
+    gathered = jnp.take_along_axis(eo, jnp.minimum(dest, E * C - 1)[..., None],
+                                   axis=1)                         # [B, T*k, d]
+    keep = (dest < E * C)[..., None]
+    contrib = jnp.where(keep, gathered * w[..., None].astype(x.dtype), 0)
+    out = jnp.zeros((B, T, d), x.dtype).at[bidx, tok].add(contrib)
+    out = constrain_batch(out)
+
+    if cfg.num_shared_experts:
+        out = out + mlp(params["shared"], cfg, x)
+    return out, aux

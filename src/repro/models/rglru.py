@@ -1,0 +1,121 @@
+"""Griffin/RecurrentGemma recurrent block: linear proj -> causal depthwise
+conv1d -> RG-LRU -> gated output.
+
+RG-LRU: per-channel gated linear recurrence
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence —
+O(log T) depth, sub-quadratic, which is what qualifies recurrentgemma for the
+``long_500k`` shape.  Decode is an O(1) step carrying (h, conv window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+LRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c*softplus ~ uniform decay in [0.9, 0.999]
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / LRU_C))  # softplus^-1(-log u / c)
+    return {
+        "w_in": dense_init(ks[0], (d, w), dtype=dtype),
+        "w_gate": dense_init(ks[1], (d, w), dtype=dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": dense_init(ks[3], (w, w), dtype=jnp.float32),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": dense_init(ks[5], (w, w), dtype=jnp.float32),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 7), (w, d), dtype=dtype),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array      # [B, w] recurrent state
+    conv: jax.Array   # [B, conv_width-1, w] trailing conv inputs
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> RGLRUState:
+    w = cfg.rnn_width or cfg.d_model
+    return RGLRUState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    )
+
+
+def _conv1d(params, cfg, u, conv_state=None):
+    """Causal depthwise conv via shifted adds; returns (out, new_state)."""
+    W = cfg.conv_width
+    cw = params["conv_w"]                    # [W, w]
+    if conv_state is None:
+        hist = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    out = sum(
+        hist[:, W - 1 - j : hist.shape[1] - j] * cw[W - 1 - j]
+        for j in range(W)
+    ) + params["conv_b"]
+    new_state = hist[:, -(W - 1):].astype(jnp.float32)
+    return out, new_state
+
+
+def _gates(params, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["wa"] + params["ba"])
+    i = jax.nn.sigmoid(uf @ params["wx"] + params["bx"])
+    log_a = -LRU_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 0.0)) * (i * uf)
+    return a, b
+
+
+def rglru(params, cfg: ModelConfig, x: jax.Array,
+          state: RGLRUState | None = None) -> Tuple[jax.Array, RGLRUState]:
+    """[B, T, d] -> [B, T, d]; associative-scan train path."""
+    B, T, d = x.shape
+    u = jnp.einsum("btd,dw->btw", x, params["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_gate"]))
+    u, conv_new = _conv1d(params, cfg, u, None if state is None else state.conv)
+    a, b = _gates(params, u)                                  # [B,T,w] f32
+    if state is not None:
+        # fold carried state into the first step: h_0' = a_0*h_prev + b_0
+        b = b.at[:, 0].add(a[:, 0] * state.h)
+
+    def combine(x1, x2):
+        a1, b1 = x1
+        a2, b2 = x2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = jnp.einsum("btw,wd->btd", (h * gate.astype(jnp.float32)).astype(x.dtype),
+                     params["w_out"])
+    return out, RGLRUState(h=h[:, -1], conv=conv_new)
+
+
+def rglru_decode(params, cfg: ModelConfig, x: jax.Array,
+                 state: RGLRUState) -> Tuple[jax.Array, RGLRUState]:
+    """O(1) per-token decode step ([B, 1, d])."""
+    u = jnp.einsum("btd,dw->btw", x, params["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_gate"]))
+    u, conv_new = _conv1d(params, cfg, u, state.conv)
+    a, b = _gates(params, u)                                  # [B,1,w]
+    h = a[:, 0] * state.h + b[:, 0]
+    out = jnp.einsum("btw,wd->btd",
+                     (h[:, None] * gate.astype(jnp.float32)).astype(x.dtype),
+                     params["w_out"])
+    return out, RGLRUState(h=h, conv=conv_new)

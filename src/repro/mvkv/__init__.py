@@ -1,0 +1,1 @@
+from repro.mvkv import paged  # noqa

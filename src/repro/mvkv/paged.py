@@ -1,0 +1,188 @@
+"""Multiversioned paged KV cache: COW page tables over a shared page pool.
+
+The missing piece between the descriptor store (`core.mvgc.vstore`) and the
+attention kernels (`kernels.decode_attention`): KV lives in fixed-size pages
+in a pool; each sequence's **page table is a versioned object** — decode
+steps that fill a page (or fork a sequence) write a *new page-table version*;
+snapshot readers resolve their pinned timestamp to a page-table version via
+``vstore.snapshot_read`` and attend over exactly the pages visible then.
+A page is recycled only when no reachable page-table version references it —
+computed with the same reachability sweep the paper's GC uses.
+
+Everything is fixed-shape and jit-friendly: page tables live in a dense
+``tables[MAX_VERSIONS, MP]`` array indexed by the descriptor payloads; the
+free pool is a bitmap with ranked-hole allocation (same trick as the retire
+ring).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mvgc import vstore
+from repro.core.mvgc.pool import EMPTY
+
+NO_PAGE = jnp.int32(-1)
+
+
+class PagedKV(NamedTuple):
+    k_pages: jax.Array     # [N, PS, Hkv, D] page pool
+    v_pages: jax.Array     # [N, PS, Hkv, D]
+    free: jax.Array        # bool[N]  (True = free)
+    tables: jax.Array      # i32[MAX_VER, MP] page-table versions (NO_PAGE pad)
+    table_free: jax.Array  # bool[MAX_VER] free page-table slots
+    lengths: jax.Array     # i32[MAX_VER] tokens covered by each table version
+    mv: vstore.MVState     # descriptor store: slot=sequence, payload=table idx
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[1]
+
+    @property
+    def max_pages(self) -> int:
+        return self.tables.shape[1]
+
+
+def make_paged_kv(num_seqs: int, num_pages: int, page_size: int,
+                  max_pages_per_seq: int, kv_heads: int, head_dim: int,
+                  versions_per_seq: int = 8, reader_lanes: int = 8,
+                  dtype=jnp.bfloat16) -> PagedKV:
+    max_ver = num_seqs * versions_per_seq
+    return PagedKV(
+        k_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
+        v_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
+        free=jnp.ones((num_pages,), bool),
+        tables=jnp.full((max_ver, max_pages_per_seq), NO_PAGE, jnp.int32),
+        table_free=jnp.ones((max_ver,), bool),
+        lengths=jnp.zeros((max_ver,), jnp.int32),
+        mv=vstore.make_state(num_seqs, versions_per_seq, reader_lanes,
+                             ring_capacity=max(16, num_seqs * 2)),
+    )
+
+
+def _alloc(free: jax.Array, want: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-match allocation: want[i] lanes get the i-th free slot.
+    Returns (new_free, slot_ids[K] (=len(want) with -1 fails), ok[K])."""
+    n = free.shape[0]
+    pos = jnp.sort(jnp.where(free, jnp.arange(n, dtype=jnp.int32), n))
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    ok = want & (rank < free.sum())
+    slots = jnp.where(ok, pos[jnp.minimum(rank, n - 1)], -1)
+    new_free = free.at[jnp.where(ok, slots, n)].set(False, mode="drop")
+    return new_free, slots, ok
+
+
+def append_tokens(
+    st: PagedKV,
+    seq_ids: jax.Array,    # i32[B] sequences receiving one token each
+    k_new: jax.Array,      # [B, Hkv, D]
+    v_new: jax.Array,      # [B, Hkv, D]
+    mask: jax.Array,       # bool[B]
+    gc_policy: str = "slrt",
+) -> Tuple[PagedKV, jax.Array]:
+    """One decode step: write each sequence's token into its current page,
+    allocating a fresh page (and a new page-table version) at page
+    boundaries.  Returns (state', overflow[B]).
+
+    COW discipline: page-table versions are immutable; only the *partial last
+    page* is written in place, which is safe because every snapshot's visible
+    length caps what readers consume from it."""
+    PS = st.page_size
+    MP = st.max_pages
+    B = seq_ids.shape[0]
+
+    cur_tbl, has = vstore.current_read(st.mv, seq_ids)        # i32[B]
+    cur_tbl_safe = jnp.where(has, cur_tbl, 0)
+    lengths = jnp.where(has, st.lengths[cur_tbl_safe], 0)     # i32[B]
+    page_idx = lengths // PS
+    off = lengths % PS
+    needs_page = (off == 0) & mask                             # new page needed
+
+    # allocate pages for boundary lanes
+    new_free, pages, got_page = _alloc(st.free, needs_page)
+    page_of = jnp.where(
+        needs_page, pages,
+        st.tables[cur_tbl_safe, jnp.minimum(page_idx, MP - 1)])
+    ok = mask & jnp.where(needs_page, got_page, page_of >= 0) & (page_idx < MP)
+
+    # write the token into (page_of, off)
+    dest_page = jnp.where(ok, page_of, st.k_pages.shape[0])   # OOB = drop
+    k_pages = st.k_pages.at[dest_page, off].set(
+        k_new.astype(st.k_pages.dtype), mode="drop")
+    v_pages = st.v_pages.at[dest_page, off].set(
+        v_new.astype(st.v_pages.dtype), mode="drop")
+
+    # page-boundary lanes commit a NEW page-table version (COW)
+    tf, tslots, got_tbl = _alloc(st.table_free, needs_page & ok)
+    commit = needs_page & ok & got_tbl
+    old_rows = st.tables[cur_tbl_safe]                        # [B, MP]
+    new_rows = old_rows.at[jnp.arange(B), jnp.minimum(page_idx, MP - 1)].set(
+        jnp.where(commit, page_of, old_rows[jnp.arange(B),
+                                            jnp.minimum(page_idx, MP - 1)]))
+    tdest = jnp.where(commit, tslots, st.tables.shape[0])
+    tables = st.tables.at[tdest].set(new_rows, mode="drop")
+    table_free = tf
+
+    # lengths: every ok lane advances by 1; table versions own their length
+    new_len = lengths + ok.astype(jnp.int32)
+    ver_ref = jnp.where(commit, tslots, cur_tbl_safe)
+    lengths_arr = st.lengths.at[jnp.where(ok, ver_ref, st.lengths.shape[0])].set(
+        new_len, mode="drop")
+
+    # descriptor write: new version (payload = table slot) for commit lanes;
+    # in-place length bump lanes keep their current descriptor version
+    mv, freed, ovf = vstore.write_step(
+        st.mv, seq_ids, ver_ref, commit, policy=gc_policy)
+    mv, freed2 = vstore.gc_step(mv, policy=gc_policy)
+    freed_all = jnp.concatenate([freed.reshape(-1), freed2.reshape(-1)])
+
+    # recycle table slots whose descriptor versions were collected, then
+    # recycle pages unreachable from any live table version
+    table_free = table_free.at[
+        jnp.where(freed_all != EMPTY, freed_all, table_free.shape[0])
+    ].set(True, mode="drop")
+    free_pages = _sweep_unreferenced(tables, table_free, new_free)
+
+    st2 = PagedKV(k_pages, v_pages, free_pages, tables, table_free,
+                  lengths_arr, mv)
+    return st2, mask & ~ok
+
+
+def _sweep_unreferenced(tables, table_free, page_free) -> jax.Array:
+    """A page is live iff referenced by any live table version — the paper's
+    reachability sweep at page granularity (one scatter, no traversal)."""
+    n_pages = page_free.shape[0]
+    live_refs = jnp.where(table_free[:, None], NO_PAGE, tables).reshape(-1)
+    referenced = jnp.zeros((n_pages,), bool).at[
+        jnp.where(live_refs >= 0, live_refs, n_pages)
+    ].set(True, mode="drop")
+    return ~referenced
+
+
+def snapshot_view(st: PagedKV, seq_ids: jax.Array, t: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Resolve a pinned timestamp to (page_table[B, MP], lengths[B]) — the
+    rtx read: feed straight into kernels.decode_attention.paged_decode."""
+    tbl_idx, found = vstore.snapshot_read(st.mv, seq_ids, t)
+    tbl_safe = jnp.where(found, tbl_idx, 0)
+    tables = jnp.where(found[:, None], st.tables[tbl_safe], NO_PAGE)
+    # visible length is capped at the snapshot's table version
+    lengths = jnp.where(found, st.lengths[tbl_safe], 0)
+    return tables, lengths
+
+
+def begin_snapshot(st: PagedKV, lane: jax.Array) -> Tuple[PagedKV, jax.Array]:
+    mv, ts = vstore.begin_snapshot(st.mv, jnp.atleast_1d(lane),
+                                   jnp.array([True]))
+    return st._replace(mv=mv), ts[0]
+
+
+def end_snapshot(st: PagedKV, lane: jax.Array) -> PagedKV:
+    mv = vstore.end_snapshot(st.mv, jnp.atleast_1d(lane), jnp.array([True]))
+    return st._replace(mv=mv)
+
+
+def live_pages(st: PagedKV) -> jax.Array:
+    return (~st.free).sum()

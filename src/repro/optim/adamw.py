@@ -1,0 +1,71 @@
+"""AdamW with global-norm clipping — functional, pytree-based, shardable
+(optimizer state inherits parameter shardings; FSDP shards it too)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any       # first moment (pytree like params)
+    nu: Any       # second moment
+
+
+def init(params) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.int32(0),
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9)) if grad_clip else 1.0
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {"grad_norm": gnorm}
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int = 100,
+                    total: int = 10_000, min_frac: float = 0.1):
+    stepf = step.astype(jnp.float32)
+    warm = stepf / max(1, warmup)
+    prog = jnp.clip((stepf - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(stepf < warmup, warm, cos)

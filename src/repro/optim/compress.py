@@ -1,0 +1,49 @@
+"""Int8 error-feedback gradient compression.
+
+Distributed-optimization trick for cross-pod all-reduce: gradients are
+quantized to int8 with a per-tensor scale before the (slow, DCN-bound)
+``pod``-axis reduction, and the quantization error is fed back into the next
+step's gradient (error feedback preserves convergence; Karimireddy et al.).
+Intra-pod (ICI) reductions stay full-precision — only the inter-pod hop pays
+the 4x byte reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """Returns (quantized, scales, new_error).  error is carried state with
+    the same structure as grads (zeros initially)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return q, s, corrected - deq
+
+    out = jax.tree.map(one, grads, error)
+    istuple = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=istuple),
+            jax.tree.map(lambda t: t[1], out, is_leaf=istuple),
+            jax.tree.map(lambda t: t[2], out, is_leaf=istuple))
+
+
+def decompress_tree(qs: Any, scales: Any) -> Any:
+    return jax.tree.map(dequantize, qs, scales)
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,171 @@
+"""MV-Serve: the multiversioned serving engine.
+
+The paper's workload shape — frequent updates + long read-only transactions —
+maps onto serving as:
+
+* **updates**: every decode step advances each sequence's *cache descriptor*
+  (a versioned CAS object holding the visible cache length; with the paged
+  backend, the page table).  One version per step, timestamped by the global
+  decode clock — `vstore.write_step`.
+* **rtxs**: scoring passes, speculative-branch evaluation, and prefix-cache
+  lookups pin a timestamp (`begin_snapshot`) and read a *consistent
+  cross-sequence snapshot* of descriptors (`snapshot_read` = the paper's
+  ``search(t)``), attending only over each sequence's prefix as of the pinned
+  step — while decode keeps writing.
+* **MVGC**: obsolete descriptor versions are reclaimed by the configured
+  policy (SL-RT by default); Theorem 1's bound means descriptor space is
+  O(pinned snapshots + lanes log lanes), never O(steps).
+
+The descriptor store is tiny next to the KV pages it governs — but it is what
+*pins pages*: a page can be recycled only when no reachable descriptor
+version references it.  `freed_pages()` exposes exactly the handles whose
+last referencing version was collected, closing the loop to the page
+allocator.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core.mvgc import vstore
+from repro.core.mvgc.pool import EMPTY
+from repro.models import transformer as tf
+
+
+class ServeState(NamedTuple):
+    params: Any
+    cache: Any
+    cache_len: jax.Array      # i32[B]
+    mv: vstore.MVState        # versioned cache descriptors (1 slot / sequence)
+    last_tokens: jax.Array    # i32[B, 1]
+
+
+def make_serve_state(cfg: ModelConfig, run: RunConfig, params, batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> ServeState:
+    cache = tf.init_cache(cfg, batch, max_len, dtype)
+    mv = vstore.make_state(
+        num_slots=batch,
+        versions_per_slot=run.versions_per_slot,
+        num_reader_lanes=run.reader_lanes,
+        ring_capacity=max(16, batch * 2),
+    )
+    return ServeState(
+        params=params,
+        cache=cache,
+        cache_len=jnp.zeros((batch,), jnp.int32),
+        mv=mv,
+        last_tokens=jnp.zeros((batch, 1), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# core steps (pure; jit these)
+# ---------------------------------------------------------------------------
+def prefill_step(state: ServeState, cfg: ModelConfig, run: RunConfig,
+                 tokens: jax.Array,
+                 frontend_embeds: Optional[jax.Array] = None) -> ServeState:
+    logits, cache, lens = tf.prefill(state.params, cfg, tokens, state.cache,
+                                     frontend_embeds=frontend_embeds)
+    B = tokens.shape[0]
+    ids = jnp.arange(B, dtype=jnp.int32)
+    mv, _, _ = vstore.write_step(
+        state.mv, ids, lens, jnp.ones((B,), bool), policy=run.gc_policy)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return ServeState(state.params, cache, lens, mv, nxt)
+
+
+def decode_one(state: ServeState, cfg: ModelConfig, run: RunConfig,
+               enc_out: Optional[jax.Array] = None
+               ) -> Tuple[ServeState, jax.Array, jax.Array]:
+    """One greedy decode step for the whole batch.  Returns
+    (state', new_tokens[B,1], freed_descriptor_payloads)."""
+    logits, cache = tf.decode_step(state.params, cfg, state.last_tokens,
+                                   state.cache, state.cache_len,
+                                   enc_out=enc_out)
+    new_len = state.cache_len + 1
+    B = new_len.shape[0]
+    ids = jnp.arange(B, dtype=jnp.int32)
+    # the update: a new descriptor version (visible length) per sequence
+    mv, freed_w, _ = vstore.write_step(
+        state.mv, ids, new_len, jnp.ones((B,), bool), policy=run.gc_policy)
+    mv, freed_g = vstore.gc_step(mv, policy=run.gc_policy)
+    freed = jnp.concatenate([freed_w.reshape(-1), freed_g.reshape(-1)])
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return ServeState(state.params, cache, new_len, mv, nxt), nxt, freed
+
+
+# ---------------------------------------------------------------------------
+# snapshot (rtx) interface
+# ---------------------------------------------------------------------------
+def begin_snapshot(state: ServeState, lane: jax.Array
+                   ) -> Tuple[ServeState, jax.Array]:
+    mv, ts = vstore.begin_snapshot(
+        state.mv, jnp.atleast_1d(lane), jnp.array([True]))
+    return state._replace(mv=mv), ts[0]
+
+
+def end_snapshot(state: ServeState, lane: jax.Array) -> ServeState:
+    mv = vstore.end_snapshot(state.mv, jnp.atleast_1d(lane), jnp.array([True]))
+    return state._replace(mv=mv)
+
+
+def snapshot_lengths(state: ServeState, t: jax.Array,
+                     seq_ids: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Consistent cross-sequence snapshot: each sequence's visible length as
+    of pinned time t (the paper's rtx over many vCAS objects)."""
+    if seq_ids is None:
+        seq_ids = jnp.arange(state.cache_len.shape[0], dtype=jnp.int32)
+    return vstore.snapshot_read(state.mv, seq_ids, t)
+
+
+def snapshot_score(state: ServeState, cfg: ModelConfig, tokens: jax.Array,
+                   t: jax.Array) -> jax.Array:
+    """Score candidate tokens against the snapshot at t: attention masks use
+    the snapshot lengths, so the result is atomic w.r.t. ongoing decodes."""
+    lens, found = snapshot_lengths(state, t)
+    lens = jnp.where(found, lens, 0)
+    logits, _ = tf.decode_step(state.params, cfg, tokens, state.cache, lens)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# host-side engine wrapper
+# ---------------------------------------------------------------------------
+class MVServeEngine:
+    """Orchestrates jitted prefill/decode/GC with the MVGC policy, and
+    exposes the space report the benchmarks track."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, params, batch: int,
+                 max_len: int, dtype=jnp.float32):
+        self.cfg, self.run = cfg, run
+        self.state = make_serve_state(cfg, run, params, batch, max_len, dtype)
+        self._decode = jax.jit(
+            functools.partial(decode_one, cfg=cfg, run=run))
+        self._prefill = jax.jit(
+            functools.partial(prefill_step, cfg=cfg, run=run))
+
+    def prefill(self, tokens: jax.Array) -> None:
+        self.state = self._prefill(self.state, tokens=tokens)
+
+    def step(self) -> jax.Array:
+        self.state, toks, _ = self._decode(self.state)
+        return toks
+
+    def pin(self, lane: int) -> int:
+        self.state, ts = begin_snapshot(self.state, jnp.int32(lane))
+        return int(ts)
+
+    def unpin(self, lane: int) -> None:
+        self.state = end_snapshot(self.state, jnp.int32(lane))
+
+    def lengths_at(self, t: int) -> jax.Array:
+        lens, found = snapshot_lengths(self.state, jnp.int32(t))
+        return jnp.where(found, lens, 0)
+
+    def space(self) -> Dict[str, int]:
+        return vstore.space_report(self.state.mv)

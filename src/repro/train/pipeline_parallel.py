@@ -1,0 +1,77 @@
+"""Pipeline parallelism (GPipe-style) over a ``stage`` axis via shard_map +
+collective_permute.
+
+Included as the PP building block of the parallelism menu (DP/TP/PP/EP/SP):
+the stage axis is carved out of the mesh; each stage holds a contiguous slice
+of superblocks; microbatches stream through with ``ppermute`` handoffs.  A
+scan over (num_microbatches + num_stages - 1) ticks realizes the classic
+GPipe schedule (bubble = (S-1)/(M+S-1)); activations for in-flight
+microbatches are the only cross-tick state.
+
+This module is deliberately model-agnostic: it pipelines any per-stage
+``apply_fn(stage_params, x) -> x``.  The dry-run exercises it via
+``--pp`` on a (pp, data, model) mesh reshape; tests validate equivalence to
+the unpipelined forward on CPU with 4 fake stages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+
+def pipeline_forward(
+    apply_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,        # pytree with leading [S] stage dim (sharded on "stage")
+    x: jax.Array,             # [M, mb, ...] microbatched input (replicated)
+    *,
+    mesh: Mesh,
+    axis: str = "stage",
+) -> jax.Array:
+    """Returns y [M, mb, ...]: x pushed through all S stages in GPipe order."""
+    S = mesh.shape[axis]
+    M = x.shape[0]
+
+    def _local(params_local, x_all):
+        # params_local: stage's own slice (leading dim 1); x_all: full [M, ...]
+        sid = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], params_local)
+        n_ticks = M + S - 1
+        buf = jnp.zeros_like(x_all)                     # outputs (stage S-1)
+        carry = jnp.zeros_like(x_all[0])                # inbound activation
+
+        def tick(t, state):
+            carry, buf = state
+            m = t - sid                                  # microbatch index here
+            # stage 0 ingests fresh microbatches; others use the carry
+            inp = jnp.where(sid == 0,
+                            x_all[jnp.clip(t, 0, M - 1)], carry)
+            active = (m >= 0) & (m < M)
+            out = apply_fn(p, inp)
+            out = jnp.where(active, out, inp)
+            # last stage banks its result; others pass it right
+            buf = jax.lax.cond(
+                (sid == S - 1) & active,
+                lambda b: b.at[jnp.clip(m, 0, M - 1)].set(out),
+                lambda b: b, buf)
+            nxt = jax.lax.ppermute(out, axis,
+                                   [(i, (i + 1) % S) for i in range(S)])
+            return nxt, buf
+
+        _, buf = jax.lax.fori_loop(0, n_ticks, tick, (carry, buf))
+        # only stage S-1's buf holds real outputs; broadcast it
+        buf = jax.lax.psum(
+            jnp.where(sid == S - 1, buf, jnp.zeros_like(buf)), axis)
+        return buf
+
+    fn = shard_map(
+        _local, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(stage_params, x)

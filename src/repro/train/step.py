@@ -1,0 +1,80 @@
+"""Training step: loss -> grads -> AdamW, with microbatch accumulation,
+optional int8 error-feedback compression on the gradient reduction, and
+donated buffers.  Pure function of (params, opt, batch) — the launcher jits
+it with mesh shardings (see launch/train.py, launch/dryrun.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.optim.compress import compress_tree, decompress_tree, init_error
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    err: Any            # error-feedback carry (None-like zeros when unused)
+    step: jax.Array
+
+
+def init_state(cfg: ModelConfig, key, dtype=jnp.float32,
+               compression: bool = False) -> TrainState:
+    params = tf.init_params(cfg, key, dtype=dtype)
+    return TrainState(
+        params=params,
+        opt=adamw.init(params),
+        err=init_error(params) if compression else jax.tree.map(
+            lambda p: jnp.zeros((1,), jnp.float32), params),
+        step=jnp.int32(0),
+    )
+
+
+def train_step(
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    run: RunConfig,
+) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    """One optimizer step.  batch tokens: [global_batch, seq]."""
+    mb = run.microbatches
+
+    def loss_of(params, b):
+        loss, _ = tf.loss_fn(params, cfg, b, remat=(run.remat != "none"))
+        return loss
+
+    if mb > 1:
+        B = batch["tokens"].shape[0]
+        def resh(x):
+            return x.reshape(mb, B // mb, *x.shape[1:])
+        mbatch = jax.tree.map(resh, batch)
+
+        def body(acc, b):
+            loss, g = jax.value_and_grad(loss_of)(state.params, b)
+            return (jax.tree.map(jnp.add, acc[0], g), acc[1] + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state.params)
+        (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), mbatch)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        loss = loss / mb
+    else:
+        loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+
+    err = state.err
+    if run.grad_compression:
+        # int8 + error feedback across the (DCN-bound) reduction boundary
+        q, scales, err = compress_tree(grads, state.err)
+        grads = decompress_tree(q, scales)
+
+    lr = adamw.cosine_schedule(state.opt.step, base_lr=run.lr)
+    params, opt, om = adamw.apply(
+        state.params, grads, state.opt, lr=lr,
+        weight_decay=run.weight_decay, grad_clip=run.grad_clip)
+    new_state = TrainState(params, opt, err, state.step + 1)
+    return new_state, {"loss": loss, "lr": lr, **om}

@@ -1,0 +1,115 @@
+"""Distribution tests that need multiple (fake) devices: run in subprocesses
+with XLA_FLAGS=--xla_force_host_platform_device_count (the main test process
+must keep its single-device view)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_ring_all_reduce_matches_psum():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.overlap import make_ring_all_reduce
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.arange(64.0)
+        fn = make_ring_all_reduce(mesh, "data")
+        with jax.set_mesh(mesh):
+            got = jax.jit(fn)(x)
+        want = np.tile(np.asarray(jnp.arange(64.0)).reshape(8, 8).sum(0), 8)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+        print("ring OK")
+    """)
+
+
+def test_pipeline_parallel_matches_sequential():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.train.pipeline_parallel import pipeline_forward
+        S, M, mb, d = 4, 6, 2, 16
+        mesh = jax.make_mesh((S,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        k = jax.random.PRNGKey(0)
+        ws = jax.random.normal(k, (S, d, d)) * 0.3
+        x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+        apply_fn = lambda w, h: jnp.tanh(h @ w)
+        with jax.set_mesh(mesh):
+            got = pipeline_forward(apply_fn, ws, x, mesh=mesh, axis="stage")
+        want = x
+        for s in range(S):
+            want = jnp.tanh(want @ ws[s])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+        print("pipeline OK")
+    """)
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    """FSDP+TP sharded train step on a 2x2 fake mesh == unsharded result."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, functools
+        from repro.configs import reduced_config
+        from repro.configs.base import RunConfig, SHAPES
+        from repro.dist.sharding import param_shardings, batch_sharding
+        from repro.train.step import init_state, train_step
+        import dataclasses
+
+        cfg = reduced_config("minitron-4b", d_model=64, num_heads=4,
+                             num_kv_heads=4, d_ff=128, vocab_size=256)
+        run = RunConfig(model=cfg, shape=SHAPES["train_4k"], lr=1e-3)
+        state = init_state(cfg, jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((8, 16), jnp.int32)}
+
+        # single device reference
+        s1, m1 = jax.jit(functools.partial(train_step, cfg=cfg, run=run))(
+            state, batch)
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            psh = param_shardings(state.params, mesh, fsdp=True)
+            state_sh = jax.device_put(
+                state, state._replace(
+                    params=psh, opt=state.opt._replace(
+                        step=jax.NamedSharding(mesh, jax.P()),
+                        mu=psh, nu=psh),
+                    err=jax.tree.map(lambda _: jax.NamedSharding(mesh, jax.P()),
+                                     state.err),
+                    step=jax.NamedSharding(mesh, jax.P())))
+            s2, m2 = jax.jit(functools.partial(train_step, cfg=cfg, run=run))(
+                state_sh, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-4)
+        print("sharded train OK", float(m1["loss"]))
+    """, devices=4)
+
+
+@pytest.mark.slow
+def test_dryrun_one_small_cell():
+    """End-to-end dryrun of the smallest cell on the 512-device mesh."""
+    run_sub("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import dryrun_cell
+        rec = dryrun_cell("whisper-tiny", "decode_32k", "pod")
+        assert rec["flops_per_device"] > 0
+        assert rec["memory"]["temp_bytes"] > 0
+        print("dryrun cell OK", rec["flops_per_device"])
+    """, devices=512, timeout=900)

@@ -1,0 +1,57 @@
+"""Grouped vs global MoE dispatch: same routing semantics (modulo capacity
+locality), finite grads, and gate-weighted combine correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.configs import reduced_config
+from repro.models.moe import init_moe, moe_global, moe_grouped
+
+
+@pytest.fixture
+def setup():
+    cfg = reduced_config("deepseek-moe-16b")
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.5
+    return cfg, params, x
+
+
+def test_grouped_matches_global_when_dropless(setup):
+    cfg, params, x = setup
+    # dropless capacities in both formulations at this size
+    out_g, aux_g = moe_global(params, cfg, x)
+    out_p, aux_p = moe_grouped(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_p),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(float(aux_g), float(aux_p), rtol=1e-5)
+
+
+def test_grouped_grads_finite(setup):
+    cfg, params, x = setup
+    g = jax.grad(lambda p: moe_grouped(p, cfg, x)[0].sum())(params)
+    assert all(jnp.isfinite(l).all() for l in jax.tree.leaves(g))
+
+
+def test_grouped_capacity_drops_gracefully(setup):
+    cfg, params, x = setup
+    tight = dataclasses.replace(cfg, moe_capacity_factor=0.1,
+                                moe_dispatch="grouped")
+    # capacity floor keeps small pools dropless; shrink T*k floor via bigger T
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (2, 256, cfg.d_model)) * 0.5
+    out, aux = moe_grouped(params, tight, x2)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_config_dispatch_switch(setup):
+    cfg, params, x = setup
+    from repro.models.moe import moe
+    cfgG = dataclasses.replace(cfg, moe_dispatch="grouped")
+    out1, _ = moe(params, cfg, x)
+    out2, _ = moe(params, cfgG, x)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-5, rtol=1e-4)

@@ -1,0 +1,90 @@
+"""Property tests on Layer-B space invariants: the pool analogue of the
+paper's L-R+P bound, and ring conservation (no version lost or duplicated)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.mvgc import vstore
+from repro.core.mvgc.pool import EMPTY
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_live_versions_bounded_by_needed_plus_buffer(data):
+    """Theorem-1 analogue: live versions <= needed (pinned+current) + ring
+    buffer occupancy, at every step of a random write/pin/gc interleaving."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    S, P = 8, 4
+    # capacity planning per Theorem 1: the ring must hold needed-retired
+    # versions (<= S per pinned reader) plus a flush batch; slabs must cover
+    # the flush threshold (retirees stay slab-resident until flushed) plus
+    # one pinned + one current version
+    B = S * (P + 1) + 16
+    V = B // 2 + P + 2
+    state = vstore.make_state(S, V, P, ring_capacity=B)
+    pins = set()
+    steps = data.draw(st.integers(5, 25))
+    for i in range(steps):
+        k = int(rng.integers(1, 5))
+        slots = rng.choice(S, size=k, replace=False).astype(np.int32)
+        ids = jnp.array(np.pad(slots, (0, 4 - k)), jnp.int32)
+        m = jnp.array([True] * k + [False] * (4 - k))
+        state, _, ovf = vstore.write_step(state, ids,
+                                          jnp.arange(4, dtype=jnp.int32), m)
+        assert not bool(ovf.any()), "slab overflow under SL-RT"
+        if rng.random() < 0.3:
+            lane = int(rng.integers(P))
+            if lane in pins:
+                state = vstore.end_snapshot(
+                    state, jnp.array([lane], jnp.int32), jnp.array([True]))
+                pins.discard(lane)
+            else:
+                state, _ = vstore.begin_snapshot(
+                    state, jnp.array([lane], jnp.int32), jnp.array([True]))
+                pins.add(lane)
+        state, _ = vstore.gc_step(state)
+        live = int(vstore.live_versions(state))
+        # needed <= S current + S per pin; buffered retirees <= ring capacity
+        bound = S * (1 + len(pins)) + B
+        assert live <= bound, f"live {live} > bound {bound} (pins={len(pins)})"
+    assert int(state.dropped_retires) == 0
+
+
+def test_exhaustive_small_schedules_pdl():
+    """Seeded-schedule exploration of a tiny PDL world (machine.explore_schedules):
+    every explored interleaving preserves Invariant 2 and the AL ordering."""
+    from repro.core.sim.machine import explore_schedules
+    from repro.core.sim.pdl import PDL, Node
+
+    def make_world():
+        l = PDL()
+        base = [Node(i * 2, i) for i in range(1, 4)]
+        prev = l.head
+        for n in base:
+            gen = l.tryAppend_steps(prev, n)
+            try:
+                while True:
+                    next(gen)
+            except StopIteration:
+                pass
+            prev = n
+        y = Node(7, "new")
+        ops = [
+            ("remove", lambda n=base[0]: l.remove_steps(n), (base[0],)),
+            ("remove", lambda n=base[1]: l.remove_steps(n), (base[1],)),
+            ("tryAppend", lambda: l.tryAppend_steps(base[2], y), (base[2], y)),
+            ("search", lambda: l.search_steps(4), (4,)),
+        ]
+        return l, ops
+
+    def check(l, sched):
+        l.check_invariant2()
+        l.check_al_sorted()
+        al = l.abstract_list()
+        assert all(n.key not in (2, 4) for n in al[1:])  # removed keys gone
+
+    n = explore_schedules(make_world, check, max_schedules=400, seed=3)
+    assert n == 400

@@ -1,0 +1,267 @@
+"""Layer B (TPU-native bulk-synchronous MVGC) tests.
+
+Includes a *differential* test: the JAX needed(A,t) predicate must agree with
+the Layer-A sim oracle (SSL.needed) on random version histories — the two
+layers implement the same paper definition.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mvgc import announce as ann
+from repro.core.mvgc import pool, rangetracker as rt, vstore
+from repro.core.mvgc.needed import needed_intervals, sort_announcements
+from repro.core.mvgc.pool import EMPTY, TS_MAX
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# pool
+# ---------------------------------------------------------------------------
+class TestPool:
+    def test_write_read_roundtrip(self):
+        s = pool.make_store(8, 4)
+        ids = jnp.array([0, 3, 7], jnp.int32)
+        s, ovf = pool.write(s, ids, jnp.int32(1), jnp.array([10, 11, 12], jnp.int32),
+                            jnp.array([True, True, True]))
+        assert not bool(ovf.any())
+        got, found = pool.read_current(s, ids)
+        assert found.all() and list(got) == [10, 11, 12]
+        # second write closes the first versions
+        s, _ = pool.write(s, ids, jnp.int32(5), jnp.array([20, 21, 22], jnp.int32),
+                          jnp.array([True, True, True]))
+        old, f = pool.read_at(s, ids, jnp.int32(4))
+        assert list(old) == [10, 11, 12] and f.all()
+        new, f = pool.read_at(s, ids, jnp.int32(5))
+        assert list(new) == [20, 21, 22]
+        assert int(pool.occupancy(s).max()) == 2
+
+    def test_overflow_flag(self):
+        s = pool.make_store(2, 2)
+        ids = jnp.array([0], jnp.int32)
+        m = jnp.array([True])
+        for t in range(1, 3):
+            s, ovf = pool.write(s, ids, jnp.int32(t), jnp.array([t], jnp.int32), m)
+            assert not bool(ovf.any())
+        s, ovf = pool.write(s, ids, jnp.int32(3), jnp.array([3], jnp.int32), m)
+        assert bool(ovf.all())
+
+    def test_masked_lanes_do_not_write(self):
+        s = pool.make_store(4, 2)
+        ids = jnp.array([1, 1], jnp.int32)  # duplicate, but second is masked
+        s, _ = pool.write(s, ids, jnp.int32(1), jnp.array([5, 6], jnp.int32),
+                          jnp.array([True, False]))
+        got, found = pool.read_current(s, jnp.array([1], jnp.int32))
+        assert int(got[0]) == 5
+        assert int(pool.occupancy(s)[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# needed(A, t): differential vs Layer-A oracle
+# ---------------------------------------------------------------------------
+@settings(max_examples=100, deadline=None)
+@given(data=st.data())
+def test_needed_matches_sim_oracle(data):
+    from repro.core.sim.ssl_list import SSL, SNode
+
+    n = data.draw(st.integers(1, 12))
+    deltas = data.draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+    ts_list, cur = [], 0
+    for d in deltas:
+        cur += max(1, d)  # bulk-sync layer ticks at least 1 per write
+        ts_list.append(cur)
+    # Layer A oracle list
+    l = SSL()
+    prev = l.head
+    for i, t in enumerate(ts_list):
+        node = SNode(t, i)
+        assert l.try_append(prev, node)
+        prev = node
+    now = cur
+    n_ann = data.draw(st.integers(0, 4))
+    A = sorted(data.draw(st.lists(st.integers(0, cur), min_size=n_ann, max_size=n_ann)))
+
+    # interval representation (succ = next version's ts; TS_MAX for current)
+    succ_list = ts_list[1:] + [int(TS_MAX)]
+    ts_arr = jnp.array(ts_list, jnp.int32)
+    succ_arr = jnp.array(succ_list, jnp.int32)
+    padded = jnp.array(A + [int(TS_MAX)] * (8 - len(A)), jnp.int32)
+    got = needed_intervals(ts_arr, succ_arr, padded, jnp.int32(now))
+
+    for i, node in enumerate(l.added[1:]):
+        expect = l.needed(node, A, now)
+        assert bool(got[i]) == expect, (
+            f"needed mismatch at v{i}: ts={ts_list[i]} succ={succ_list[i]} "
+            f"A={A} now={now}: jax={bool(got[i])} sim={expect}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# retire ring
+# ---------------------------------------------------------------------------
+class TestRing:
+    def test_push_and_flush(self):
+        s = pool.make_store(4, 4)
+        ids = jnp.array([0, 1], jnp.int32)
+        m = jnp.array([True, True])
+        s, _ = pool.write(s, ids, jnp.int32(1), jnp.array([100, 101], jnp.int32), m)
+        s, _ = pool.write(s, ids, jnp.int32(2), jnp.array([200, 201], jnp.int32), m)
+        # versions @ts=1 are retired with interval [1, 2)
+        ring = rt.make_ring(8)
+        flat = ids * 4 + jnp.array([0, 0], jnp.int32)
+        ring, dropped = rt.push(ring, flat, jnp.array([1, 1], jnp.int32),
+                                jnp.array([2, 2], jnp.int32), m)
+        assert not bool(dropped.any())
+        assert int(rt.ring_size(ring)) == 2
+        # nobody announced -> both reclaimed
+        A = sort_announcements(jnp.full((4,), EMPTY, jnp.int32))
+        ring, s, freed = rt.flush(ring, s, A, jnp.int32(2))
+        freed = [int(x) for x in freed if int(x) != int(EMPTY)]
+        assert sorted(freed) == [100, 101]
+        assert int(rt.ring_size(ring)) == 0
+        assert int(pool.occupancy(s).sum()) == 2  # only current versions left
+
+    def test_flush_keeps_pinned(self):
+        s = pool.make_store(2, 4)
+        ids = jnp.array([0], jnp.int32)
+        m = jnp.array([True])
+        s, _ = pool.write(s, ids, jnp.int32(1), jnp.array([100], jnp.int32), m)
+        s, _ = pool.write(s, ids, jnp.int32(5), jnp.array([200], jnp.int32), m)
+        ring = rt.make_ring(4)
+        ring, _ = rt.push(ring, jnp.array([0], jnp.int32), jnp.array([1], jnp.int32),
+                          jnp.array([5], jnp.int32), m)
+        # a reader pinned t=3 in [1, 5) -> version needed
+        A = sort_announcements(jnp.array([3, EMPTY, EMPTY, EMPTY], jnp.int32))
+        ring, s, freed = rt.flush(ring, s, A, jnp.int32(5))
+        assert all(int(x) == int(EMPTY) for x in freed)
+        assert int(rt.ring_size(ring)) == 1
+        got, found = pool.read_at(s, ids, jnp.int32(3))
+        assert bool(found[0]) and int(got[0]) == 100
+
+    def test_ring_overflow_reports_drop(self):
+        ring = rt.make_ring(2)
+        m = jnp.array([True, True, True])
+        ring, dropped = rt.push(
+            ring, jnp.arange(3, dtype=jnp.int32),
+            jnp.arange(3, dtype=jnp.int32), jnp.arange(1, 4, dtype=jnp.int32), m)
+        assert int(dropped.sum()) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end policies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", list(vstore.POLICIES))
+def test_policy_snapshot_correctness(policy):
+    """Randomized end-to-end: writers + pinned snapshot readers; reads at a
+    pinned timestamp must always return the value that was current then,
+    under every policy.  (GC must never free a needed version.)"""
+    rng = random.Random(0)
+    S, V, P = 16, 8, 4
+    state = vstore.make_state(S, V, P, ring_capacity=32)
+    shadow = {}  # slot -> list[(ts, payload)]
+    pins = {}    # lane -> ts
+
+    wstep = jax.jit(lambda st, i, p, m: vstore.write_step(st, i, p, m, policy=policy))
+    gstep = jax.jit(lambda st: vstore.gc_step(st, policy=policy))
+
+    payload_ctr = 1
+    for step in range(60):
+        # random writes (unique slots per step)
+        k = rng.randint(1, 4)
+        slots = rng.sample(range(S), k)
+        pl = list(range(payload_ctr, payload_ctr + k))
+        payload_ctr += k
+        ids = jnp.array(slots + [0] * (4 - k), jnp.int32)
+        pls = jnp.array(pl + [0] * (4 - k), jnp.int32)
+        msk = jnp.array([True] * k + [False] * (4 - k))
+        state, _, ovf = wstep(state, ids, pls, msk)
+        now = int(state.now)
+        for j, (s_, p_) in enumerate(zip(slots, pl)):
+            if not bool(ovf[j]):  # overflowed appends fail visibly (EBR pathology)
+                shadow.setdefault(s_, []).append((now, p_))
+
+        # occasionally pin/unpin a reader lane
+        if rng.random() < 0.3:
+            lane = rng.randrange(P)
+            if lane in pins:
+                state = vstore.end_snapshot(
+                    state, jnp.array([lane], jnp.int32), jnp.array([True]))
+                del pins[lane]
+            else:
+                state, ts = vstore.begin_snapshot(
+                    state, jnp.array([lane], jnp.int32), jnp.array([True]))
+                pins[lane] = int(ts[0])
+
+        state, _ = gstep(state)
+
+        # validate all pinned readers see their snapshot
+        for lane, t in pins.items():
+            for s_ in list(shadow)[:6]:
+                expect = None
+                for ts_, p_ in shadow[s_]:
+                    if ts_ <= t:
+                        expect = p_
+                got, found = vstore.snapshot_read(
+                    state, jnp.array([s_], jnp.int32), jnp.int32(t))
+                got = int(got[0]) if bool(found[0]) else None
+                assert got == expect, (
+                    f"{policy}: slot {s_} @t={t}: got {got}, want {expect}"
+                )
+
+    if policy != "ebr":
+        assert int(state.overflow_count) == 0, f"{policy}: slab overflow"
+    # EBR may legitimately overflow its slabs when a pinned reader blocks
+    # reclamation — the paper's unbounded-space pathology.
+
+
+@pytest.mark.parametrize("policy", ["slrt", "dlrt", "sweep", "steam"])
+def test_policy_reclaims_unpinned(policy):
+    """With no readers pinned, every obsolete version must eventually free."""
+    S, V = 8, 8
+    state = vstore.make_state(S, V, 2, ring_capacity=16)
+    ids = jnp.arange(4, dtype=jnp.int32)
+    m = jnp.ones((4,), jnp.bool_)
+    for i in range(6):
+        state, _, _ = vstore.write_step(
+            state, ids, jnp.full((4,), i, jnp.int32), m, policy=policy)
+        state, _ = vstore.gc_step(state, policy=policy)
+    state, _ = vstore.gc_step(state, policy=policy, force=True)
+    # only the 4 current versions remain
+    assert int(vstore.live_versions(state)) == 4
+    assert int(state.overflow_count) == 0
+
+
+def test_ebr_cannot_reclaim_middle_versions():
+    """The paper's EBR pathology, reproduced in the bulk-sync layer: an old
+    pinned reader blocks reclamation of every later-closed version, even ones
+    no reader needs."""
+    S, V = 4, 16
+    state = vstore.make_state(S, V, 2)
+    ids = jnp.array([0], jnp.int32)
+    m = jnp.array([True])
+    # write once, pin a reader at t=1, then write many more versions
+    state, _, _ = vstore.write_step(state, ids, jnp.array([1], jnp.int32), m, policy="ebr")
+    state, _ = vstore.begin_snapshot(state, jnp.array([0], jnp.int32), m)
+    for i in range(2, 12):
+        state, _, _ = vstore.write_step(state, ids, jnp.array([i], jnp.int32), m, policy="ebr")
+    state, _ = vstore.gc_step(state, policy="ebr")
+    ebr_live = int(vstore.live_versions(state))
+
+    # same history under slrt
+    state2 = vstore.make_state(S, V, 2, ring_capacity=8)
+    state2, _, _ = vstore.write_step(state2, ids, jnp.array([1], jnp.int32), m, policy="slrt")
+    state2, _ = vstore.begin_snapshot(state2, jnp.array([0], jnp.int32), m)
+    for i in range(2, 12):
+        state2, _, _ = vstore.write_step(state2, ids, jnp.array([i], jnp.int32), m, policy="slrt")
+        state2, _ = vstore.gc_step(state2, policy="slrt")
+    state2, _ = vstore.gc_step(state2, policy="slrt", force=True)
+    slrt_live = int(vstore.live_versions(state2))
+
+    # EBR keeps every version since the pin; SL-RT keeps pinned + current
+    assert ebr_live == 11, f"EBR live={ebr_live}"
+    assert slrt_live == 2, f"SL-RT live={slrt_live}"

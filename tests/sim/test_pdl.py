@@ -1,0 +1,170 @@
+"""PDL (Algorithm 1) tests: sequential semantics, concurrent invariants under
+random interleavings, linearizability (Wing-Gong), and the L-R+P space bound."""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim.machine import Scheduler
+from repro.core.sim.pdl import PDL, Node
+from repro.core.sim.linearize import check_linearizable
+
+
+def drain(gen):
+    """Run a stepped op to completion standalone; return its value."""
+    try:
+        while True:
+            next(gen)
+    except StopIteration as s:
+        return s.value
+
+
+class TestSequential:
+    def test_append_search_peek(self):
+        l = PDL()
+        n1, n2, n3 = Node(1, "a"), Node(3, "b"), Node(3, "c")
+        assert drain(l.tryAppend_steps(l.head, n1))
+        assert drain(l.tryAppend_steps(n1, n2))
+        assert drain(l.tryAppend_steps(n2, n3))
+        assert drain(l.peekHead_steps()) == "c"
+        assert drain(l.search_steps(0)) is None        # sentinel val
+        assert drain(l.search_steps(1)) == "a"
+        assert drain(l.search_steps(2)) == "a"
+        assert drain(l.search_steps(3)) == "c"          # latest with key<=3
+        assert drain(l.search_steps(99)) == "c"
+
+    def test_failed_append(self):
+        l = PDL()
+        n1, n2 = Node(1, "a"), Node(2, "b")
+        assert drain(l.tryAppend_steps(l.head, n1))
+        # stale head -> fail
+        assert not drain(l.tryAppend_steps(l.sentinel, n2))
+        assert l.head is n1
+
+    def test_remove_middle(self):
+        l = PDL()
+        ns = [Node(i, i) for i in range(1, 6)]
+        prev = l.head
+        for n in ns:
+            assert drain(l.tryAppend_steps(prev, n))
+            prev = n
+        drain(l.remove_steps(ns[2]))  # remove key 3
+        al = l.abstract_list()
+        assert [n.key for n in al[1:]] == [1, 2, 4, 5]
+        assert drain(l.search_steps(3)) == 2
+        l.check_invariant2()
+        l.check_al_sorted()
+
+    def test_remove_all_but_last(self):
+        l = PDL()
+        ns = [Node(i, i) for i in range(1, 8)]
+        prev = l.head
+        for n in ns:
+            assert drain(l.tryAppend_steps(prev, n))
+            prev = n
+        for n in ns[:-1]:
+            drain(l.remove_steps(n))
+            l.check_invariant2()
+        assert [n.key for n in l.abstract_list()[1:]] == [7]
+        # paper bound: L - R + P reachable at quiescence (P=1 here)
+        assert l.reachable_count() <= l.appends - l.removes_completed + 1
+
+
+def _concurrent_world(seed, n_appenders, n_removers, n_searchers):
+    """Random concurrent scenario with preconditions enforced.
+    Returns (list, scheduler, initial_AL) — initial_AL excludes the sentinel."""
+    rng = random.Random(seed)
+    l = PDL()
+    # build a base list sequentially so removers have targets
+    base = [Node(i * 2, f"v{i}") for i in range(1, n_removers + 2)]
+    prev = l.head
+    for n in base:
+        assert drain(l.tryAppend_steps(prev, n))
+        prev = n
+    sched = Scheduler(seed=seed)
+    # invariant hooks run after every atomic step
+    sched.invariant_hooks.append(l.check_invariant2)
+    sched.invariant_hooks.append(l.check_al_sorted)
+
+    # removers target distinct non-head base nodes (all have successors)
+    targets = base[:-1]
+    rng.shuffle(targets)
+    for i in range(n_removers):
+        sched.spawn("remove", l.remove_steps(targets[i]), (targets[i],))
+    # appenders chain from the current head (some will fail -> fine)
+    hk = base[-1].key
+    for i in range(n_appenders):
+        y = Node(hk + i + 1, f"new{i}")
+        sched.spawn("tryAppend", l.tryAppend_steps(l.head, y), (l.head, y))
+    for i in range(n_searchers):
+        k = rng.choice([n.key for n in base] + [hk + 1, 0])
+        sched.spawn("search", l.search_steps(k), (k,))
+    return l, sched, tuple(base)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_app=st.integers(0, 3),
+    n_rem=st.integers(1, 4),
+    n_sea=st.integers(0, 3),
+)
+def test_concurrent_invariants_random_schedules(seed, n_app, n_rem, n_sea):
+    l, sched, _base = _concurrent_world(seed, n_app, n_rem, n_sea)
+    sched.run_random()
+    # all removers finished: their targets are out of AL (Lemma 7)
+    al = set(id(n) for n in l.abstract_list())
+    for opid, op in sched.ops.items():
+        if op.name == "remove":
+            assert id(op.args[0]) not in al
+    # space bound: L - R + P with P = #ops (conservative upper bound)
+    P = len(sched.ops)
+    assert l.reachable_count() <= l.appends - l.removes_completed + P
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_linearizability_small_histories(seed):
+    l, sched, base = _concurrent_world(seed, 2, 2, 2)
+    sched.run_random()
+    assert check_linearizable(sched.history, l.sentinel, initial_state=base), (
+        "non-linearizable PDL history found"
+    )
+
+
+def test_linearizability_rejects_bad_history():
+    """Sanity: the checker must reject an impossible history."""
+    from repro.core.sim.machine import Event
+
+    l = PDL()
+    n1 = Node(1, "a")
+    # search returns 'a' before any append is invoked -> impossible
+    h = [
+        Event("inv", 0, "search", (1,), None, 0),
+        Event("res", 0, "search", (1,), "a", 1),
+        Event("inv", 1, "tryAppend", (l.sentinel, n1), None, 2),
+        Event("res", 1, "tryAppend", (l.sentinel, n1), True, 3),
+    ]
+    assert not check_linearizable(h, l.sentinel)
+
+
+def test_remove_chain_stat_small():
+    """Average removal chain length c stays ~1 under light contention
+    (the paper observed c <= 1.01 across workloads)."""
+    rng = random.Random(0)
+    l = PDL()
+    prev = l.head
+    nodes = []
+    for i in range(1, 101):
+        n = Node(i, i)
+        assert drain(l.tryAppend_steps(prev, n))
+        nodes.append(n)
+        prev = n
+    sched = Scheduler(seed=7)
+    # remove 50 random distinct non-head nodes concurrently
+    for n in rng.sample(nodes[:-1], 50):
+        sched.spawn("remove", l.remove_steps(n), (n,))
+    sched.run_random()
+    assert l.avg_remove_chain() < 3.0  # adjacent-marked chains stay short
+    assert l.reachable_count() == 100 - 50

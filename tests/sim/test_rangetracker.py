@@ -1,0 +1,97 @@
+"""RangeTracker tests: safety (never returns a needed version), liveness
+(obsolete versions eventually returned), amortized work, and space bounds."""
+import math
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim.rangetracker import RangeTracker, TrackedVersion
+
+
+def test_interval_intersection():
+    v = TrackedVersion(None, 3, 7)
+    assert v.intersects([3])
+    assert v.intersects([5])
+    assert v.intersects([6])
+    assert not v.intersects([7])       # high is exclusive
+    assert not v.intersects([2])
+    assert not v.intersects([])
+    assert v.intersects([1, 2, 6, 9])
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    seed=st.integers(0, 100_000),
+    n_adds=st.integers(1, 300),
+    p=st.integers(1, 8),
+)
+def test_never_returns_needed(seed, n_adds, p):
+    rng = random.Random(seed)
+    announced = sorted(rng.sample(range(0, 1000), rng.randint(0, 5)))
+    rt = RangeTracker(p, batch_size=8)
+    returned = []
+    for i in range(n_adds):
+        lo = rng.randint(0, 990)
+        hi = lo + rng.randint(1, 10)
+        returned += rt.add(rng.randrange(p), ("v", i, lo, hi), lo, hi,
+                           lambda: announced)
+    for (_, i, lo, hi) in returned:
+        assert not TrackedVersion(None, lo, hi).intersects(announced), (
+            f"returned needed version [{lo},{hi}) with announced={announced}"
+        )
+
+
+def test_drain_returns_everything_when_unannounced():
+    rt = RangeTracker(4, batch_size=16)
+    out = set()
+    for i in range(100):
+        out |= set(rt.add(i % 4, i, i, i + 1, lambda: []))
+    out |= set(rt.drain(lambda: []))
+    # every unneeded version comes back exactly once; none lost, none duplicated
+    assert out == set(range(100))
+    assert rt.size() == 0
+
+
+def test_needed_versions_retained_until_unannounced():
+    announced = [50]
+    rt = RangeTracker(2, batch_size=4)
+    ret = []
+    for i in range(40):
+        # all versions cover ts=50 -> all needed
+        ret += rt.add(i % 2, i, 45, 55, lambda: announced)
+    assert ret == []
+    assert rt.size() == 40
+    announced.clear()
+    out = rt.drain(lambda: [])
+    assert len(out) == 40
+
+
+def test_space_bound_h_plus_p2logp():
+    """Theorem 1 ingredient: RT holds O(H + P^2 log P) versions."""
+    P = 8
+    rt = RangeTracker(P)   # B = P log P
+    rng = random.Random(1)
+    announced = [10_000]   # one pinned rtx keeps H versions needed
+    H = 64
+    # interleave needed and unneeded adds
+    max_size = 0
+    for i in range(5000):
+        if i % 10 == 0 and i // 10 < H:
+            lo, hi = 9_000, 11_000          # needed (covers 10_000)
+        else:
+            lo = rng.randint(0, 8000)
+            hi = lo + rng.randint(1, 5)     # unneeded
+        rt.add(rng.randrange(P), i, lo, hi, lambda: announced)
+        max_size = max(max_size, rt.size())
+    bound = 4 * (H + P * P * max(1, int(math.log2(P)))) + 4 * rt.B
+    assert max_size <= bound, f"RT size {max_size} exceeded O(H+P^2logP) ~ {bound}"
+
+
+def test_amortized_constant_work():
+    P = 8
+    rt = RangeTracker(P)
+    n = 20_000
+    for i in range(n):
+        rt.add(i % P, i, i, i + 1, lambda: [])
+    # work per add is O(1) amortized (B-sized flush every B adds)
+    assert rt.work / n < 12, f"non-constant amortized work: {rt.work / n:.2f}/add"

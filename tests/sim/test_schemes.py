@@ -1,0 +1,128 @@
+"""Scheme-level tests: snapshot correctness under every GC scheme (GC must
+never reclaim a needed version), quiescent cleanup, and the paper's
+qualitative space ordering on adversarial workloads."""
+import random
+
+import pytest
+
+from repro.core.sim.mvhash import MVHashTable
+from repro.core.sim.mvtree import MVTree
+from repro.core.sim.schemes import SCHEMES, make_scheme
+from repro.core.sim.ssl_list import MVEnv
+from repro.core.sim.workload import WorkloadConfig, measure_space, run_workload
+
+ALL = list(SCHEMES)
+
+
+@pytest.mark.parametrize("scheme_name", ALL)
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+def test_snapshot_reads_correct_under_gc(scheme_name, ds_kind):
+    """Shadow-validated rtx reads: interleave updates with long-running rtxs;
+    every rtx read at timestamp t must equal the shadow state at t.  This
+    fails if a scheme ever reclaims a needed version."""
+    rng = random.Random(42)
+    env = MVEnv(4)
+    scheme = make_scheme(scheme_name, env, **({"batch_size": 4}
+                         if scheme_name in ("dlrt", "slrt", "bbf") else {}))
+    ds = MVHashTable(env, scheme, 64) if ds_kind == "hash" else MVTree(env, scheme)
+
+    shadow = {}                 # key -> list of (ts, val_or_None)
+    def record(k, v):
+        shadow.setdefault(k, []).append((env.read_ts(), v))
+
+    def shadow_at(k, t):
+        best = None
+        for ts, v in shadow.get(k, []):
+            if ts <= t:
+                best = v
+        return best
+
+    def do_update(pid):
+        ctx = scheme.begin_update(pid)
+        env.advance_ts()
+        k = rng.randint(1, 40)
+        if rng.random() < 0.6:
+            v = rng.randrange(10_000)
+            ds.insert(pid, k, v)
+            record(k, v)
+        else:
+            ds.delete(pid, k)
+            record(k, None)
+        scheme.end_update(pid, ctx)
+
+    # prefill
+    for _ in range(30):
+        do_update(0)
+
+    # interleave: start rtx on pid 3, do updates on pids 0-2, read mid-rtx
+    for round_ in range(60):
+        t = scheme.begin_rtx(3)
+        keys = [rng.randint(1, 40) for _ in range(6)]
+        expected = {k: shadow_at(k, t) for k in keys}
+        for _ in range(rng.randint(1, 12)):
+            do_update(rng.randrange(3))
+        for k in keys:
+            if ds_kind == "hash":
+                got = ds.rtx_lookup(3, k, t)
+            else:
+                res = dict(ds.range_query(3, k, k + 1, t))
+                got = res.get(k)
+            assert got == expected[k], (
+                f"{scheme_name}/{ds_kind}: snapshot read at t={t} key={k} "
+                f"got {got}, expected {expected[k]} (GC reclaimed a needed version?)"
+            )
+        scheme.end_rtx(3)
+
+
+@pytest.mark.parametrize("scheme_name", ALL)
+def test_quiescent_cleanup(scheme_name):
+    """After quiescence every list holds exactly its current version."""
+    cfg = WorkloadConfig(
+        ds="hash", scheme=scheme_name, n_keys=128, num_procs=9,
+        ops_per_proc=40, mode="split", sample_every=512, seed=11,
+    )
+    r = run_workload(cfg)
+    assert r["end_space"]["versions_per_list"] <= 1.0 + 1e-9
+    # the GC actually freed things during the run
+    assert r["end_space"]["words"] <= r["peak_space"]["words"]
+
+
+def test_space_bound_L_R_P_all_lists():
+    """Paper §3: PDL/SSL keep at most L-R+P reachable nodes per execution."""
+    for scheme_name in ("dlrt", "slrt"):
+        cfg = WorkloadConfig(
+            ds="hash", scheme=scheme_name, n_keys=128, num_procs=9,
+            ops_per_proc=60, mode="split", sample_every=2048, seed=5,
+        )
+        r = run_workload(cfg)
+        env_P = cfg.num_procs
+        # after quiesce: reachable == L - R (every obsolete version collected)
+        s = r["end_space"]
+        assert s["versions"] <= s["lists"] * 1 + env_P
+
+
+def test_ebr_blows_up_with_long_rtxs():
+    """Paper §6.2: EBR space degrades badly with long rtxs + updates, while
+    the RT-based schemes stay bounded."""
+    def peak(scheme):
+        kw = {"batch_size": 8} if scheme in ("slrt", "dlrt", "bbf") else {}
+        cfg = WorkloadConfig(
+            ds="hash", scheme=scheme, n_keys=64, num_procs=9,
+            ops_per_proc=400, mode="split", rtx_size=512,
+            variable_rtx_max=512, zipf=0.99, sample_every=64, seed=7,
+            scheme_kwargs=kw,
+        )
+        return run_workload(cfg)["peak_space"]["versions"]
+
+    ebr, slrt = peak("ebr"), peak("slrt")
+    assert ebr > 1.5 * slrt, f"expected EBR({ebr}) >> SL-RT({slrt}) under long rtxs"
+
+
+def test_scheme_factory():
+    env = MVEnv(2)
+    for name in ALL:
+        s = make_scheme(name, env)
+        assert s.name == name
+        lst = s.new_list()
+        n = s.new_node(1, "x")
+        assert lst.try_append(lst.head, n)

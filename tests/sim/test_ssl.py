@@ -1,0 +1,196 @@
+"""SSL (Algorithm 3) tests: compact vs the needed(A,t) oracle, Proposition 17,
+Theorem 13 (search correctness), scanAnnounce consistency, concurrency."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim.machine import Scheduler
+from repro.core.sim.ssl_list import SSL, SNode, MVEnv
+
+
+def drain(gen):
+    try:
+        while True:
+            next(gen)
+    except StopIteration as s:
+        return s.value
+
+
+def build_list(timestamps):
+    l = SSL()
+    prev = l.head
+    for i, ts in enumerate(timestamps):
+        n = SNode(ts, f"v{i}@{ts}")
+        assert drain(l.tryAppend_steps(prev, n))
+        prev = n
+    return l
+
+
+class TestCompactSequential:
+    def test_keeps_exactly_needed(self):
+        l = build_list([1, 2, 3, 5, 8, 9])
+        A, t = [2, 5], 9
+        l.compact(A, t, l.head)
+        kept = [n.ts for n in l.abstract_list()[1:]]
+        # needed: ts>9: none; last <=9 -> 9; last <=2 -> 2; last <=5 -> 5
+        assert kept == [2, 5, 9]
+        for n in l.abstract_list()[1:]:
+            assert l.needed(n, A, t)
+
+    def test_skips_above_threshold(self):
+        l = build_list([1, 2, 3, 10, 11])
+        # t=3: versions 10, 11 are "future" (skip); last<=3 is 3; A empty
+        l.compact([], 3, l.head)
+        kept = [n.ts for n in l.abstract_list()[1:]]
+        assert kept == [3, 10, 11]
+
+    def test_empty_announcements(self):
+        l = build_list(list(range(1, 20)))
+        l.compact([], 19, l.head)
+        kept = [n.ts for n in l.abstract_list()[1:]]
+        assert kept == [19]
+
+    def test_all_needed(self):
+        ts = [1, 3, 5]
+        l = build_list(ts)
+        l.compact([1, 3, 4], 5, l.head)
+        assert [n.ts for n in l.abstract_list()[1:]] == ts
+
+    @settings(max_examples=120, deadline=None)
+    @given(
+        data=st.data(),
+        n=st.integers(1, 24),
+        n_ann=st.integers(0, 6),
+    )
+    def test_compact_matches_oracle(self, data, n, n_ann):
+        """After a solo compact, the retained set == the needed(A,t) oracle."""
+        deltas = data.draw(st.lists(st.integers(0, 3), min_size=n, max_size=n))
+        ts, cur = [], 0
+        for d in deltas:
+            cur += d
+            ts.append(cur)
+        l = build_list(ts)
+        t = data.draw(st.integers(0, cur + 2))
+        A = sorted(
+            data.draw(
+                st.lists(st.integers(0, cur + 2), min_size=n_ann, max_size=n_ann)
+            )
+        )
+        # precondition 4: announcements must be in A or >= t; enforce by
+        # clipping t to min(A + [t]).
+        t = min([t] + A)
+        l.compact(A, t, l.head)
+        l.check_sorted()
+        expected = [n_ for n_ in l.added[1:] if l.needed(n_, A, t)]
+        got = l.abstract_list()[1:]
+        assert [n_.ts for n_ in got] == [n_.ts for n_ in expected]
+
+
+class TestConcurrentCompact:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 100_000), n=st.integers(2, 16))
+    def test_concurrent_compacts_proposition17(self, seed, n):
+        """Several compacts with *identical* (A,t,h) — as produced by the
+        GlobalAnnScan discipline — plus concurrent appends and searches.
+        Afterwards: every reachable node older than h is needed(A,t)."""
+        rng = random.Random(seed)
+        ts = []
+        cur = 0
+        for _ in range(n):
+            cur += rng.randint(0, 3)
+            ts.append(cur)
+        l = build_list(ts)
+        A = sorted(rng.sample(range(0, cur + 1), k=min(rng.randint(0, 3), cur + 1)))
+        t = min([cur] + A)  # precondition 4
+        h = l.head
+        sched = Scheduler(seed=seed)
+        sched.invariant_hooks.append(l.check_sorted)
+        for _ in range(rng.randint(1, 3)):
+            sched.spawn("compact", l.compact_steps(list(A), t, h), (tuple(A), t))
+        # concurrent appends beyond h (nondecreasing ts)
+        prev = h
+        for i in range(rng.randint(0, 2)):
+            y = SNode(cur + i, f"app{i}")
+            sched.spawn("tryAppend", l.tryAppend_steps(prev, y), (prev, y))
+            prev = y
+        # concurrent searches with announced-like timestamps
+        for a in A[:2]:
+            sched.spawn("search", l.search_steps(a), (a,))
+        sched.run_random()
+        # Proposition 17
+        for node in l.abstract_list()[1:]:
+            if node.order < h.order or node is h:
+                if node is not h:
+                    assert l.needed(node, A, t), (
+                        f"unneeded {node} reachable after compact"
+                    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_search_theorem13(self, seed):
+        """Theorem 13: a search(k) with announced k returns the value of the
+        last node with ts<=k appended before the search read head."""
+        rng = random.Random(seed)
+        env = MVEnv(4)
+        l = build_list([1, 2, 4, 6])
+        env.global_ts = 6
+        k = rng.choice([1, 2, 3, 4, 5, 6])
+        env.announce[0] = k                     # precondition 3
+        scan = env.scan_announce()              # (A, t) consistent snapshot
+        sched = Scheduler(seed=seed)
+
+        result = {}
+
+        def searcher():
+            val = yield from l.search_steps(k)
+            result["val"] = val
+            # head cannot change during our test (appends below h) -> expected
+            # computed at the end is valid.
+
+        sched.spawn("search", searcher(), (k,))
+        for _ in range(rng.randint(1, 2)):
+            sched.spawn(
+                "compact", l.compact_steps(list(scan.A), scan.t, l.head), ()
+            )
+        sched.run_random()
+        expected = None
+        for node in l.added:
+            if node.ts <= k:
+                expected = node.val
+        assert result["val"] == expected
+
+
+class TestScanAnnounce:
+    def test_scan_announce_consistency(self):
+        """Lemma 11 precondition: t is read before A, via GlobalAnnScan CAS."""
+        env = MVEnv(3)
+        env.global_ts = 10
+        env.announce[0] = 9
+        s1 = env.scan_announce()
+        assert s1.t == 10 and s1.A == [9]
+        env.global_ts = 12
+        env.announce[1] = 11
+        s2 = env.scan_announce()
+        assert s2.t == 12 and s2.A == [9, 11]
+
+    def test_announce_validates(self):
+        env = MVEnv(2)
+        env.global_ts = 5
+        t = env.announce_ts(0)
+        assert t == 5 and env.announce[0] == 5
+
+    def test_stepped_scan_announce(self):
+        env = MVEnv(2)
+        env.global_ts = 3
+        env.announce[1] = 2
+        def run():
+            s = yield from env.scan_announce_steps()
+            return s
+        g = run()
+        try:
+            while True:
+                next(g)
+        except StopIteration as s:
+            scan = s.value
+        assert scan.t == 3 and scan.A == [2]

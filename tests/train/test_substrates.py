@@ -1,0 +1,199 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing
+(+restart, +elastic, +MVGC retention), straggler watchdog, train_step."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import reduced_config
+from repro.configs.base import RunConfig, SHAPES
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.dist.straggler import StepWatchdog
+from repro.optim import adamw
+from repro.optim.compress import (compress_tree, decompress_tree, init_error)
+from repro.train.step import TrainState, init_state, train_step
+
+
+class TestAdamW:
+    def test_minimizes_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = adamw.init(params)
+        for _ in range(200):
+            grads = jax.tree.map(lambda w: 2 * w, params)
+            params, opt, _ = adamw.apply(params, grads, opt, lr=0.1,
+                                         weight_decay=0.0)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_clipping(self):
+        params = {"w": jnp.zeros(3)}
+        opt = adamw.init(params)
+        _, _, m = adamw.apply(params, {"w": jnp.full((3,), 1e6)}, opt, lr=0.1,
+                              grad_clip=1.0)
+        assert m["grad_norm"] > 1e5  # reported pre-clip
+
+    def test_schedule(self):
+        lr0 = adamw.cosine_schedule(jnp.int32(0), base_lr=1.0, warmup=10, total=100)
+        lrw = adamw.cosine_schedule(jnp.int32(10), base_lr=1.0, warmup=10, total=100)
+        lre = adamw.cosine_schedule(jnp.int32(100), base_lr=1.0, warmup=10, total=100)
+        assert float(lr0) == 0.0 and abs(float(lrw) - 1.0) < 1e-5
+        assert float(lre) <= 0.11
+
+
+class TestCompression:
+    def test_error_feedback_converges(self):
+        """Sum of dequantized grads + final error == sum of true grads."""
+        rng = np.random.default_rng(0)
+        tree = {"a": jnp.zeros((64,)), "b": jnp.zeros((8, 8))}
+        err = init_error(tree)
+        total_true = jax.tree.map(jnp.zeros_like, tree)
+        total_sent = jax.tree.map(jnp.zeros_like, tree)
+        for i in range(20):
+            g = jax.tree.map(
+                lambda z: jnp.array(rng.standard_normal(z.shape), jnp.float32),
+                tree)
+            q, s, err = compress_tree(g, err)
+            deq = decompress_tree(q, s)
+            total_true = jax.tree.map(jnp.add, total_true, g)
+            total_sent = jax.tree.map(jnp.add, total_sent, deq)
+        for k in tree:
+            resid = np.abs(np.asarray(total_true[k] - total_sent[k] - err[k]))
+            assert resid.max() < 1e-4, "error feedback must capture all residual"
+
+    def test_4x_byte_reduction(self):
+        g = {"w": jnp.ones((1024,), jnp.float32)}
+        q, s, _ = compress_tree(g, init_error(g))
+        assert q["w"].dtype == jnp.int8 and q["w"].nbytes == g["w"].nbytes // 4
+
+
+class TestData:
+    def test_deterministic_and_resumable(self):
+        cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8)
+        a = SyntheticLM(cfg)
+        b1 = next(a)
+        b2 = next(a)
+        b = SyntheticLM(cfg)
+        b.load_state_dict({"step": 1})
+        np.testing.assert_array_equal(next(b)["tokens"], b2["tokens"])
+
+    def test_sharding_partitions_batch(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+        p = SyntheticLM(cfg)
+        batch = p.batch_at(0)
+        parts = [p.shard_batch(batch, i, 4)["tokens"] for i in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts), batch["tokens"])
+
+    def test_copy_structure_is_learnable_signal(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4,
+                         copy_period=16)
+        b = SyntheticLM(cfg).batch_at(0)["tokens"]
+        # positions in the second half of each period repeat the first half
+        assert (b[:, 8:16] == b[:, 0:8]).all()
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = {"w": jnp.arange(6.0).reshape(2, 3), "b": [jnp.ones(2)]}
+        mgr.save(10, tree, extra={"data_step": 7})
+        got, extra = mgr.restore(10, like=tree)
+        np.testing.assert_array_equal(got["w"], tree["w"])
+        assert extra["data_step"] == 7
+        assert mgr.latest_step() == 10
+
+    def test_restart_resumes_training(self, tmp_path):
+        cfg = reduced_config("minitron-4b")
+        run = RunConfig(model=cfg, shape=SHAPES["train_4k"], lr=1e-3)
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 4))
+        state = init_state(cfg, jax.random.PRNGKey(0))
+        mgr = CheckpointManager(str(tmp_path))
+        for i in range(3):
+            state, m = train_step(state, _jb(next(data)), cfg, run)
+        mgr.save(3, state, extra=data.state_dict())
+        state4, _ = train_step(state, _jb(next(data)), cfg, run)
+
+        # crash + restart
+        state_r, extra = mgr.restore(3, like=state)
+        data_r = SyntheticLM(DataConfig(cfg.vocab_size, 16, 4))
+        data_r.load_state_dict(extra)
+        state4_r, _ = train_step(TrainState(*state_r), _jb(next(data_r)), cfg, run)
+        for a, b in zip(jax.tree.leaves(state4.params),
+                        jax.tree.leaves(state4_r.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+    def test_mvgc_retention(self, tmp_path):
+        """Checkpoint GC = the paper's needed(A,t) at the artifact layer."""
+        mgr = CheckpointManager(str(tmp_path))
+        tree = {"w": jnp.ones(2)}
+        for s in [10, 20, 30, 40]:
+            mgr.save(s, tree)
+        mgr.announce("evaluator", 20)     # pins [20, 30)
+        deleted = mgr.gc(keep_last=1)
+        assert 10 in deleted and 30 in deleted
+        assert sorted(mgr.steps()) == [20, 40]
+        mgr.unannounce("evaluator")
+        mgr.gc(keep_last=1)
+        assert mgr.steps() == [40]
+
+    def test_atomic_commit_no_partial(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"w": jnp.ones(4)})
+        # a stale tmp dir from a crashed save must not count as a checkpoint
+        os.makedirs(tmp_path / ".tmp-2")
+        assert mgr.steps() == [1]
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(k_sigma=3.0, min_budget_s=0.0)
+    import time
+    for i in range(10):
+        wd.start(); time.sleep(0.001); wd.stop(i)
+    wd.start(); time.sleep(0.08); wd.stop(99)
+    assert 99 in wd.suspect_steps
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        cfg = reduced_config("minitron-4b")
+        run = RunConfig(model=cfg, shape=SHAPES["train_4k"], lr=3e-3)
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 8, copy_period=8))
+        state = init_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(lambda s, b: train_step(s, b, cfg, run))
+        losses = []
+        for i in range(30):
+            state, m = step(state, _jb(next(data)))
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.2, f"no learning: {losses[0]:.3f} -> {losses[-1]:.3f}"
+
+    def test_microbatching_matches_full_batch_loss(self):
+        cfg = reduced_config("minitron-4b")
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 8))
+        batch = _jb(next(data))
+        state = init_state(cfg, jax.random.PRNGKey(0))
+        run1 = RunConfig(model=cfg, shape=SHAPES["train_4k"], microbatches=1)
+        run4 = RunConfig(model=cfg, shape=SHAPES["train_4k"], microbatches=4)
+        _, m1 = train_step(state, batch, cfg, run1)
+        _, m4 = train_step(state, batch, cfg, run4)
+        assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-3
+
+    def test_compression_path_trains(self):
+        cfg = reduced_config("minitron-4b")
+        run = RunConfig(model=cfg, shape=SHAPES["train_4k"], lr=3e-3,
+                        grad_compression=True)
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 8, copy_period=8))
+        state = init_state(cfg, jax.random.PRNGKey(0), compression=True)
+        step = jax.jit(lambda s, b: train_step(s, b, cfg, run))
+        l0 = ln = None
+        for i in range(25):
+            state, m = step(state, _jb(next(data)))
+            l0 = l0 if l0 is not None else float(m["loss"])
+            ln = float(m["loss"])
+        assert ln < l0 - 0.1
+
+
+def _jb(batch):
+    return {k: jnp.asarray(v) for k, v in batch.items()}
