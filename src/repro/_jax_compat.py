@@ -1,0 +1,106 @@
+"""Forward-compat aliases for older jax releases (0.4.x).
+
+The repo is written against the modern jax surface; on older jax some names
+are missing or spelled differently.  ``install()`` backfills them in place so
+call sites stay on the modern spelling:
+
+==============================  =============================================
+modern name                     0.4.x fallback
+==============================  =============================================
+``jax.sharding.AxisType``       tiny enum (Auto/Explicit/Manual); mesh axis
+                                types did not exist yet, so it is advisory
+``jax.make_mesh(axis_types=)``  wrapper that drops the kwarg
+``jax.set_mesh(mesh)``          the legacy ``Mesh`` context manager
+``jax.P``                       ``jax.sharding.PartitionSpec``
+``jax.NamedSharding``           ``jax.sharding.NamedSharding``
+``jax.shard_map``               ``jax.experimental.shard_map.shard_map`` with
+                                ``check_vma`` mapped onto ``check_rep``
+==============================  =============================================
+
+Everything is a no-op on a jax that already provides the modern names, so the
+shim can stay installed permanently.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    if not hasattr(jax, "make_mesh"):           # pre-0.4.35
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types
+            import numpy as np
+            devs = np.asarray(devices if devices is not None else jax.devices())
+            return jax.sharding.Mesh(devs.reshape(axis_shapes), axis_names)
+
+        jax.make_mesh = make_mesh
+        return
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params:
+        return
+    _orig = jax.make_mesh
+
+    @functools.wraps(_orig)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types  # pre-AxisType jax: every axis behaves as Auto
+        return _orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+
+    def set_mesh(mesh):
+        """``with jax.set_mesh(m):`` — on 0.4.x the Mesh object itself is the
+        context manager that scopes the default mesh."""
+        return mesh
+
+    jax.set_mesh = set_mesh
+
+
+def _install_aliases() -> None:
+    if not hasattr(jax, "P"):
+        jax.P = jax.sharding.PartitionSpec
+    if not hasattr(jax, "NamedSharding"):
+        jax.NamedSharding = jax.sharding.NamedSharding
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+        kwargs.pop("axis_names", None)  # modern-only knob with no 0.4.x analog
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_set_mesh()
+    _install_aliases()
+    _install_shard_map()

@@ -1,0 +1,26 @@
+"""Distribution layer: sharding trees, overlapped collectives, fault signals.
+
+Three orthogonal modules, each consumable on its own:
+
+* :mod:`repro.dist.sharding` — NamedSharding trees for params / batches
+  (TP over ``model``, optional FSDP over ``data``), used by ``launch.specs``
+  to build every (arch x shape x mesh) cell.
+* :mod:`repro.dist.overlap` — hand-rolled collectives built from
+  ``jax.shard_map`` + ``ppermute`` (chunked ring all-reduce) for paths where
+  XLA's fused collective cannot overlap with compute.
+* :mod:`repro.dist.straggler` — ``StepWatchdog`` (per-step latency outlier
+  detection) and ``HeartbeatFile`` (cross-host liveness via the checkpoint
+  filesystem), the fault-tolerance substrate of ``launch.train``.
+"""
+from repro.dist.overlap import make_ring_all_reduce
+from repro.dist.sharding import (batch_sharding, batch_spec, param_shardings)
+from repro.dist.straggler import HeartbeatFile, StepWatchdog
+
+__all__ = [
+    "batch_sharding",
+    "batch_spec",
+    "param_shardings",
+    "make_ring_all_reduce",
+    "StepWatchdog",
+    "HeartbeatFile",
+]

@@ -1,0 +1,58 @@
+"""Overlap-friendly collectives from ``shard_map`` + ``ppermute``.
+
+XLA lowers ``psum`` to one fused all-reduce that cannot interleave with
+compute.  A ring all-reduce decomposed into 2(n-1) ``ppermute`` hops —
+reduce-scatter then all-gather, one chunk in flight per hop — gives the
+scheduler n-1 independent send/recv pairs to overlap with whatever compute
+the caller interleaves (gradient compression, the next microbatch's
+backward, ...).  Numerically it computes exactly ``psum``: every element is
+the sum of all n shards, accumulated in ring order.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def make_ring_all_reduce(mesh: Mesh, axis: str) -> Callable[[jax.Array], jax.Array]:
+    """Build ``fn(x)``: an all-reduce over ``axis`` as a chunked ppermute ring.
+
+    ``x``'s leading dim is sharded over ``axis`` (it must divide); every
+    device ends up with the sum of all shards, so the global result is the
+    per-axis shard sum tiled ``n`` times — bitwise the ``psum`` of the local
+    shards.
+    """
+    n = mesh.shape[axis]
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def local(x: jax.Array) -> jax.Array:
+        if n == 1:
+            return x
+        shape = x.shape
+        flat = x.reshape(-1)
+        c = -(-flat.size // n)                       # chunk elements (ceil)
+        buf = jnp.zeros((n * c,), flat.dtype).at[: flat.size].set(flat)
+        buf = buf.reshape(n, c)
+        r = jax.lax.axis_index(axis)
+
+        # reduce-scatter: after n-1 hops device r owns chunk (r+1)%n complete
+        def rs_hop(s, b):
+            send = b[(r - s) % n]
+            recv = jax.lax.ppermute(send, axis, perm)
+            return b.at[(r - s - 1) % n].add(recv)
+
+        buf = jax.lax.fori_loop(0, n - 1, rs_hop, buf)
+
+        # all-gather: circulate the completed chunks around the same ring
+        def ag_hop(s, b):
+            recv = jax.lax.ppermute(b[(r + 1 - s) % n], axis, perm)
+            return b.at[(r - s) % n].set(recv)
+
+        buf = jax.lax.fori_loop(0, n - 1, ag_hop, buf)
+        return buf.reshape(-1)[: flat.size].reshape(shape)
+
+    return jax.shard_map(local, mesh=mesh, in_specs=P(axis),
+                         out_specs=P(axis), check_vma=False)

@@ -1,0 +1,165 @@
+"""Sharding trees for the parameter/optimizer/batch pytrees.
+
+Policy (megatron-style tensor parallelism + optional ZeRO-3):
+
+* **TP over ``model``** — attention head dims, MLP hidden dims, MoE expert
+  dims, vocab rows of (un)embedding tables.
+* **FSDP over ``data``** — when ``fsdp=True``, the first TP-free dim of every
+  matrix additionally shards over the data axis (params and both Adam
+  moments, since ``launch.specs`` reuses the same tree for mu/nu).
+* **Safety** — every axis assignment is checked for divisibility against the
+  mesh; anything that does not divide falls back to replicated on that dim,
+  so the same rules work for the 512-chip production mesh and a 2x2 fake-CPU
+  test mesh.
+
+All rules are *keypath*-driven: leaves under a stacked superblock (``sb`` in
+the path — params scanned over layers carry a leading ``[R]`` dim) get a
+``None`` prefix so the scan dim stays unsharded.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# keypath helpers
+# ---------------------------------------------------------------------------
+def _keypath_parts(kp) -> Tuple[str, ...]:
+    """jax keypath -> plain string parts ('sb', 'l0', 'mixer', 'wq', ...)."""
+    parts: List[str] = []
+    for entry in kp:
+        if hasattr(entry, "key"):
+            parts.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            parts.append(str(entry.idx))
+        elif hasattr(entry, "name"):
+            parts.append(str(entry.name))
+        else:
+            parts.append(str(entry))
+    return tuple(parts)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    total = 1
+    for a in axes if isinstance(axes, tuple) else (axes,):
+        total *= mesh.shape.get(a, 1)
+    return total
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return n > 1 and dim % n == 0 and dim >= n
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# batch sharding
+# ---------------------------------------------------------------------------
+def batch_spec(leaf, mesh: Mesh, batch_size: Optional[int] = None) -> P:
+    """PartitionSpec for one batch leaf: leading dim over (pod, data) when it
+    divides, everything else replicated."""
+    shape = getattr(leaf, "shape", None)
+    if not shape:
+        return P()
+    B = batch_size if batch_size is not None else shape[0]
+    baxes = batch_axes(mesh)
+    lead = baxes if _fits(B, mesh, baxes) else None
+    return P(*([lead] + [None] * (len(shape) - 1)))
+
+
+def batch_sharding(batch, mesh: Mesh, batch_size: Optional[int] = None):
+    """NamedSharding tree for an input-batch pytree (tokens/masks/frontend)."""
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_spec(leaf, mesh, batch_size)),
+        batch)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding
+# ---------------------------------------------------------------------------
+def _tp_axes(parts: Sequence[str], shape: Tuple[int, ...], *,
+             attn_hd_shard: bool, moe_replicate: bool) -> List[Optional[str]]:
+    """Tensor-parallel axis per core dim (before divisibility sanitation)."""
+    name = parts[-1]
+    rank = len(shape)
+    axes: List[Optional[str]] = [None] * rank
+
+    if name in ("embed", "unembed") and rank == 2:        # [V, d]
+        axes[0] = "model"
+    elif name in ("wq", "wk", "wv") and rank == 3:        # [d, H, hd]
+        axes[2 if attn_hd_shard else 1] = "model"
+    elif name == "wo" and rank == 3:                      # [H, hd, d]
+        axes[1 if attn_hd_shard else 0] = "model"
+    elif name in ("bq", "bk", "bv") and rank == 2:        # [H, hd]
+        axes[1 if attn_hd_shard else 0] = "model"
+    elif name in ("wg", "wu") and rank == 2:              # mlp [d, f]
+        axes[1] = "model"
+    elif name == "wd" and rank == 2:                      # mlp [f, d]
+        axes[0] = "model"
+    elif name in ("wg", "wu", "wd") and rank == 3:        # moe [E, d|f, f|d]
+        if not moe_replicate:
+            axes[0] = "model"                              # expert parallelism
+    elif name == "shared" or name == "router":
+        pass                                               # handled generically
+    elif name in ("w_up", "w_gate", "w_in") and rank == 2:  # [d, di|w]
+        axes[1] = "model"
+    elif name in ("w_down", "w_out") and rank == 2:       # [di|w, d]
+        axes[0] = "model"
+    elif name == "wx_s" and rank == 3:                    # slstm [d, H, 4hd]
+        axes[1] = "model"
+    elif name == "wr" and rank == 3:                      # slstm [H, hd, 4hd]
+        axes[0] = "model"
+    elif name == "w_if" and rank == 3:                    # mlstm [di, H, 2]
+        axes[1] = "model"
+    # norms, biases, lambda, conv weights, routers: replicated (tiny)
+    return axes
+
+
+def _leaf_spec(parts: Sequence[str], leaf, mesh: Mesh, *, fsdp: bool,
+               attn_hd_shard: bool, moe_replicate: bool,
+               fsdp_axis: str = "data") -> P:
+    shape = tuple(getattr(leaf, "shape", ()))
+    stacked = "sb" in parts                   # leading [R] scan dim
+    core = shape[1:] if stacked and len(shape) >= 1 else shape
+    if not core:
+        spec: List[Any] = []
+    else:
+        axes = _tp_axes(parts, core, attn_hd_shard=attn_hd_shard,
+                        moe_replicate=moe_replicate)
+        # sanitize TP assignments against the mesh
+        axes = [a if a and _fits(core[i], mesh, a) else None
+                for i, a in enumerate(axes)]
+        if fsdp and len(core) >= 2:
+            # ZeRO-3: first TP-free dim that the data axis divides
+            for i, a in enumerate(axes):
+                if a is None and _fits(core[i], mesh, fsdp_axis):
+                    axes[i] = fsdp_axis
+                    break
+        spec = axes
+    if stacked:
+        spec = [None] + spec
+    return P(*spec) if spec else P()
+
+
+def param_shardings(params, mesh: Mesh, *, fsdp: bool = False,
+                    attn_hd_shard: bool = False,
+                    moe_replicate: bool = False):
+    """NamedSharding tree mirroring ``params`` (arrays or ShapeDtypeStructs).
+
+    ``attn_hd_shard`` moves attention TP from the head dim to the head-size
+    dim (for head counts the model axis does not divide); ``moe_replicate``
+    keeps expert weights replicated instead of expert-parallel."""
+    def leaf(kp, x):
+        return NamedSharding(
+            mesh,
+            _leaf_spec(_keypath_parts(kp), x, mesh, fsdp=fsdp,
+                       attn_hd_shard=attn_hd_shard,
+                       moe_replicate=moe_replicate))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)

@@ -104,6 +104,8 @@ def dryrun_cell(arch: str, shape: str, mesh_name: str,
         t_compile = time.time() - t0 - t_lower
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):      # older jaxlib returns [dict]
+            ca = ca[0] if ca else {}
         ma = compiled.memory_analysis()
         hlo = compiled.as_text()
         # trip-count-aware analysis (XLA's cost_analysis counts while bodies

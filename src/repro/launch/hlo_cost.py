@@ -93,7 +93,7 @@ def _parse_instr(line: str):
     op, rest = m.groups()
     return name, shape_text, op, rest
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _BODY = re.compile(r"body=%?([\w.\-]+)")
 _COND = re.compile(r"condition=%?([\w.\-]+)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")

@@ -5,7 +5,7 @@ it with mesh shardings (see launch/train.py, launch/dryrun.py)."""
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +40,17 @@ def train_step(
     batch: Dict[str, jax.Array],
     cfg: ModelConfig,
     run: RunConfig,
+    grad_reduce: Optional[Callable[[Any], Any]] = None,
 ) -> Tuple[TrainState, Dict[str, jax.Array]]:
-    """One optimizer step.  batch tokens: [global_batch, seq]."""
+    """One optimizer step.  batch tokens: [global_batch, seq].
+
+    ``grad_reduce`` optionally reduces the gradient pytree across data-
+    parallel replicas *explicitly* (e.g. ``repro.dist.overlap``'s ring
+    all-reduce inside a shard_map training loop).  It runs *after* the
+    compression round-trip so the values crossing the reduction boundary are
+    the quantized ones, as the compression path documents.  Under plain
+    jit+GSPMD the reduction is implicit in the batch sharding and this stays
+    None."""
     mb = run.microbatches
 
     def loss_of(params, b):
@@ -71,6 +80,9 @@ def train_step(
         # int8 + error feedback across the (DCN-bound) reduction boundary
         q, scales, err = compress_tree(grads, state.err)
         grads = decompress_tree(q, scales)
+
+    if grad_reduce is not None:
+        grads = grad_reduce(grads)
 
     lr = adamw.cosine_schedule(state.opt.step, base_lr=run.lr)
     params, opt, om = adamw.apply(

@@ -1,0 +1,153 @@
+"""Vendored mini-hypothesis: just enough of the `hypothesis` API for this
+repo's property tests to collect *and run* when the real package is absent.
+
+``tests/conftest.py`` installs this module as ``sys.modules["hypothesis"]``
+only when ``import hypothesis`` fails, so installing the real package
+transparently upgrades the tests to full shrinking/replay behaviour.
+
+Supported surface (everything the test suite uses):
+  * ``@settings(max_examples=N, deadline=None)``
+  * ``@given(name=strategy, ...)`` (keyword style only)
+  * ``strategies.integers(lo, hi)``, ``strategies.lists(elem, min_size=,
+    max_size=)``, ``strategies.sampled_from(seq)``, ``strategies.booleans()``,
+    ``strategies.data()`` with ``data.draw(strategy)``
+
+Draws are deterministic per test (seeded from the test's qualified name), so
+failures reproduce run-to-run; there is no shrinking.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw_fn = draw_fn
+        self._label = label
+
+    def do_draw(self, rnd: random.Random):
+        return self._draw_fn(rnd)
+
+    def __repr__(self):
+        return f"<mini-hypothesis {self._label}>"
+
+
+def integers(min_value, max_value):
+    return SearchStrategy(lambda r: r.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def booleans():
+    return SearchStrategy(lambda r: bool(r.getrandbits(1)), "booleans()")
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return SearchStrategy(lambda r: seq[r.randrange(len(seq))], "sampled_from")
+
+
+def floats(min_value=0.0, max_value=1.0):
+    return SearchStrategy(lambda r: r.uniform(min_value, max_value), "floats")
+
+
+def lists(elements, *, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(r):
+        return [elements.do_draw(r) for _ in range(r.randint(min_size, hi))]
+
+    return SearchStrategy(draw, f"lists(min={min_size}, max={hi})")
+
+
+class DataObject:
+    """Interactive draws: ``data.draw(st.integers(0, 3))``."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: SearchStrategy, label=None):
+        return strategy.do_draw(self._rnd)
+
+
+class _DataStrategy(SearchStrategy):
+    def __init__(self):
+        super().__init__(lambda r: DataObject(r), "data()")
+
+
+def data():
+    return _DataStrategy()
+
+
+def _example_count(fn) -> int:
+    return getattr(fn, "_mini_hyp_max_examples", DEFAULT_MAX_EXAMPLES)
+
+
+def given(*args, **strategy_kwargs):
+    if args:
+        raise TypeError("mini-hypothesis supports @given(keyword=strategy) only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            for example in range(_example_count(wrapper)):
+                rnd = random.Random((seed0 << 20) + example)
+                drawn = {name: strat.do_draw(rnd)
+                         for name, strat in strategy_kwargs.items()}
+                try:
+                    fn(*call_args, **drawn, **call_kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"mini-hypothesis example {example} "
+                        f"(kwargs={_fmt(drawn)}) failed: {e!r}") from e
+
+        # pytest must not treat the strategy kwargs as fixtures: expose a
+        # signature with them stripped, and drop __wrapped__ so introspection
+        # does not tunnel back to the original function.
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return decorate
+
+
+def _fmt(drawn, limit=200):
+    s = repr({k: v for k, v in drawn.items() if not isinstance(v, DataObject)})
+    return s if len(s) <= limit else s[:limit] + "..."
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._mini_hyp_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def build_module() -> types.ModuleType:
+    """Assemble a module object mimicking the ``hypothesis`` package."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = __doc__
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "floats", "lists",
+                 "data"):
+        setattr(strategies, name, globals()[name])
+    strategies.SearchStrategy = SearchStrategy
+    strategies.DataObject = DataObject
+
+    hyp.strategies = strategies
+    return hyp

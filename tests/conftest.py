@@ -1,0 +1,29 @@
+"""Shared test setup.
+
+* Puts ``src`` on ``sys.path`` so ``python -m pytest`` works without the
+  ``PYTHONPATH=src`` prefix (the tier-1 command keeps working too).
+* Makes ``hypothesis`` a *soft* dependency: when the real package is not
+  installed, the vendored mini-implementation in ``tests/_strategies.py`` is
+  registered as ``sys.modules["hypothesis"]`` before collection, so the
+  property-test modules import, collect, and run (deterministic seeded draws,
+  no shrinking).  Installing real hypothesis transparently takes precedence.
+"""
+import importlib.util
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401  (the real thing, if present)
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "_repro_mini_hypothesis", os.path.join(_HERE, "_strategies.py"))
+    _mini = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mini)
+    _mod = _mini.build_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

@@ -1,0 +1,208 @@
+"""Single-process unit tests for repro.dist (multi-device behaviour is
+covered by tests/launch/test_distributed.py in fake-device subprocesses)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import reduced_config
+from repro.configs.base import RunConfig, SHAPES
+from repro.dist.sharding import (_keypath_parts, batch_sharding, batch_spec,
+                                 param_shardings)
+from repro.dist.straggler import HeartbeatFile, StepWatchdog
+from repro.train.step import init_state, train_step
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+class TestSharding:
+    def test_keypath_parts(self):
+        tree = {"sb": {"l0": {"mixer": {"wq": jnp.zeros((2, 4, 4, 2))}}},
+                "tail": [jnp.zeros((3,))]}
+        seen = {}
+        jax.tree_util.tree_map_with_path(
+            lambda kp, x: seen.setdefault(_keypath_parts(kp), x.shape), tree)
+        assert ("sb", "l0", "mixer", "wq") in seen
+        assert ("tail", "0") in seen
+
+    def test_param_shardings_cover_tree(self):
+        cfg = reduced_config("minitron-4b")
+        mesh = _mesh11()
+        shapes = jax.eval_shape(
+            lambda: init_state(cfg, jax.random.PRNGKey(0))).params
+        shard = param_shardings(shapes, mesh, fsdp=True)
+        leaves_p = jax.tree.leaves(shapes)
+        leaves_s = jax.tree.leaves(
+            shard, is_leaf=lambda x: isinstance(x, NamedSharding))
+        assert len(leaves_p) == len(leaves_s)
+        assert all(isinstance(s, NamedSharding) for s in leaves_s)
+
+    def test_stacked_superblock_scan_dim_unsharded(self):
+        cfg = reduced_config("minitron-4b")
+        mesh = _mesh11()
+        shapes = jax.eval_shape(
+            lambda: init_state(cfg, jax.random.PRNGKey(0))).params
+        shard = param_shardings(shapes, mesh)
+        found = {}
+        jax.tree_util.tree_map_with_path(
+            lambda kp, s: found.setdefault(_keypath_parts(kp), s.spec), shard)
+        wq = next(v for k, v in found.items()
+                  if "sb" in k and k[-1] == "wq")
+        assert len(wq) == 0 or wq[0] is None     # leading [R] stays unsharded
+
+    def test_indivisible_dims_fall_back_to_replicated(self):
+        """A mesh axis that does not divide a dim must never be assigned."""
+        code = """
+            import jax, jax.numpy as jnp
+            from repro.configs import reduced_config
+            from repro.dist.sharding import param_shardings
+            from repro.train.step import init_state
+            # 3 model shards cannot divide 4 heads / 64 dm / 128 ff evenly
+            mesh = jax.make_mesh((2, 3), ("data", "model"))
+            cfg = reduced_config("minitron-4b", num_heads=4, num_kv_heads=4)
+            shapes = jax.eval_shape(
+                lambda: init_state(cfg, jax.random.PRNGKey(0))).params
+            shard = param_shardings(shapes, mesh, fsdp=True)
+            for s, p in zip(jax.tree.leaves(shard,
+                                is_leaf=lambda x: hasattr(x, "spec")),
+                            jax.tree.leaves(shapes)):
+                shp = p.shape
+                for i, ax in enumerate(s.spec):
+                    if ax is None:
+                        continue
+                    n = 1
+                    for a in (ax if isinstance(ax, tuple) else (ax,)):
+                        n *= mesh.shape[a]
+                    assert shp[i] % n == 0, (shp, s.spec)
+            print("divisibility OK")
+        """
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, timeout=300,
+                             env=env)
+        assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+    def test_batch_spec_and_sharding(self):
+        mesh = _mesh11()
+        batch = {"tokens": jnp.zeros((8, 16), jnp.int32),
+                 "loss_mask": jnp.zeros((8, 16), jnp.float32)}
+        spec = batch_spec(batch["tokens"], mesh)
+        assert isinstance(spec, P) and len(spec) == 2
+        tree = batch_sharding(batch, mesh)
+        assert all(isinstance(s, NamedSharding)
+                   for s in jax.tree.leaves(
+                       tree, is_leaf=lambda x: isinstance(x, NamedSharding)))
+
+
+# ---------------------------------------------------------------------------
+# ring all-reduce: padded-chunk path (local size not divisible by n)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_ring_all_reduce_padded_chunks():
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.overlap import make_ring_all_reduce
+        mesh = jax.make_mesh((4,), ("data",))
+        n = 4
+        # local shard 9 elements: not divisible by 4 -> padded chunk path
+        x = jnp.arange(36.0)
+        fn = make_ring_all_reduce(mesh, "data")
+        got = jax.jit(fn)(x)
+        want = np.tile(np.arange(36.0).reshape(4, 9).sum(0), 4)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+        print("padded ring OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=300, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
+# ---------------------------------------------------------------------------
+# train_step grad_reduce wiring
+# ---------------------------------------------------------------------------
+def test_train_step_grad_reduce_hook():
+    """An identity grad_reduce changes nothing; a zeroing one freezes params
+    (proving the hook sits on the actual gradient path)."""
+    cfg = reduced_config("minitron-4b")
+    run = RunConfig(model=cfg, shape=SHAPES["train_4k"], lr=1e-2)
+    data = {"tokens": jnp.ones((4, 16), jnp.int32)}
+    state = init_state(cfg, jax.random.PRNGKey(0))
+
+    s_plain, m_plain = train_step(state, data, cfg, run)
+    s_id, m_id = train_step(state, data, cfg, run, grad_reduce=lambda g: g)
+    np.testing.assert_allclose(float(m_plain["loss"]), float(m_id["loss"]))
+    for a, b in zip(jax.tree.leaves(s_plain.params), jax.tree.leaves(s_id.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    zero = lambda g: jax.tree.map(jnp.zeros_like, g)
+    s_z, _ = train_step(state, data, cfg, run, grad_reduce=zero)
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(s_z.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# straggler
+# ---------------------------------------------------------------------------
+class TestStraggler:
+    def test_watchdog_no_false_positives_during_warmup(self):
+        wd = StepWatchdog(k_sigma=3.0, min_budget_s=0.0)
+        wd.start()
+        time.sleep(0.02)       # would be an outlier — but stats are empty
+        wd.stop(0)
+        assert wd.suspect_steps == []
+
+    def test_watchdog_outlier_excluded_from_stats(self):
+        wd = StepWatchdog(k_sigma=3.0, min_budget_s=0.0)
+        for i in range(10):
+            wd.start(); time.sleep(0.001); wd.stop(i)
+        thr_before = wd.threshold()
+        wd.start(); time.sleep(0.05); wd.stop(42)
+        assert 42 in wd.suspect_steps
+        assert wd.threshold() == pytest.approx(thr_before, rel=1e-6)
+
+    def test_watchdog_min_budget_floor(self):
+        wd = StepWatchdog(k_sigma=0.0, min_budget_s=10.0)
+        for i in range(20):
+            wd.start(); wd.stop(i)
+        assert wd.suspect_steps == []            # nothing beats a 10s floor
+
+    def test_heartbeat_roundtrip(self, tmp_path):
+        hb = HeartbeatFile(str(tmp_path / "sub" / "hb.json"), host_id=3)
+        assert hb.read() is None and hb.age_s() == float("inf")
+        hb.beat(17)
+        rec = hb.read()
+        assert rec["host_id"] == 3 and rec["step"] == 17
+        assert hb.age_s() < 60
+        # atomic write: no tmp droppings left behind
+        assert os.listdir(tmp_path / "sub") == ["hb.json"]
+
+    def test_heartbeat_corrupt_file_is_dead(self, tmp_path):
+        p = tmp_path / "hb.json"
+        p.write_text("{not json")
+        hb = HeartbeatFile(str(p), host_id=0)
+        assert hb.read() is None
+        assert hb.age_s() == float("inf")

@@ -143,3 +143,63 @@ class TestPagedDecode:
         lengths = jnp.array([0], jnp.int32)
         out = paged_decode(q, kp, vp, table, lengths)
         assert not bool(jnp.isnan(out).any())
+
+
+class TestKernelEdgeCases:
+    """Degenerate inputs every kernel must agree with its oracle on."""
+
+    def test_compact_empty_slabs(self):
+        S, V = 16, 4
+        ts = jnp.full((S, V), -1, jnp.int32)
+        succ = jnp.full((S, V), TS_MAX, jnp.int32)
+        ann = jnp.full((4,), TS_MAX, jnp.int32)
+        got = compact_needed(ts, succ, ann, jnp.int32(10), use_kernel=True,
+                             interpret=True)
+        want = needed_ref(ts, succ, ann, jnp.int32(10))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert not bool(np.asarray(got).any())   # nothing exists: nothing needed
+
+    def test_compact_all_readers_idle(self):
+        rng = np.random.default_rng(7)
+        ts, succ, _ = _mk_slabs(rng, 40, 6)
+        ann = jnp.full((8,), TS_MAX, jnp.int32)  # no pinned snapshots
+        now = jnp.int32(150)
+        got = compact_needed(ts, succ, ann, now, use_kernel=True, interpret=True)
+        want = needed_ref(ts, succ, ann, now)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_version_search_before_first_write(self, seed):
+        """Queries at t below every version ts must report not-found."""
+        rng = np.random.default_rng(seed)
+        ts, succ, pay = _mk_slabs(rng, 32, 4, max_ts=200)
+        ids = jnp.array(rng.integers(0, 32, 16), jnp.int32)
+        t = jnp.zeros((16,), jnp.int32)          # everything written at ts>=1
+        got_p, got_f = search(ts, pay, ids, t, use_kernel=True, interpret=True)
+        want_p, want_f = search_ref(ts, pay, ids, t)
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+        np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+        assert not bool(np.asarray(got_f).any())
+
+    def test_flash_single_query_block(self):
+        """T smaller than one block: masking, not padding garbage."""
+        rng = np.random.default_rng(11)
+        q = jnp.array(rng.standard_normal((1, 2, 17, 16)), jnp.float32)
+        k = jnp.array(rng.standard_normal((1, 2, 17, 16)), jnp.float32)
+        v = jnp.array(rng.standard_normal((1, 2, 17, 16)), jnp.float32)
+        got = flash_attention(q, k, v, causal=True, block_t=32, block_s=32)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=1e-2)
+
+    def test_paged_decode_single_page(self):
+        rng = np.random.default_rng(13)
+        q = jnp.array(rng.standard_normal((2, 2, 8)), jnp.float32)
+        kp = jnp.array(rng.standard_normal((3, 4, 2, 8)), jnp.float32)
+        vp = jnp.array(rng.standard_normal((3, 4, 2, 8)), jnp.float32)
+        table = jnp.array([[1], [2]], jnp.int32)
+        lengths = jnp.array([4, 2], jnp.int32)
+        got = paged_decode(q, kp, vp, table, lengths, use_kernel=True)
+        want = paged_decode_ref(q, kp, vp, table, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=1e-2)

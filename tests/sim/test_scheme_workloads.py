@@ -1,0 +1,121 @@
+"""Workload-level smoke + space-bound tests for every entry in SCHEMES.
+
+Complements test_schemes.py: these run every scheme through the paper's
+discrete-event driver (`run_workload`) on a small deterministic config and
+check (a) range-query snapshot safety — no version needed by an *active*
+range query is ever reclaimed, (b) the headline space claim — SL-RT/BBF peak
+reachable versions stay within a constant factor of live versions (one
+current version per list), (c) driver bookkeeping invariants.
+"""
+import random
+
+import pytest
+
+from repro.core.sim.mvhash import MVHashTable
+from repro.core.sim.schemes import SCHEMES, make_scheme
+from repro.core.sim.ssl_list import MVEnv
+from repro.core.sim.workload import WorkloadConfig, measure_space, run_workload
+
+ALL = list(SCHEMES)
+
+
+def _cfg(scheme, ds="hash", **over):
+    kw = {"batch_size": 4} if scheme in ("dlrt", "slrt", "bbf") else {}
+    base = dict(ds=ds, scheme=scheme, n_keys=48, num_procs=6,
+                ops_per_proc=30, mode="split", rtx_size=24,
+                sample_every=128, seed=3, scheme_kwargs=kw)
+    base.update(over)
+    return WorkloadConfig(**base)
+
+
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+@pytest.mark.parametrize("scheme_name", ALL)
+def test_workload_smoke_all_schemes(scheme_name, ds_kind):
+    """Every scheme completes the split workload; counters and space sane."""
+    r = run_workload(_cfg(scheme_name, ds_kind))
+    assert r["counters"]["updates"] > 0 and r["counters"]["rtx"] > 0
+    assert r["total_work"] > 0
+    assert r["peak_space"]["versions"] >= r["end_space"]["versions"]
+    # quiescent state: at most the current version per list survives
+    assert r["end_space"]["versions_per_list"] <= 1.0 + 1e-9
+
+
+@pytest.mark.parametrize("scheme_name", ALL)
+def test_active_range_query_versions_survive(scheme_name):
+    """Pin a range query at t, storm updates over its key range, then read:
+    every key must resolve to its value as of t (shadow-validated).  Fails if
+    the scheme reclaims any version the active rtx still needs."""
+    rng = random.Random(1234)
+    env = MVEnv(4)
+    scheme = make_scheme(scheme_name, env,
+                         **({"batch_size": 2}
+                            if scheme_name in ("dlrt", "slrt", "bbf") else {}))
+    ds = MVHashTable(env, scheme, 32)
+
+    shadow = {}
+
+    def do_update(pid):
+        ctx = scheme.begin_update(pid)
+        env.advance_ts()
+        k = rng.randint(1, 24)
+        if rng.random() < 0.7:
+            v = rng.randrange(1 << 16)
+            ds.insert(pid, k, v)
+            shadow.setdefault(k, []).append((env.read_ts(), v))
+        else:
+            ds.delete(pid, k)
+            shadow.setdefault(k, []).append((env.read_ts(), None))
+        scheme.end_update(pid, ctx)
+
+    for _ in range(40):
+        do_update(0)
+
+    for _ in range(25):
+        t = scheme.begin_rtx(3)                  # pin the snapshot
+        want = {}
+        for k in range(1, 25):
+            best = None
+            for ts, v in shadow.get(k, []):
+                if ts <= t:
+                    best = v
+            if best is not None:
+                want[k] = best
+        for _ in range(rng.randint(4, 16)):      # versions churn under the pin
+            do_update(rng.randrange(3))
+        got = dict(ds.range_query(3, 1, 25, t))
+        assert got == want, (
+            f"{scheme_name}: range query at t={t} diverged "
+            f"(missing={set(want) - set(got)}, extra={set(got) - set(want)}) "
+            f"— a needed version was reclaimed")
+        scheme.end_rtx(3)
+
+
+@pytest.mark.parametrize("scheme_name", ["slrt", "bbf"])
+def test_space_within_constant_factor_of_live(scheme_name):
+    """Paper's headline bound: RT-based schemes keep reachable versions within
+    a small constant factor of live versions (= one current per list) even at
+    peak, unlike EBR whose peak scales with rtx length (test_schemes.py)."""
+    r = run_workload(_cfg(scheme_name))
+    peak = r["peak_space"]
+    assert peak["versions"] <= 2 * peak["lists"], (
+        f"{scheme_name}: peak {peak['versions']} versions vs "
+        f"{peak['lists']} lists — space bound violated")
+    # after quiesce the factor collapses to exactly live
+    assert r["end_space"]["versions"] <= r["end_space"]["lists"]
+
+
+def test_measure_space_counts_current_versions():
+    """measure_space agrees with a hand-built structure: after quiescence a
+    freshly-built table holds exactly one version per reachable list (bucket
+    chains + one key list per inserted key)."""
+    env = MVEnv(2)
+    scheme = make_scheme("slrt", env, batch_size=2)
+    ds = MVHashTable(env, scheme, 16)
+    for k in range(1, 9):
+        env.advance_ts()
+        ds.insert(0, k, k * 10)
+    scheme.quiesce()
+    s = measure_space(ds, scheme)
+    assert s["versions"] == s["lists"]          # quiescent: 1 current each
+    assert s["versions"] >= 8                   # at least the 8 key lists
+    assert s["words"] >= s["versions"] * scheme.node_words
