@@ -3,42 +3,45 @@
 One harness per figure family, apples-to-apples: only the MVGC scheme varies;
 the multiversion data structures, workload generator and space accounting are
 shared (repro.core.sim.workload).  Simulated-time methodology documented in
-DESIGN.md (single hyperthread container: work units = shared-memory accesses
-of the lock-free algorithms; space = Java-style reachability in words).
+DESIGN.md §5 (single hyperthread container: work units = shared-memory
+accesses of the lock-free algorithms; space = Java-style reachability in
+words).
 
   fig4/5 : tree,  split workload (40/40/40 threads in the paper; scaled)
-  fig6   : hash,  split workload with large rtxs
-  fig7   : tree,  mixed workload (50% upd / 49% lookup / 1% rtx-1024)
+  fig6   : hash,  split workload with large scans
+  fig7   : tree,  mixed workload (50% upd / 49% lookup / 1% scan-of-1024)
   fig8   : hash,  mixed workload
+
+Results are emitted as ``BENCH_gc_comparison.json`` through the same
+``Measurement`` serializer as ``benchmarks/range_query.py`` (schema in
+repro.core.sim.measure), so the two benchmark trajectories are directly
+comparable.
 """
 from __future__ import annotations
 
+import os
 import time
+from dataclasses import replace
 from typing import Dict, List
 
-from repro.core.sim.workload import WorkloadConfig, run_workload
+from repro.core.sim.measure import Measurement, write_bench_json
+from repro.core.sim.workload import PAPER_MIXED, WorkloadConfig, run_workload
 
 SCHEMES = ["ebr", "steam", "dlrt", "slrt", "bbf"]
 
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           "BENCH_gc_comparison.json")
 
-def _row(scheme: str, r: Dict) -> Dict:
-    return {
-        "scheme": scheme,
-        "updates_per_Mwork": round(r["updates_per_mwork"], 1),
-        "rtx_keys_per_Mwork": round(r["rtx_keys_per_mwork"], 1),
-        "ops_per_Mwork": round(r["ops_per_mwork"], 1),
-        "peak_space_words": r["peak_space"]["words"],
-        "peak_versions": r["peak_space"].get("versions", 0),
-        "avg_space_words": int(r["avg_space"]),
-        "end_versions_per_list": round(r["end_space"]["versions_per_list"], 3),
-        "avg_remove_chain_c": r["scheme_stats"].get("avg_remove_chain_c", "-"),
-        "wall_s": r["wall_s"],
-    }
+TABLE_COLS = [
+    "scheme", "updates_per_mwork", "scan_keys_per_mwork", "ops_per_mwork",
+    "peak_space_words", "peak_versions", "avg_space_words",
+    "end_versions_per_list", "wall_s",
+]
 
 
-def run_figure(ds: str, mode: str, *, n_keys: int, rtx_size: int,
+def run_figure(name: str, ds: str, mode: str, *, n_keys: int, scan_size: int,
                num_procs: int, ops_per_proc: int, seed: int = 7,
-               zipf: float = 0.99) -> List[Dict]:
+               zipf: float = 0.99) -> List[Measurement]:
     rows = []
     for scheme in SCHEMES:
         kw = {}
@@ -46,50 +49,56 @@ def run_figure(ds: str, mode: str, *, n_keys: int, rtx_size: int,
             kw["batch_size"] = max(8, num_procs)
         cfg = WorkloadConfig(
             ds=ds, scheme=scheme, n_keys=n_keys, num_procs=num_procs,
-            mode=mode, rtx_size=rtx_size, variable_rtx_max=n_keys,
-            mixed_rtx_size=min(1024, n_keys), ops_per_proc=ops_per_proc,
+            mode=mode, scan_size=scan_size, variable_scan_max=n_keys,
+            op_mix=replace(PAPER_MIXED, scan_size=min(1024, n_keys)),
+            ops_per_proc=ops_per_proc,
             zipf=zipf, seed=seed, sample_every=256, scheme_kwargs=kw,
         )
         t0 = time.time()
         r = run_workload(cfg)
-        r["wall_s"] = round(time.time() - t0, 1)
-        rows.append(_row(scheme, r))
+        rows.append(Measurement.from_result("gc_comparison", name, r,
+                                            wall_s=time.time() - t0))
     return rows
 
 
 FIGURES = {
     "fig4_tree_split_small": dict(ds="tree", mode="split", n_keys=1024,
-                                  rtx_size=16, num_procs=24, ops_per_proc=200),
+                                  scan_size=16, num_procs=24, ops_per_proc=200),
     "fig5_tree_split_large": dict(ds="tree", mode="split", n_keys=4096,
-                                  rtx_size=16, num_procs=24, ops_per_proc=150),
-    "fig6_hash_split_bigrtx": dict(ds="hash", mode="split", n_keys=1024,
-                                   rtx_size=512, num_procs=24, ops_per_proc=200),
+                                  scan_size=16, num_procs=24, ops_per_proc=150),
+    "fig6_hash_split_bigscan": dict(ds="hash", mode="split", n_keys=1024,
+                                    scan_size=512, num_procs=24, ops_per_proc=200),
     "fig7_tree_mixed": dict(ds="tree", mode="mixed", n_keys=1024,
-                            rtx_size=16, num_procs=24, ops_per_proc=300),
+                            scan_size=16, num_procs=24, ops_per_proc=300),
     "fig8_hash_mixed": dict(ds="hash", mode="mixed", n_keys=1024,
-                            rtx_size=16, num_procs=24, ops_per_proc=300),
+                            scan_size=16, num_procs=24, ops_per_proc=300),
 }
 
 
 def print_table(name: str, rows: List[Dict]) -> None:
-    cols = list(rows[0].keys())
     print(f"\n== {name} ==")
-    print("  ".join(f"{c:>22s}" for c in cols))
+    print("  ".join(f"{c:>22s}" for c in TABLE_COLS))
     for r in rows:
-        print("  ".join(f"{str(r[c]):>22s}" for c in cols))
+        print("  ".join(f"{str(r[c]):>22s}" for c in TABLE_COLS))
 
 
-def main(fast: bool = True) -> Dict[str, List[Dict]]:
-    out = {}
+def main(fast: bool = True, out: str = DEFAULT_OUT) -> Dict[str, List[Dict]]:
+    tables: Dict[str, List[Dict]] = {}
+    measurements: List[Measurement] = []
     for name, kw in FIGURES.items():
         if fast:
             kw = dict(kw)
             kw["ops_per_proc"] = max(60, kw["ops_per_proc"] // 3)
             kw["n_keys"] = max(256, kw["n_keys"] // 2)
-        rows = run_figure(**kw)
-        print_table(name, rows)
-        out[name] = rows
-    return out
+        rows = run_figure(name, **kw)
+        measurements.extend(rows)
+        tables[name] = [m.to_row() for m in rows]
+        print_table(name, tables[name])
+    if out:
+        payload = write_bench_json(out, "gc_comparison", measurements,
+                                   meta={"fast": fast, "figures": list(FIGURES)})
+        print(f"\nwrote {out} ({len(payload['rows'])} rows)")
+    return tables
 
 
 if __name__ == "__main__":

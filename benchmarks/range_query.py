@@ -1,0 +1,120 @@
+"""EEMARQ-style range-query benchmark driver (DESIGN.md §7).
+
+Runs the range-scan workload family over the five MVGC schemes and both
+multiversion structures: range-heavy operation mixes (update/lookup/scan
+50/25/25 and 10/10/80), scan sizes s ∈ {8, 64, 1024, 8192}, uniform and
+Zipfian-0.99 key distributions.  This is the regime the paper's central
+experiment stresses (long-lived readers pinning versions while updates
+allocate) and where EEMARQ (Sheffi et al., 2022) shows reclamation schemes
+diverge most.
+
+Every completed scan is replayed against the reference UpdateLog
+(snapshot-consistency validation, repro.core.sim.linearize); the driver exits
+nonzero if any scan observed a non-snapshot result.  Results are emitted as
+``BENCH_range_query.json`` (schema: repro.core.sim.measure; space in words,
+throughput in completed ops per million simulated work units).
+
+  python benchmarks/range_query.py            # standard matrix (~2 min)
+  python benchmarks/range_query.py --smoke    # tiny CI matrix (seconds)
+  python benchmarks/range_query.py --full     # full EEMARQ matrix (slow)
+  python benchmarks/range_query.py --out PATH # where to write the JSON
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List
+
+from repro.core.sim.measure import (EEMARQ_MIXES, Measurement,
+                                    write_bench_json)
+from repro.core.sim.workload import eemarq_matrix, run_workload
+
+DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           "BENCH_range_query.json")
+
+TABLE_COLS = [
+    "scheme", "ds", "mix", "scan_size", "zipf", "ops_per_mwork",
+    "scan_keys_per_mwork", "peak_space_words", "peak_versions",
+    "end_space_words", "scans_validated", "scan_violations", "wall_s",
+]
+
+# matrix tiers: (n_keys, num_procs, ops_per_proc, scan_sizes, zipfs)
+TIERS = {
+    "smoke": dict(n_keys=32, num_procs=4, ops_per_proc=16,
+                  scan_sizes=(8,), zipfs=(0.99,)),
+    "standard": dict(n_keys=512, num_procs=12, ops_per_proc=96,
+                     scan_sizes=(8, 64, 1024), zipfs=(0.0, 0.99)),
+    "full": dict(n_keys=1024, num_procs=16, ops_per_proc=160,
+                 scan_sizes=(8, 64, 1024, 8192), zipfs=(0.0, 0.99)),
+}
+
+
+def run_matrix(tier: str = "standard") -> List[Measurement]:
+    params = TIERS[tier]
+    cfgs = eemarq_matrix(
+        mixes=EEMARQ_MIXES,
+        scan_sizes=params["scan_sizes"],
+        zipfs=params["zipfs"],
+        n_keys=params["n_keys"],
+        num_procs=params["num_procs"],
+        ops_per_proc=params["ops_per_proc"],
+        validate_scans=True,
+        sample_every=1024,
+    )
+    rows = []
+    for cfg in cfgs:
+        mix = cfg.op_mix
+        figure = (f"{cfg.ds}/{mix.label}/s={mix.scan_size}"
+                  f"/zipf={cfg.zipf}")
+        t0 = time.time()
+        r = run_workload(cfg)
+        m = Measurement.from_result("range_query", figure, r,
+                                    wall_s=time.time() - t0)
+        rows.append(m)
+        if r["scan_violations"]:
+            print(f"!! snapshot violations in {figure}/{cfg.scheme}: "
+                  f"{r['violation_examples']}", file=sys.stderr)
+    return rows
+
+
+def print_tables(rows: List[Measurement]) -> None:
+    by_figure: Dict[str, List[Dict]] = {}
+    for m in rows:
+        by_figure.setdefault(m.figure, []).append(m.to_row())
+    for figure, rs in by_figure.items():
+        print(f"\n== {figure} ==")
+        print("  ".join(f"{c:>20s}" for c in TABLE_COLS))
+        for r in rs:
+            print("  ".join(f"{str(r[c]):>20s}" for c in TABLE_COLS))
+
+
+def main(argv: List[str]) -> int:
+    tier = "standard"
+    if "--smoke" in argv:
+        tier = "smoke"
+    elif "--full" in argv:
+        tier = "full"
+    out = DEFAULT_OUT
+    if "--out" in argv:
+        out = argv[argv.index("--out") + 1]
+
+    t0 = time.time()
+    rows = run_matrix(tier)
+    print_tables(rows)
+    payload = write_bench_json(out, "range_query", rows,
+                               meta={"tier": tier, **{k: list(v) if isinstance(v, tuple) else v
+                                                      for k, v in TIERS[tier].items()}})
+    violations = sum(m.scan_violations for m in rows)
+    validated = sum(m.scans_validated for m in rows)
+    print(f"\nwrote {out} ({len(payload['rows'])} rows, "
+          f"{validated} scans validated, {violations} violations, "
+          f"{time.time() - t0:.1f}s)")
+    if violations:
+        print("FAIL: snapshot-consistency violations detected", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -20,7 +20,7 @@ def main() -> None:
     for name, rows in figs.items():
         for r in rows:
             csv_rows.append((f"{name}/{r['scheme']}/updates",
-                             1e6 / max(1e-9, r["updates_per_Mwork"]),
+                             1e6 / max(1e-9, r["updates_per_mwork"]),
                              f"peak_space={r['peak_space_words']}w"))
 
     space_bounds.main()

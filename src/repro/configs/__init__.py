@@ -1,7 +1,7 @@
 """Architecture registry: the 10 assigned configs (+ reduced smoke variants).
 
 Sources per the brief; exact dims preserved.  ``runnable(arch, shape)``
-encodes the long_500k sub-quadratic skip rules recorded in DESIGN.md.
+encodes the long_500k sub-quadratic skip rules recorded in DESIGN.md §4.
 """
 from __future__ import annotations
 
@@ -74,7 +74,7 @@ WHISPER_TINY = ModelConfig(
     d_ff=1536, vocab_size=51865,
     encoder_layers=4, encoder_tokens=1500,
     frontend="audio_frames", frontend_tokens=1500,
-    rope=True,  # adaptation: RoPE instead of learned abs positions (DESIGN.md)
+    rope=True,  # adaptation: RoPE instead of learned abs positions (DESIGN.md §4)
     act="gelu", gated_mlp=False,
 )  # [arXiv:2212.04356] enc-dec; conv frontend stubbed
 

@@ -7,7 +7,7 @@ row of ``V`` entries.  An entry is a version ``(ts, succ, payload)`` where
 current).  The whole store is a pytree of ``[S, V]`` arrays — shardable along
 ``S`` with the data it versions, updatable with masked scatters, and
 sweepable with VPU-friendly elementwise passes.  This is the hardware
-adaptation recorded in DESIGN.md §2: index-linked SoA instead of pointer
+adaptation recorded in DESIGN.md §2: index-linked SoA version pool instead of pointer
 chasing, bulk-synchronous masked updates instead of CAS.
 
 Capacity discipline: the paper's L-R+P bound becomes "occupancy stays below

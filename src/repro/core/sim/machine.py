@@ -46,6 +46,18 @@ def cas(obj: Any, fieldname: str, old: Any, new: Any) -> bool:
     return False
 
 
+def drain(gen: Generator) -> Any:
+    """Run a sliced operation (a one-access-per-yield generator) to
+    completion without interleaving, returning its ``return`` value.  Used by
+    the structures' atomic convenience wrappers (e.g. ``range_query`` driving
+    ``range_scan``)."""
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
 @dataclass
 class Event:
     kind: str          # 'inv' | 'res'

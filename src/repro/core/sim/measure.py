@@ -1,0 +1,228 @@
+"""Shared operation-mix and measurement plumbing for the sim benchmarks.
+
+Both benchmark drivers (``benchmarks/gc_comparison.py`` — the paper's Figures
+4-8 — and ``benchmarks/range_query.py`` — the EEMARQ-style range-scan family,
+DESIGN.md §7) build their workloads from :class:`OpMix` and serialize their
+results through :class:`Measurement` / :func:`write_bench_json`, so the two
+trajectories stay apples-to-apples: same space units (Java-reachability
+words, DESIGN.md §5), same throughput proxy (completed operations per million
+simulated work units), same JSON schema.
+
+``BENCH_*.json`` schema (``SCHEMA_VERSION`` = 1)::
+
+    {
+      "bench": "<driver name>",
+      "schema_version": 1,
+      "units": {...},                 # human-readable unit strings
+      "meta": {...},                  # driver-specific run parameters
+      "rows": [<Measurement dict>, ...]
+    }
+
+Every row carries the keys in ``REQUIRED_ROW_KEYS``; ``tools/
+check_bench_json.py`` (run by the CI ``bench-smoke`` step) enforces this.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+UNITS = {
+    "space": "words, Java-style reachability from the structure roots "
+             "(version nodes at the scheme's per-node cost + payloads + GC "
+             "metadata; DESIGN.md §5)",
+    "throughput": "completed operations per 1e6 simulated work units "
+                  "(work unit = one shared-memory access of the lock-free "
+                  "algorithm; DESIGN.md §5)",
+    "scan_size": "keys per range scan (half-open key interval [lo, lo+s))",
+}
+
+REQUIRED_TOP_KEYS = ("bench", "schema_version", "units", "meta", "rows")
+
+REQUIRED_ROW_KEYS = (
+    "bench", "figure", "ds", "scheme", "mix", "scan_size", "zipf",
+    "n_keys", "num_procs", "ops_per_proc", "seed",
+    "updates", "lookups", "scans", "scan_keys", "total_work",
+    "ops_per_mwork", "updates_per_mwork", "scan_keys_per_mwork",
+    "peak_space_words", "peak_versions", "avg_space_words",
+    "end_space_words", "end_versions_per_list",
+    "scans_validated", "scan_violations", "wall_s",
+)
+
+
+# ---------------------------------------------------------------------------
+# Operation mix
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class OpMix:
+    """A mixed workload's operation distribution.
+
+    Fractions are per-operation probabilities (update / point lookup / range
+    scan) and must sum to 1.  ``scan_size`` is the number of keys each range
+    scan covers.  EEMARQ (Sheffi et al., 2022) names its mixes
+    "update/lookup/scan" percentage triples; ``name`` carries that label.
+    """
+
+    update_frac: float
+    lookup_frac: float
+    scan_frac: float
+    scan_size: int = 64
+    name: str = ""
+
+    def __post_init__(self):
+        for f in (self.update_frac, self.lookup_frac, self.scan_frac):
+            if not (0.0 <= f <= 1.0):
+                raise ValueError(f"OpMix fraction {f} outside [0, 1]")
+        total = self.update_frac + self.lookup_frac + self.scan_frac
+        if abs(total - 1.0) > 1e-9:
+            raise ValueError(f"OpMix fractions sum to {total}, expected 1.0")
+        if self.scan_frac > 0 and self.scan_size < 1:
+            raise ValueError("scan_frac > 0 requires scan_size >= 1")
+
+    @property
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        return (f"{round(100 * self.update_frac)}/"
+                f"{round(100 * self.lookup_frac)}/"
+                f"{round(100 * self.scan_frac)}")
+
+
+# The EEMARQ-style range-heavy mixes (update/lookup/scan).
+EEMARQ_MIXES = (
+    OpMix(0.50, 0.25, 0.25, name="50/25/25"),
+    OpMix(0.10, 0.10, 0.80, name="10/10/80"),
+)
+EEMARQ_SCAN_SIZES = (8, 64, 1024, 8192)
+EEMARQ_ZIPFS = (0.0, 0.99)   # uniform + the YCSB-default Zipfian
+
+
+# ---------------------------------------------------------------------------
+# Measurement rows
+# ---------------------------------------------------------------------------
+@dataclass
+class Measurement:
+    """One benchmark cell: (driver, figure, structure, scheme, mix) with its
+    space + throughput measurements, flattened for JSON serialization."""
+
+    bench: str
+    figure: str
+    ds: str
+    scheme: str
+    mix: str
+    scan_size: int
+    zipf: float
+    n_keys: int
+    num_procs: int
+    ops_per_proc: int
+    seed: int
+    updates: int
+    lookups: int
+    scans: int
+    scan_keys: int
+    total_work: int
+    ops_per_mwork: float
+    updates_per_mwork: float
+    scan_keys_per_mwork: float
+    peak_space_words: int
+    peak_versions: int
+    avg_space_words: int
+    end_space_words: int
+    end_versions_per_list: float
+    scans_validated: int
+    scan_violations: int
+    wall_s: float
+    scheme_stats: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def from_result(cls, bench: str, figure: str, result: Dict[str, Any],
+                    wall_s: float = 0.0) -> "Measurement":
+        """Build a row from a ``run_workload`` result dict."""
+        cfg = result["config"]
+        c = result["counters"]
+        mix = getattr(cfg, "op_mix", None)
+        if cfg.mode == "split":
+            mix_label = "split"
+            scan_size = cfg.scan_size
+        else:
+            mix_label = mix.label if mix is not None else "mixed"
+            scan_size = mix.scan_size if mix is not None else 0
+        return cls(
+            bench=bench,
+            figure=figure,
+            ds=cfg.ds,
+            scheme=cfg.scheme,
+            mix=mix_label,
+            scan_size=scan_size,
+            zipf=cfg.zipf,
+            n_keys=cfg.n_keys,
+            num_procs=cfg.num_procs,
+            ops_per_proc=cfg.ops_per_proc,
+            seed=cfg.seed,
+            updates=c["updates"],
+            lookups=c["lookups"],
+            scans=c["scans"],
+            scan_keys=c["scan_keys"],
+            total_work=result["total_work"],
+            ops_per_mwork=round(result["ops_per_mwork"], 3),
+            updates_per_mwork=round(result["updates_per_mwork"], 3),
+            scan_keys_per_mwork=round(result["scan_keys_per_mwork"], 3),
+            peak_space_words=result["peak_space"]["words"],
+            peak_versions=result["peak_space"].get("versions", 0),
+            avg_space_words=int(result["avg_space"]),
+            end_space_words=result["end_space"]["words"],
+            end_versions_per_list=round(
+                result["end_space"]["versions_per_list"], 4),
+            scans_validated=result.get("scans_validated", 0),
+            scan_violations=result.get("scan_violations", 0),
+            wall_s=round(wall_s, 2),
+            scheme_stats=dict(result.get("scheme_stats", {})),
+        )
+
+    def to_row(self) -> Dict[str, Any]:
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_*.json serialization
+# ---------------------------------------------------------------------------
+def bench_payload(bench: str, measurements: Sequence[Measurement],
+                  meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    return {
+        "bench": bench,
+        "schema_version": SCHEMA_VERSION,
+        "units": dict(UNITS),
+        "meta": dict(meta or {}),
+        "rows": [m.to_row() for m in measurements],
+    }
+
+
+def write_bench_json(path: str, bench: str,
+                     measurements: Sequence[Measurement],
+                     meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Serialize measurements to ``path`` in the BENCH schema; returns the
+    payload dict (also used by in-process tests)."""
+    payload = bench_payload(bench, measurements, meta)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return payload
+
+
+def validate_bench_payload(payload: Dict[str, Any]) -> List[str]:
+    """Return a list of schema problems (empty = valid).  Shared by
+    ``tools/check_bench_json.py`` and the unit tests."""
+    problems = []
+    for k in REQUIRED_TOP_KEYS:
+        if k not in payload:
+            problems.append(f"missing top-level key: {k}")
+    rows = payload.get("rows", [])
+    if not rows:
+        problems.append("rows is empty")
+    for i, row in enumerate(rows):
+        missing = [k for k in REQUIRED_ROW_KEYS if k not in row]
+        if missing:
+            problems.append(f"row {i} missing keys: {missing}")
+    return problems

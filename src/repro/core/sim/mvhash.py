@@ -6,11 +6,19 @@ vCAS head to the new copy.  Load factor ~0.5 as in the paper.  Crucially, the
 values stored in versions are flat tuples — vCAS objects never point
 (indirectly) to other vCAS objects, which is what makes Steam behave well
 here and badly on the tree.
+
+Range scans (``range_scan``, DESIGN.md §7) are explicit multi-slice
+operations: a scan announced inside a read-only transaction (rtx) at
+timestamp ``t`` probes each key of its interval through the owning bucket's
+version list at ``t``, yielding between bucket reads so updates interleave
+while the rtx pins its snapshot — the hash table has no key order, so the
+paper's rtx over [lo, hi) is exactly this per-key probe loop.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Tuple
+from typing import Any, Generator, List, Optional, Tuple
 
+from repro.core.sim.machine import drain
 from repro.core.sim.vcas import VCas
 
 
@@ -69,14 +77,22 @@ class MVHashTable:
         idx = _find(chain, k)
         return chain[idx][1] if idx >= 0 else None
 
-    def range_query(self, pid: int, lo: int, hi: int, t: float) -> List[Tuple]:
-        """Paper's hash-table rtx: check each individual key in [lo, hi)."""
-        out = []
+    def range_scan(self, pid: int, lo: int, hi: int, t: float) -> Generator:
+        """Sliced snapshot range scan at timestamp ``t``: one yield per
+        bucket-version read; ``return``s the sorted [(key, val)] snapshot of
+        [lo, hi) as of ``t``."""
+        out: List[Tuple] = []
         for k in range(lo, hi):
-            v = self.rtx_lookup(pid, k, t)
-            if v is not None:
-                out.append((k, v))
+            chain = self._bucket(k).read_version(t)
+            yield
+            idx = _find(chain, k)
+            if idx >= 0:
+                out.append((k, chain[idx][1]))
         return out
+
+    def range_query(self, pid: int, lo: int, hi: int, t: float) -> List[Tuple]:
+        """Atomic convenience form of ``range_scan`` (drained in one slice)."""
+        return drain(self.range_scan(pid, lo, hi, t))
 
     # -- space accounting --------------------------------------------------------
     def root_vcas(self) -> List[VCas]:

@@ -5,7 +5,7 @@ child pointer reference tree nodes that contain *other* vCAS objects — the
 indirection pattern ("vCAS objects do point indirectly to others") that makes
 Steam's dusty-corners problem cost up to 8x space on trees (paper §6.2).
 
-Simplification vs. the paper (recorded in DESIGN.md): the chromatic tree's
+Simplification vs. the paper (recorded in DESIGN.md §3): the chromatic tree's
 lazy red-black rebalancing is dropped; with uniformly/zipf-drawn integer keys
 an unbalanced external BST has expected O(log n) depth, and rebalancing does
 not change the GC dynamics under study (it only adds more child-pointer
@@ -16,13 +16,18 @@ writes, i.e. *more* versions — our variant is conservative for Steam).
 * delete(k): splice leaf + parent out by CAS'ing the grandparent's child
   pointer to the sibling.
 * updates of an existing key's value replace the leaf node.
-* range rtx: snapshot traversal at timestamp t through child-pointer versions.
+* range scan (``range_scan``, DESIGN.md §7): explicit multi-slice snapshot
+  traversal inside a read-only transaction (rtx) — the scan walks the child
+  pointers' *versions* at the rtx timestamp t, yielding once per vCAS version
+  read, so concurrent updates interleave at pointer-dereference granularity
+  while the rtx pins its snapshot.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, List, Optional, Tuple
+from typing import Any, Generator, List, Optional, Tuple
 
+from repro.core.sim.machine import drain
 from repro.core.sim.vcas import VCas
 
 INF = math.inf
@@ -120,23 +125,31 @@ class MVTree:
         _, _, node = self._descend(k)
         return node.val if isinstance(node, Leaf) and node.key == k else None
 
-    def range_query(self, pid: int, lo: int, hi: int, t: float) -> List[Tuple]:
-        """Atomic range rtx at snapshot timestamp t (trees use the ordering)."""
+    def range_scan(self, pid: int, lo: int, hi: int, t: float) -> Generator:
+        """Sliced snapshot range scan at timestamp ``t``: in-order traversal
+        through child-pointer versions, one yield per vCAS version read;
+        ``return``s the sorted [(key, val)] snapshot of [lo, hi) as of t."""
         out: List[Tuple] = []
-        self._collect(self.root_v.read_version(t), lo, hi, t, out)
+        stack = [self.root_v]
+        while stack:
+            node = stack.pop().read_version(t)
+            yield
+            if node is None:
+                continue
+            if isinstance(node, Leaf):
+                if lo <= node.key < hi:
+                    out.append((node.key, node.val))
+                continue
+            # push right first so the left subtree pops (and emits) first
+            if hi > node.router:
+                stack.append(node.right_v)
+            if lo < node.router:
+                stack.append(node.left_v)
         return out
 
-    def _collect(self, node, lo, hi, t, out) -> None:
-        if node is None:
-            return
-        if isinstance(node, Leaf):
-            if lo <= node.key < hi:
-                out.append((node.key, node.val))
-            return
-        if lo < node.router:
-            self._collect(node.left_v.read_version(t), lo, hi, t, out)
-        if hi > node.router:
-            self._collect(node.right_v.read_version(t), lo, hi, t, out)
+    def range_query(self, pid: int, lo: int, hi: int, t: float) -> List[Tuple]:
+        """Atomic convenience form of ``range_scan`` (drained in one slice)."""
+        return drain(self.range_scan(pid, lo, hi, t))
 
     # -- space accounting -------------------------------------------------------------
     def root_vcas(self) -> List[VCas]:

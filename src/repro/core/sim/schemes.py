@@ -1,24 +1,44 @@
 """The five MVGC schemes compared by the paper (§3, §6).
 
-=========  ==========  =====================  ===================================
-scheme     list        identifies obsolete    removes them by
-=========  ==========  =====================  ===================================
-EBR        SSL         epoch quiescence       truncating list tails (oldest suffix)
-STEAM+LF   SSL         compact on every       SSL.compact with cached AnnScan
-                       append                 (periodic-scan heuristic, §6.1)
-BBF+       PDL         RangeTracker           TreeDL-lite splice (deferred
-                                              internal nodes; emulation, see
-                                              DESIGN.md)
-DL-RT      PDL         RangeTracker           PDL.remove on the exact node
-SL-RT      SSL         RangeTracker           SSL.compact on the implicated list
-=========  ==========  =====================  ===================================
+=========  ==========  ===================  =================================  ====================================
+scheme     list        identifies obsolete  removes them by                    range-scan cost accounting
+=========  ==========  ===================  =================================  ====================================
+EBR        SSL         epoch quiescence     truncating list tails (oldest      O(c) ``SSL.search`` hops per key;
+                                            suffix)                            c grows with the mid-list garbage
+                                                                               EBR can never truncate, so long
+                                                                               scans slow themselves down
+STEAM+LF   SSL         compact on every     SSL.compact with cached AnnScan    O(c) search hops per key, c kept
+                       append               (periodic-scan heuristic, §6.1)    small by per-append compaction —
+                                                                               but each append near a hot scanned
+                                                                               key pays an O(list) compact
+BBF+       PDL         RangeTracker         TreeDL-lite splice (deferred       O(c) ``PDL`` hops per key plus the
+                                            internal nodes; emulation, see     deferred internal nodes a scan
+                                            DESIGN.md §2)                      must still traverse (≤ 2x nodes)
+DL-RT      PDL         RangeTracker         PDL.remove on the exact node       O(c) hops per key; scans read
+                                                                               through remove chains of expected
+                                                                               length c ≈ 1 (Proposition 17)
+SL-RT      SSL         RangeTracker         SSL.compact on the implicated      O(c) search hops per key with c
+                                            list                               bounded by needed(A, t) versions
+=========  ==========  ===================  =================================  ====================================
 
-All schemes run in the operation-atomic discrete-event harness
-(``workload.py``): updates/rtxs interleave at sub-operation granularity, which
-is what drives the space dynamics (long rtxs pinning timestamps/epochs while
-updates allocate versions).  Work units model the shared-memory accesses the
-lock-free algorithms would perform, so throughput proxies remain faithful;
-the fine-grained interleavings themselves are validated separately by the
+Range-scan cost is charged where it falls: every versioned read a scan
+performs goes through ``SSL.search`` / ``PDL.search``, which increment the
+owning list's ``work`` per hop, so the throughput proxy automatically charges
+schemes whose reclamation leaves longer version lists for scans to wade
+through (the effect the EEMARQ-style workload family in ``workload.py``
+measures; DESIGN.md §7).
+
+Terminology: an **rtx** (read-only transaction) is the announce/unannounce
+window that pins a snapshot timestamp — ``begin_rtx``/``end_rtx`` below.  A
+**range scan** is the sliced traversal executed inside an rtx
+(``MVTree.range_scan`` / ``MVHashTable.range_scan``).
+
+All schemes run in the discrete-event harness (``workload.py``): updates and
+range scans interleave at sub-operation granularity, which is what drives the
+space dynamics (long scans pinning timestamps/epochs while updates allocate
+versions).  Work units model the shared-memory accesses the lock-free
+algorithms would perform, so throughput proxies remain faithful; the
+fine-grained interleavings themselves are validated separately by the
 step-machine tests.
 
 Space model (paper: Java reachability): a version node costs ``NODE_WORDS``

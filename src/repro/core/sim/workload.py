@@ -1,15 +1,36 @@
-"""Discrete-event workload driver for the MVGC scheme comparison (paper §6).
+"""Discrete-event workload driver for the MVGC scheme comparison (paper §6)
+and the EEMARQ-style range-scan workload family (DESIGN.md §7).
 
 Reproduces the paper's benchmark methodology on this container's single core:
 P logical processes execute a mix of updates (insert/delete, equal numbers),
-lookups and read-only transactions (range queries of size s) against one of
-the two multiversion data structures, with keys drawn uniformly or Zipfian
-(0.99, the YCSB default).  Processes interleave at *sub-operation* slices —
-an rtx spans many slices, pinning its timestamp/epoch while updates create
+point lookups and read-only transactions — each rtx performs one **range
+scan** of size s through the structure's versions at the rtx timestamp —
+against one of the two multiversion data structures, with keys drawn
+uniformly or Zipfian (0.99, the YCSB default).  Processes interleave at
+*sub-operation* slices: a range scan is an explicit multi-slice operation
+(``MVTree.range_scan`` / ``MVHashTable.range_scan``) that yields between
+versioned pointer reads, pinning its timestamp/epoch while updates create
 versions — which is exactly the dynamic that differentiates the schemes'
-space behaviour.
+space behaviour, and which EEMARQ (Sheffi et al., 2022) shows is where
+reclamation schemes diverge most.
 
-Measurements:
+Terminology (unified; see DESIGN.md §7): an **rtx** is the read-only
+transaction — the announce/unannounce pair that pins a snapshot timestamp
+(``scheme.begin_rtx`` / ``end_rtx``).  A **range scan** is the sliced
+traversal the rtx executes at that timestamp.  Earlier revisions used "rtx"
+for both; counters and config fields now say ``scan``.
+
+Workload shapes:
+* **split** mode (paper Figs 4-6): processes divided update / fixed-size-scan
+  / variable-size-scan in the paper's ratio.
+* **mixed** mode (paper Figs 7-8 and the EEMARQ matrix): every process draws
+  each operation from an :class:`~repro.core.sim.measure.OpMix`
+  (update/lookup/scan fractions + scan size).  ``eemarq_matrix`` enumerates
+  the range-heavy family: mixes 50/25/25 and 10/10/80, scan sizes
+  s ∈ {8, 64, 1024, 8192}, uniform + Zipfian 0.99, all five schemes, both
+  structures.
+
+Measurements (serialized via :class:`~repro.core.sim.measure.Measurement`):
 * **space**: words reachable from the data structure roots (Java GC model —
   version nodes at the scheme's per-node cost, chain cells, tree nodes
   reachable through old child-pointer versions, GC metadata).  Peak + final.
@@ -18,20 +39,35 @@ Measurements:
   execute (list traversals, compactions, RT flushes, announcement scans).
   Wall-clock threading is meaningless on a single hyperthread; relative work
   is the faithful signal and reproduces the paper's qualitative ordering.
+
+Validation: with ``WorkloadConfig.validate_scans`` every committed update is
+recorded in a :class:`~repro.core.sim.linearize.UpdateLog` and every
+completed scan is replayed against it at the scan's timestamp
+(:class:`~repro.core.sim.linearize.ScanValidator`) — a scheme that reclaims a
+version a pinned rtx still needs fails here, not silently.
 """
 from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, field
-from typing import Any, Dict, Generator, List, Optional
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Generator, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.sim.linearize import ScanValidator, UpdateLog
+from repro.core.sim.measure import (EEMARQ_MIXES, EEMARQ_SCAN_SIZES,
+                                    EEMARQ_ZIPFS, OpMix)
 from repro.core.sim.mvhash import MVHashTable
 from repro.core.sim.mvtree import MVTree, Leaf, Internal
-from repro.core.sim.schemes import SchemeBase, make_scheme
+from repro.core.sim.schemes import SCHEMES, SchemeBase, make_scheme
 from repro.core.sim.ssl_list import MVEnv
+
+# paper Figs 7-8: 50% updates, 49% lookups, 1% scans.  The paper uses
+# 1024-key scans; drivers size the scan to their key range via
+# dataclasses.replace (gc_comparison uses min(1024, n_keys)); 256 is the
+# standalone default for small test configs.
+PAPER_MIXED = OpMix(0.50, 0.49, 0.01, scan_size=256, name="paper-mixed")
 
 
 # ---------------------------------------------------------------------------
@@ -121,83 +157,144 @@ class WorkloadConfig:
     scheme: str = "slrt"              # ebr | steam | dlrt | slrt | bbf
     n_keys: int = 1024
     num_procs: int = 24
-    mode: str = "split"               # 'split' (Figs 4-6) | 'mixed' (Figs 7-8)
-    # split mode: procs divided update / fixed-rtx / variable-rtx (paper ratio)
-    rtx_size: int = 16
-    variable_rtx_max: Optional[int] = None   # default: n_keys
-    # mixed mode fractions (paper: 50% updates, 49% lookups, 1% rtx of 1024)
-    mixed_update_frac: float = 0.5
-    mixed_lookup_frac: float = 0.49
-    mixed_rtx_size: int = 256
+    mode: str = "split"               # 'split' (Figs 4-6) | 'mixed' (Figs 7-8, EEMARQ)
+    # split mode: procs divided update / fixed-scan / variable-scan (paper ratio)
+    scan_size: int = 16
+    variable_scan_max: Optional[int] = None   # default: n_keys
+    # mixed mode: operation distribution (default = the paper's Figs 7-8 mix)
+    op_mix: Optional[OpMix] = None
     ops_per_proc: int = 200
     zipf: float = 0.99                # 0 => uniform
     seed: int = 0
-    rtx_chunk: int = 8                # keys per rtx slice
+    scan_chunk: int = 8               # versioned reads per scan slice
     sample_every: int = 256           # slices between space samples
+    validate_scans: bool = False      # replay every scan against an UpdateLog
     scheme_kwargs: Dict[str, Any] = field(default_factory=dict)
+
+    def resolved_mix(self) -> OpMix:
+        return self.op_mix if self.op_mix is not None else PAPER_MIXED
+
+
+def eemarq_matrix(
+    *,
+    structures: Sequence[str] = ("hash", "tree"),
+    schemes: Sequence[str] = tuple(SCHEMES),
+    mixes: Sequence[OpMix] = EEMARQ_MIXES,
+    scan_sizes: Sequence[int] = EEMARQ_SCAN_SIZES,
+    zipfs: Sequence[float] = EEMARQ_ZIPFS,
+    n_keys: int = 1024,
+    num_procs: int = 16,
+    ops_per_proc: int = 120,
+    seed: int = 7,
+    **overrides,
+) -> List[WorkloadConfig]:
+    """Enumerate the EEMARQ-style range-scan workload matrix as ready-to-run
+    configs (mix × scan size × key distribution × scheme × structure).  The
+    defaults are the full family; drivers pass subsets for smoke/fast runs.
+    """
+    cfgs = []
+    for ds in structures:
+        for mix in mixes:
+            for size in scan_sizes:
+                for z in zipfs:
+                    for scheme in schemes:
+                        kw = ({"batch_size": max(8, num_procs)}
+                              if scheme in ("dlrt", "slrt", "bbf") else {})
+                        cfgs.append(WorkloadConfig(
+                            ds=ds, scheme=scheme, n_keys=n_keys,
+                            num_procs=num_procs, mode="mixed",
+                            op_mix=replace(mix, scan_size=size),
+                            ops_per_proc=ops_per_proc, zipf=z, seed=seed,
+                            scheme_kwargs=kw, **overrides,
+                        ))
+    return cfgs
 
 
 # ---------------------------------------------------------------------------
 # Process scripts (generators; one yield per slice)
 # ---------------------------------------------------------------------------
-def _do_update(pid, ds, env, scheme, sampler, rng, counters):
+def _do_update(pid, ds, env, scheme, sampler, rng, counters, log=None):
     ctx = scheme.begin_update(pid)
     env.advance_ts()
     k = sampler()
     if rng.random() < 0.5:
-        ds.insert(pid, k, rng.randrange(1 << 30))
+        v = rng.randrange(1 << 30)
+        ds.insert(pid, k, v)
     else:
         ds.delete(pid, k)
+        v = None
+    if log is not None:
+        # updates are slice-atomic and stamp versions with the post-advance
+        # global timestamp, so (read_ts, k, v) is the committed linearization
+        log.record(env.read_ts(), k, v)
     scheme.end_update(pid, ctx)
     counters["updates"] += 1
 
 
-def _rtx_slices(pid, ds, env, scheme, rng, size, key_range, chunk, counters):
+def _scan_slices(pid, ds, env, scheme, rng, size, key_range, chunk, counters,
+                 validator=None):
+    """One rtx executing one range scan of ``size`` keys, sliced every
+    ``chunk`` versioned reads.  Sizes above the key range clamp to a
+    full-range scan so interval placement stays randomized and
+    ``scan_keys`` counts keys that can actually exist."""
+    size = min(size, key_range)
     t = scheme.begin_rtx(pid)
     a = rng.randrange(1, max(2, key_range - size + 1))
-    done = 0
-    while done < size:
-        c = min(chunk, size - done)
-        ds.range_query(pid, a + done, a + done + c, t)
-        done += c
-        yield
+    gen = ds.range_scan(pid, a, a + size, t)
+    steps = 0
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            result = stop.value
+            break
+        steps += 1
+        if steps % chunk == 0:
+            yield
     scheme.end_rtx(pid)
-    counters["rtx"] += 1
-    counters["rtx_keys"] += size
+    counters["scans"] += 1
+    counters["scan_keys"] += size
+    if validator is not None:
+        validator.check(a, a + size, t, result)
 
 
-def update_script(pid, ds, env, scheme, sampler, rng, n_ops, counters) -> Generator:
+def update_script(pid, ds, env, scheme, sampler, rng, n_ops, counters,
+                  log=None) -> Generator:
     for _ in range(n_ops):
-        _do_update(pid, ds, env, scheme, sampler, rng, counters)
+        _do_update(pid, ds, env, scheme, sampler, rng, counters, log)
         yield
 
 
-def rtx_script(
-    pid, ds, env, scheme, rng, n_ops, size_fn, key_range, chunk, counters
+def scan_script(
+    pid, ds, env, scheme, rng, n_ops, size_fn, key_range, chunk, counters,
+    validator=None
 ) -> Generator:
     for _ in range(n_ops):
-        yield from _rtx_slices(
-            pid, ds, env, scheme, rng, size_fn(), key_range, chunk, counters
+        yield from _scan_slices(
+            pid, ds, env, scheme, rng, size_fn(), key_range, chunk, counters,
+            validator
         )
         yield
 
 
 def mixed_script(
-    pid, ds, env, scheme, sampler, rng, cfg: WorkloadConfig, key_range, counters
+    pid, ds, env, scheme, sampler, rng, cfg: WorkloadConfig, key_range,
+    counters, log=None, validator=None
 ) -> Generator:
+    mix = cfg.resolved_mix()
     for _ in range(cfg.ops_per_proc):
         r = rng.random()
-        if r < cfg.mixed_update_frac:
-            _do_update(pid, ds, env, scheme, sampler, rng, counters)
+        if r < mix.update_frac:
+            _do_update(pid, ds, env, scheme, sampler, rng, counters, log)
             yield
-        elif r < cfg.mixed_update_frac + cfg.mixed_lookup_frac:
+        elif r < mix.update_frac + mix.lookup_frac:
             ds.lookup(pid, sampler())
             counters["lookups"] += 1
             yield
         else:
-            yield from _rtx_slices(
-                pid, ds, env, scheme, rng, cfg.mixed_rtx_size, key_range,
-                cfg.rtx_chunk, counters,
+            yield from _scan_slices(
+                pid, ds, env, scheme, rng, mix.scan_size, key_range,
+                cfg.scan_chunk, counters, validator,
             )
             yield
 
@@ -211,6 +308,8 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
     rng = random.Random(cfg.seed)
     key_range = 2 * cfg.n_keys
     sampler = KeySampler(key_range, cfg.zipf, cfg.seed + 1)
+    log = UpdateLog() if cfg.validate_scans else None
+    validator = ScanValidator(log) if cfg.validate_scans else None
 
     ds = MVHashTable(env, scheme, cfg.n_keys) if cfg.ds == "hash" else MVTree(env, scheme)
     # prefill to ~n_keys live keys
@@ -218,36 +317,43 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
     for k in prefill:
         env.advance_ts()
         ds.insert(0, k, k)
+        if log is not None:
+            log.record(env.read_ts(), k, k)
     scheme.quiesce()
     base_work = _total_work(scheme)
-    counters: Dict[str, int] = {"updates": 0, "rtx": 0, "rtx_keys": 0, "lookups": 0}
+    counters: Dict[str, int] = {"updates": 0, "scans": 0, "scan_keys": 0,
+                                "lookups": 0}
 
     scripts: List[Generator] = []
     if cfg.mode == "split":
         per = cfg.num_procs // 3
-        vmax = cfg.variable_rtx_max or cfg.n_keys
+        vmax = cfg.variable_scan_max or cfg.n_keys
         for pid in range(per):  # update threads
             scripts.append(
-                update_script(pid, ds, env, scheme, sampler, rng, cfg.ops_per_proc, counters)
+                update_script(pid, ds, env, scheme, sampler, rng,
+                              cfg.ops_per_proc, counters, log)
             )
-        for pid in range(per, 2 * per):  # fixed-size rtx threads
+        for pid in range(per, 2 * per):  # fixed-size scan threads
             scripts.append(
-                rtx_script(pid, ds, env, scheme, rng,
-                           max(1, cfg.ops_per_proc // 4),
-                           lambda: cfg.rtx_size, key_range, cfg.rtx_chunk, counters)
+                scan_script(pid, ds, env, scheme, rng,
+                            max(1, cfg.ops_per_proc // 4),
+                            lambda: cfg.scan_size, key_range, cfg.scan_chunk,
+                            counters, validator)
             )
         sizes = [max(1, vmax >> i) for i in range(per)] or [vmax]
-        for j, pid in enumerate(range(2 * per, cfg.num_procs)):  # variable-size rtx
+        for j, pid in enumerate(range(2 * per, cfg.num_procs)):  # variable-size
             size = sizes[j % len(sizes)]
             scripts.append(
-                rtx_script(pid, ds, env, scheme, rng,
-                           max(1, cfg.ops_per_proc // 8),
-                           lambda s=size: s, key_range, cfg.rtx_chunk, counters)
+                scan_script(pid, ds, env, scheme, rng,
+                            max(1, cfg.ops_per_proc // 8),
+                            lambda s=size: s, key_range, cfg.scan_chunk,
+                            counters, validator)
             )
     else:
         for pid in range(cfg.num_procs):
             scripts.append(
-                mixed_script(pid, ds, env, scheme, sampler, rng, cfg, key_range, counters)
+                mixed_script(pid, ds, env, scheme, sampler, rng, cfg,
+                             key_range, counters, log, validator)
             )
 
     # round-robin at slice granularity
@@ -284,14 +390,17 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
         "counters": dict(counters),
         "total_work": total_work,
         "updates_per_mwork": counters["updates"] * 1e6 / max(1, total_work),
-        "rtx_keys_per_mwork": counters["rtx_keys"] * 1e6 / max(1, total_work),
-        "ops_per_mwork": (counters["updates"] + counters["rtx"] + counters["lookups"])
+        "scan_keys_per_mwork": counters["scan_keys"] * 1e6 / max(1, total_work),
+        "ops_per_mwork": (counters["updates"] + counters["scans"] + counters["lookups"])
         * 1e6 / max(1, total_work),
         "peak_space": peak,
         "avg_space": sum(space_samples) / max(1, len(space_samples)),
         "end_space": end_space,
         "end_space_pre_quiesce": end_space_pre_quiesce,
         "scheme_stats": scheme.stats(),
+        "scans_validated": validator.checked if validator else 0,
+        "scan_violations": validator.violations if validator else 0,
+        "violation_examples": validator.examples if validator else [],
     }
 
 

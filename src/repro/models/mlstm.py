@@ -1,7 +1,7 @@
 """xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
 memory, sequential with exponential-gate stabilization).
 
-Numerics note (recorded in DESIGN.md): the input gate uses log-sigmoid
+Numerics note (recorded in DESIGN.md §4): the input gate uses log-sigmoid
 (bounded) rather than the paper's raw-exp with max-stabilizer for the mLSTM —
 every exponent in the chunkwise form is then <= 0, so the chunk matmuls are
 overflow-free on bf16-accumulating hardware; the sLSTM keeps the original

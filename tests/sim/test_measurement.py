@@ -1,0 +1,138 @@
+"""OpMix / Measurement / BENCH-json serializer tests, plus end-to-end smoke
+of the ``benchmarks/range_query.py`` driver and the repo's docs checker
+(the same commands CI runs)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.sim.measure import (EEMARQ_MIXES, EEMARQ_SCAN_SIZES,
+                                    EEMARQ_ZIPFS, Measurement, OpMix,
+                                    REQUIRED_ROW_KEYS, bench_payload,
+                                    validate_bench_payload, write_bench_json)
+from repro.core.sim.workload import (WorkloadConfig, eemarq_matrix,
+                                     run_workload)
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+# ---------------------------------------------------------------------------
+# OpMix
+# ---------------------------------------------------------------------------
+def test_opmix_validates_fractions():
+    OpMix(0.5, 0.25, 0.25)                      # ok
+    with pytest.raises(ValueError):
+        OpMix(0.5, 0.5, 0.5)                    # sums to 1.5
+    with pytest.raises(ValueError):
+        OpMix(-0.1, 0.6, 0.5)                   # negative
+    with pytest.raises(ValueError):
+        OpMix(0.5, 0.25, 0.25, scan_size=0)     # scans but no size
+
+
+def test_opmix_labels():
+    assert OpMix(0.5, 0.25, 0.25).label == "50/25/25"
+    assert OpMix(0.1, 0.1, 0.8, name="custom").label == "custom"
+    assert [m.label for m in EEMARQ_MIXES] == ["50/25/25", "10/10/80"]
+
+
+def test_eemarq_matrix_enumeration():
+    full = eemarq_matrix()
+    # 2 structures x 2 mixes x 4 scan sizes x 2 zipfs x 5 schemes
+    assert len(full) == 2 * len(EEMARQ_MIXES) * len(EEMARQ_SCAN_SIZES) \
+        * len(EEMARQ_ZIPFS) * 5
+    assert {c.ds for c in full} == {"hash", "tree"}
+    assert {c.op_mix.scan_size for c in full} == set(EEMARQ_SCAN_SIZES)
+    sub = eemarq_matrix(structures=("hash",), scan_sizes=(8,),
+                        zipfs=(0.99,), schemes=("ebr", "slrt"))
+    assert len(sub) == 1 * 2 * 1 * 1 * 2
+    assert all(c.mode == "mixed" for c in sub)
+
+
+# ---------------------------------------------------------------------------
+# Measurement + serializer
+# ---------------------------------------------------------------------------
+def _tiny_result():
+    cfg = WorkloadConfig(
+        ds="hash", scheme="slrt", n_keys=24, num_procs=4, mode="mixed",
+        op_mix=OpMix(0.4, 0.2, 0.4, scan_size=8), ops_per_proc=20,
+        seed=5, sample_every=512, validate_scans=True,
+        scheme_kwargs={"batch_size": 4},
+    )
+    return run_workload(cfg)
+
+
+def test_measurement_from_result_and_schema(tmp_path):
+    r = _tiny_result()
+    m = Measurement.from_result("range_query", "hash/40-20-40/s=8", r)
+    row = m.to_row()
+    for k in REQUIRED_ROW_KEYS:
+        assert k in row, f"Measurement row missing required key {k}"
+    assert row["scheme"] == "slrt" and row["ds"] == "hash"
+    assert row["scan_size"] == 8
+    assert row["scans"] > 0 and row["scans_validated"] == row["scans"]
+    assert row["scan_violations"] == 0
+    assert row["peak_space_words"] >= row["end_space_words"] > 0
+
+    path = tmp_path / "BENCH_test.json"
+    write_bench_json(str(path), "range_query", [m], meta={"tier": "unit"})
+    payload = json.loads(path.read_text())
+    assert validate_bench_payload(payload) == []
+    assert payload["meta"]["tier"] == "unit"
+    assert payload["rows"][0]["scheme"] == "slrt"
+
+
+def test_validate_bench_payload_flags_problems():
+    assert "rows is empty" in " ".join(
+        validate_bench_payload({"bench": "x", "rows": []}))
+    r = _tiny_result()
+    m = Measurement.from_result("b", "f", r)
+    payload = bench_payload("b", [m])
+    del payload["rows"][0]["peak_space_words"]
+    problems = validate_bench_payload(payload)
+    assert any("peak_space_words" in p for p in problems)
+
+
+def test_split_mode_measurement_labels():
+    cfg = WorkloadConfig(ds="tree", scheme="ebr", n_keys=24, num_procs=6,
+                         mode="split", scan_size=8, ops_per_proc=12,
+                         sample_every=512)
+    m = Measurement.from_result("gc_comparison", "fig4", run_workload(cfg))
+    assert m.mix == "split" and m.scan_size == 8
+
+
+# ---------------------------------------------------------------------------
+# Driver + docs-check smoke (what CI's bench-smoke / docs steps run)
+# ---------------------------------------------------------------------------
+def _run(cmd, **kw):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=300, **kw)
+
+
+def test_range_query_smoke_emits_valid_bench_json(tmp_path):
+    out = str(tmp_path / "BENCH_range_query.json")
+    p = _run([sys.executable, "benchmarks/range_query.py", "--smoke",
+              "--out", out])
+    assert p.returncode == 0, p.stderr
+    payload = json.loads(open(out).read())
+    assert validate_bench_payload(payload) == []
+    rows = payload["rows"]
+    # acceptance coverage: all 5 schemes x 2 structures x 2 mixes
+    assert {r["scheme"] for r in rows} == {"ebr", "steam", "dlrt", "slrt", "bbf"}
+    assert {r["ds"] for r in rows} == {"hash", "tree"}
+    assert {r["mix"] for r in rows} == {"50/25/25", "10/10/80"}
+    assert all(r["scan_violations"] == 0 for r in rows)
+    assert all(r["scans_validated"] > 0 for r in rows)
+    # and the schema checker tool agrees
+    p = _run([sys.executable, "tools/check_bench_json.py", out,
+              "--schemes", "ebr,steam,dlrt,slrt,bbf",
+              "--structures", "hash,tree", "--min-mixes", "2"])
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+def test_design_doc_citations_resolve():
+    p = _run([sys.executable, "tools/check_design_refs.py"])
+    assert p.returncode == 0, p.stdout + p.stderr

@@ -1,0 +1,212 @@
+"""Range-scan edge cases + snapshot-consistency validation (DESIGN.md §7).
+
+Covers the corners where snapshot semantics are easiest to get wrong:
+empty ranges, keys deleted *while a scan is mid-flight* (must still appear —
+the scan reads the snapshot at its rtx timestamp, not the live state), scans
+pinned across EBR epoch advances, and Zipfian hot-key scans under STEAM+LF's
+per-append compaction.  The final parametrized test is the acceptance bar:
+>= 1000 randomized scans per structure x scheme, each replayed against the
+reference UpdateLog, zero violations.
+"""
+import random
+
+import pytest
+
+from repro.core.sim.linearize import (ScanValidator, UpdateLog,
+                                      check_range_scan)
+from repro.core.sim.machine import drain
+from repro.core.sim.measure import OpMix
+from repro.core.sim.mvhash import MVHashTable
+from repro.core.sim.mvtree import MVTree
+from repro.core.sim.schemes import SCHEMES, make_scheme
+from repro.core.sim.ssl_list import MVEnv
+from repro.core.sim.workload import WorkloadConfig, run_workload
+
+ALL = list(SCHEMES)
+RT_SCHEMES = ("dlrt", "slrt", "bbf")
+
+
+def _mk(ds_kind, scheme_name, P=4, n=32, **scheme_kw):
+    env = MVEnv(P)
+    if scheme_name in RT_SCHEMES:
+        scheme_kw.setdefault("batch_size", 2)
+    scheme = make_scheme(scheme_name, env, **scheme_kw)
+    ds = MVHashTable(env, scheme, n) if ds_kind == "hash" else MVTree(env, scheme)
+    return env, scheme, ds
+
+
+def _upd(env, scheme, ds, log, pid, k, v):
+    """One committed, logged update (v=None deletes), epoch-participating."""
+    ctx = scheme.begin_update(pid)
+    env.advance_ts()
+    if v is None:
+        ds.delete(pid, k)
+    else:
+        ds.insert(pid, k, v)
+    log.record(env.read_ts(), k, v)
+    scheme.end_update(pid, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Empty ranges
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+def test_empty_range_scan(ds_kind):
+    env, scheme, ds = _mk(ds_kind, "slrt")
+    log = UpdateLog()
+    for k in range(20, 30):
+        _upd(env, scheme, ds, log, 0, k, k * 7)
+    t = scheme.begin_rtx(1)
+    # degenerate interval [5, 5) and a populated-structure miss [1, 15)
+    assert drain(ds.range_scan(1, 5, 5, t)) == []
+    assert drain(ds.range_scan(1, 1, 15, t)) == []
+    ok, _ = check_range_scan(log, 1, 15, t, [])
+    assert ok
+    scheme.end_rtx(1)
+
+
+def test_scan_on_empty_structures():
+    for ds_kind in ("hash", "tree"):
+        env, scheme, ds = _mk(ds_kind, "ebr")
+        t = scheme.begin_rtx(0)
+        assert drain(ds.range_scan(0, 1, 100, t)) == []
+        scheme.end_rtx(0)
+
+
+# ---------------------------------------------------------------------------
+# Deletion mid-scan: snapshot semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+@pytest.mark.parametrize("scheme_name", ["steam", "slrt", "ebr"])
+def test_key_deleted_mid_scan_still_appears(ds_kind, scheme_name):
+    """A scan pinned at t must report keys deleted (or overwritten) after t —
+    including keys its cursor has not reached yet."""
+    env, scheme, ds = _mk(ds_kind, scheme_name)
+    log = UpdateLog()
+    for k in range(1, 13):
+        _upd(env, scheme, ds, log, 0, k, 100 + k)
+
+    t = scheme.begin_rtx(1)
+    expected = log.snapshot_range(1, 13, t)
+    gen = ds.range_scan(1, 1, 13, t)
+    for _ in range(3):                       # cursor part-way through
+        next(gen)
+    _upd(env, scheme, ds, log, 0, 10, None)  # delete ahead of the cursor
+    _upd(env, scheme, ds, log, 0, 2, None)   # delete behind it
+    _upd(env, scheme, ds, log, 0, 7, 999)    # overwrite mid-range
+    result = drain(gen)
+    scheme.end_rtx(1)
+
+    assert sorted(result) == expected
+    assert (10, 110) in result and (2, 102) in result, \
+        "deleted keys must still appear at the scan's snapshot"
+    assert (7, 107) in result and (7, 999) not in result, \
+        "post-snapshot overwrite must not leak into the scan"
+    # and a fresh scan *after* the deletes sees the new state
+    t2 = scheme.begin_rtx(1)
+    result2 = drain(ds.range_scan(1, 1, 13, t2))
+    scheme.end_rtx(1)
+    assert sorted(result2) == log.snapshot_range(1, 13, t2)
+    assert not any(k in (2, 10) for k, _ in result2)
+
+
+# ---------------------------------------------------------------------------
+# EBR epoch advance under a pinned scan
+# ---------------------------------------------------------------------------
+def test_scan_concurrent_with_ebr_epoch_advance():
+    """With advance_every=2, concurrent updates drive the epoch protocol
+    while a scan is pinned: the epoch may advance past the pin at most once
+    (the announced epoch then blocks further advances), and the scan's
+    snapshot must survive the frees of older epochs."""
+    env, scheme, ds = _mk("hash", "ebr", advance_every=2)
+    log = UpdateLog()
+    for k in range(1, 17):
+        _upd(env, scheme, ds, log, 0, k, k)
+    # churn so earlier epochs retire and frees happen
+    for i in range(20):
+        _upd(env, scheme, ds, log, i % 3, 1 + i % 16, 50 + i)
+
+    t = scheme.begin_rtx(3)
+    e0 = scheme.epoch
+    expected = log.snapshot_range(1, 17, t)
+    gen = ds.range_scan(3, 1, 17, t)
+    for step in range(8):                    # interleave scan and updates
+        next(gen)
+        _upd(env, scheme, ds, log, step % 3, 1 + (5 * step) % 16, 1000 + step)
+    result = drain(gen)
+    assert scheme.epoch == e0 + 1, \
+        "epoch should advance exactly once past the pinned announcement"
+    assert sorted(result) == expected
+    scheme.end_rtx(3)
+
+    # unpinned, the epoch moves freely again
+    for i in range(12):
+        _upd(env, scheme, ds, log, i % 3, 1 + i % 16, 2000 + i)
+    assert scheme.epoch >= e0 + 2
+
+
+# ---------------------------------------------------------------------------
+# Zipfian hot keys under STEAM+LF compaction
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+def test_zipfian_hot_key_scan_under_steam_compaction(ds_kind):
+    """STEAM+LF compacts a version list on every append; under Zipf 0.99 the
+    hot keys' lists compact constantly while scans read them.  Every scan
+    must still be snapshot-consistent."""
+    cfg = WorkloadConfig(
+        ds=ds_kind, scheme="steam", n_keys=32, num_procs=6, mode="mixed",
+        op_mix=OpMix(0.45, 0.10, 0.45, scan_size=16), ops_per_proc=60,
+        zipf=0.99, seed=11, scan_chunk=3, sample_every=4096,
+        validate_scans=True, scheme_kwargs={"scan_every": 4},
+    )
+    r = run_workload(cfg)
+    assert r["scheme_stats"]["compactions"] > 0
+    assert r["scans_validated"] >= 100
+    assert r["scan_violations"] == 0, r["violation_examples"]
+
+
+# ---------------------------------------------------------------------------
+# The validator itself must be falsifiable
+# ---------------------------------------------------------------------------
+def test_validator_catches_corrupt_results():
+    log = UpdateLog()
+    log.record(1, 5, "a")
+    log.record(3, 5, "b")
+    log.record(4, 6, "c")
+    log.record(6, 5, None)
+    # correct snapshots
+    assert check_range_scan(log, 1, 10, 2, [(5, "a")])[0]
+    assert check_range_scan(log, 1, 10, 5, [(5, "b"), (6, "c")])[0]
+    assert check_range_scan(log, 1, 10, 7, [(6, "c")])[0]
+    # future-value leak, stale value, phantom, and missing key all fail
+    assert not check_range_scan(log, 1, 10, 2, [(5, "b")])[0]
+    assert not check_range_scan(log, 1, 10, 5, [(5, "a"), (6, "c")])[0]
+    assert not check_range_scan(log, 1, 10, 7, [(5, "b"), (6, "c")])[0]
+    assert not check_range_scan(log, 1, 10, 5, [(6, "c")])[0]
+    v = ScanValidator(log)
+    v.check(1, 10, 7, [(6, "c")])
+    v.check(1, 10, 7, [(6, "WRONG")])
+    assert v.checked == 2 and v.violations == 1
+    assert v.examples[0]["extra"] == [(6, "WRONG")]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: >= 1000 randomized validated scans per structure x scheme
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+@pytest.mark.parametrize("scheme_name", ALL)
+def test_thousand_randomized_scans_snapshot_consistent(ds_kind, scheme_name):
+    kw = {"batch_size": 8} if scheme_name in RT_SCHEMES else {}
+    cfg = WorkloadConfig(
+        ds=ds_kind, scheme=scheme_name, n_keys=32, num_procs=8, mode="mixed",
+        op_mix=OpMix(0.15, 0.05, 0.80, scan_size=12), ops_per_proc=175,
+        zipf=0.99, seed=29, scan_chunk=3, sample_every=1_000_000,
+        validate_scans=True, scheme_kwargs=kw,
+    )
+    r = run_workload(cfg)
+    assert r["scans_validated"] >= 1000, \
+        f"only {r['scans_validated']} scans completed; config too small"
+    assert r["scan_violations"] == 0, (
+        f"{scheme_name}/{ds_kind}: {r['scan_violations']} of "
+        f"{r['scans_validated']} scans broke snapshot consistency: "
+        f"{r['violation_examples']}")

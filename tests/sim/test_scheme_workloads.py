@@ -22,7 +22,7 @@ ALL = list(SCHEMES)
 def _cfg(scheme, ds="hash", **over):
     kw = {"batch_size": 4} if scheme in ("dlrt", "slrt", "bbf") else {}
     base = dict(ds=ds, scheme=scheme, n_keys=48, num_procs=6,
-                ops_per_proc=30, mode="split", rtx_size=24,
+                ops_per_proc=30, mode="split", scan_size=24,
                 sample_every=128, seed=3, scheme_kwargs=kw)
     base.update(over)
     return WorkloadConfig(**base)
@@ -33,7 +33,7 @@ def _cfg(scheme, ds="hash", **over):
 def test_workload_smoke_all_schemes(scheme_name, ds_kind):
     """Every scheme completes the split workload; counters and space sane."""
     r = run_workload(_cfg(scheme_name, ds_kind))
-    assert r["counters"]["updates"] > 0 and r["counters"]["rtx"] > 0
+    assert r["counters"]["updates"] > 0 and r["counters"]["scans"] > 0
     assert r["total_work"] > 0
     assert r["peak_space"]["versions"] >= r["end_space"]["versions"]
     # quiescent state: at most the current version per list survives

@@ -108,8 +108,11 @@ def test_ebr_blows_up_with_long_rtxs():
         kw = {"batch_size": 8} if scheme in ("slrt", "dlrt", "bbf") else {}
         cfg = WorkloadConfig(
             ds="hash", scheme=scheme, n_keys=64, num_procs=9,
-            ops_per_proc=400, mode="split", rtx_size=512,
-            variable_rtx_max=512, zipf=0.99, sample_every=64, seed=7,
+            ops_per_proc=400, mode="split", scan_size=512,
+            variable_scan_max=512, zipf=0.99, sample_every=64, seed=7,
+            # scans clamp to the 128-key range; chunk=2 keeps each scan
+            # pinned across ~64 slices (the long-rtx dynamic under test)
+            scan_chunk=2,
             scheme_kwargs=kw,
         )
         return run_workload(cfg)["peak_space"]["versions"]

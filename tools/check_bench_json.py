@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Schema check for a BENCH_*.json file (run by the CI bench-smoke step).
+
+  PYTHONPATH=src python tools/check_bench_json.py BENCH_range_query.json \\
+      --schemes ebr,steam,dlrt,slrt,bbf --structures hash,tree --min-mixes 2
+
+Fails (exit 1) if required top-level/row keys are missing, rows are empty,
+requested scheme/structure coverage is absent, or any row reports snapshot
+violations.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.sim.measure import validate_bench_payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--schemes", default="",
+                    help="comma-separated schemes that must all appear")
+    ap.add_argument("--structures", default="",
+                    help="comma-separated structures that must all appear")
+    ap.add_argument("--min-mixes", type=int, default=0,
+                    help="minimum number of distinct operation mixes")
+    args = ap.parse_args()
+
+    payload = json.load(open(args.path))
+    problems = validate_bench_payload(payload)
+
+    rows = payload.get("rows", [])
+    if args.schemes:
+        want = set(args.schemes.split(","))
+        got = {r.get("scheme") for r in rows}
+        if not want <= got:
+            problems.append(f"missing schemes: {sorted(want - got)}")
+    if args.structures:
+        want = set(args.structures.split(","))
+        got = {r.get("ds") for r in rows}
+        if not want <= got:
+            problems.append(f"missing structures: {sorted(want - got)}")
+    if args.min_mixes:
+        mixes = {r.get("mix") for r in rows}
+        if len(mixes) < args.min_mixes:
+            problems.append(f"only {len(mixes)} mixes present ({sorted(mixes)}), "
+                            f"need >= {args.min_mixes}")
+    bad = [r for r in rows if r.get("scan_violations", 0)]
+    if bad:
+        problems.append(f"{len(bad)} rows report snapshot violations")
+
+    if problems:
+        print(f"FAIL {args.path}:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"OK {args.path}: {len(rows)} rows, "
+          f"{len({r['scheme'] for r in rows})} schemes, "
+          f"{len({r['ds'] for r in rows})} structures, "
+          f"{len({r['mix'] for r in rows})} mixes")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,80 @@
+#!/usr/bin/env python
+"""Docs check: every in-repo DESIGN.md citation must resolve.
+
+Scans src/, benchmarks/, tests/ and tools/ for references to DESIGN.md,
+extracts any cited section number, and fails (exit 1) if
+
+  * DESIGN.md does not exist at the repo root, or
+  * a cited section (e.g. "DESIGN.md §7") has no matching "## §7" heading.
+
+Run by the CI docs step and by tests/sim/test_measurement.py.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = ("src", "benchmarks", "tests", "tools")
+SCAN_EXTS = (".py", ".md", ".yml", ".yaml", ".toml")
+
+# assembled so this file's own source doesn't read as a section citation
+_DOC = "DESIGN" + ".md"
+CITE_RE = re.compile(_DOC + r"\s*§\s*(\d+)")
+PLAIN_RE = re.compile(_DOC)
+HEADING_RE = re.compile(r"^#{1,6}\s*§\s*(\d+)\b", re.MULTILINE)
+
+
+def main() -> int:
+    design_path = os.path.join(REPO, _DOC)
+    citations = []   # (relpath, lineno, section-or-None)
+    for d in SCAN_DIRS:
+        for root, _dirs, files in os.walk(os.path.join(REPO, d)):
+            for fn in files:
+                if not fn.endswith(SCAN_EXTS):
+                    continue
+                path = os.path.join(root, fn)
+                rel = os.path.relpath(path, REPO)
+                try:
+                    text = open(path, encoding="utf-8", errors="replace").read()
+                except OSError:
+                    continue
+                for lineno, line in enumerate(text.splitlines(), 1):
+                    if not PLAIN_RE.search(line):
+                        continue
+                    secs = CITE_RE.findall(line)
+                    if secs:
+                        for s in secs:
+                            citations.append((rel, lineno, int(s)))
+                    else:
+                        citations.append((rel, lineno, None))
+
+    if not citations:
+        print("no DESIGN.md citations found — nothing to check")
+        return 0
+
+    if not os.path.exists(design_path):
+        print(f"FAIL: {len(citations)} citations but {_DOC} does not exist")
+        for rel, ln, sec in citations[:20]:
+            print(f"  {rel}:{ln}" + (f" (§{sec})" if sec else ""))
+        return 1
+
+    sections = {int(s) for s in HEADING_RE.findall(open(design_path).read())}
+    missing = [(rel, ln, sec) for rel, ln, sec in citations
+               if sec is not None and sec not in sections]
+    cited = sorted({sec for _, _, sec in citations if sec is not None})
+    print(f"{len(citations)} {_DOC} citations "
+          f"({len([c for c in citations if c[2] is not None])} with sections: "
+          f"{cited}); document defines sections {sorted(sections)}")
+    if missing:
+        print(f"FAIL: {len(missing)} citations target missing sections:")
+        for rel, ln, sec in missing:
+            print(f"  {rel}:{ln} cites §{sec}")
+        return 1
+    print("OK: every cited section exists")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
