@@ -17,16 +17,24 @@ throughput in completed ops per million simulated work units).
   python benchmarks/range_query.py            # standard matrix (~2 min)
   python benchmarks/range_query.py --smoke    # tiny CI matrix (seconds)
   python benchmarks/range_query.py --full     # full EEMARQ matrix (slow)
+  python benchmarks/range_query.py --tiers smoke,standard  # concatenated
   python benchmarks/range_query.py --out PATH # where to write the JSON
+
+The committed repo-root ``BENCH_range_query.json`` is generated with
+``--tiers smoke,standard`` so the CI ``bench-trajectory`` step can compare a
+fresh ``--smoke`` emission cell-for-cell against the committed smoke rows
+(``tools/compare_bench.py``).
 """
 from __future__ import annotations
 
 import os
 import sys
 import time
-from typing import Dict, List
+from typing import List
 
 from repro.core.sim.measure import (EEMARQ_MIXES, Measurement,
+                                    parse_out_argv, parse_tier_argv,
+                                    print_rows_by_figure, tier_meta,
                                     write_bench_json)
 from repro.core.sim.workload import eemarq_matrix, run_workload
 
@@ -78,33 +86,21 @@ def run_matrix(tier: str = "standard") -> List[Measurement]:
     return rows
 
 
-def print_tables(rows: List[Measurement]) -> None:
-    by_figure: Dict[str, List[Dict]] = {}
-    for m in rows:
-        by_figure.setdefault(m.figure, []).append(m.to_row())
-    for figure, rs in by_figure.items():
-        print(f"\n== {figure} ==")
-        print("  ".join(f"{c:>20s}" for c in TABLE_COLS))
-        for r in rs:
-            print("  ".join(f"{str(r[c]):>20s}" for c in TABLE_COLS))
-
-
 def main(argv: List[str]) -> int:
-    tier = "standard"
-    if "--smoke" in argv:
-        tier = "smoke"
-    elif "--full" in argv:
-        tier = "full"
-    out = DEFAULT_OUT
-    if "--out" in argv:
-        out = argv[argv.index("--out") + 1]
+    tiers, err = parse_tier_argv(argv, TIERS)
+    if err is None:
+        out, err = parse_out_argv(argv, DEFAULT_OUT)
+    if err:
+        print(err, file=sys.stderr)
+        return 2
 
     t0 = time.time()
-    rows = run_matrix(tier)
-    print_tables(rows)
+    rows: List[Measurement] = []
+    for tier in tiers:
+        rows.extend(run_matrix(tier))
+    print_rows_by_figure(rows, TABLE_COLS, width=20)
     payload = write_bench_json(out, "range_query", rows,
-                               meta={"tier": tier, **{k: list(v) if isinstance(v, tuple) else v
-                                                      for k, v in TIERS[tier].items()}})
+                               meta=tier_meta(tiers, TIERS))
     violations = sum(m.scan_violations for m in rows)
     validated = sum(m.scans_validated for m in rows)
     print(f"\nwrote {out} ({len(payload['rows'])} rows, "

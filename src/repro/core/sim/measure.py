@@ -1,18 +1,23 @@
 """Shared operation-mix and measurement plumbing for the sim benchmarks.
 
-Both benchmark drivers (``benchmarks/gc_comparison.py`` — the paper's Figures
-4-8 — and ``benchmarks/range_query.py`` — the EEMARQ-style range-scan family,
-DESIGN.md §7) build their workloads from :class:`OpMix` and serialize their
-results through :class:`Measurement` / :func:`write_bench_json`, so the two
-trajectories stay apples-to-apples: same space units (Java-reachability
-words, DESIGN.md §5), same throughput proxy (completed operations per million
-simulated work units), same JSON schema.
+All three benchmark drivers (``benchmarks/gc_comparison.py`` — the paper's
+Figures 4-8 —, ``benchmarks/range_query.py`` — the EEMARQ-style range-scan
+family, DESIGN.md §7 — and ``benchmarks/txn_mix.py`` — the read-write
+update-in-scan txn family, DESIGN.md §8) build their workloads from
+:class:`OpMix` and serialize their results through :class:`Measurement` /
+:func:`write_bench_json`, so the trajectories stay apples-to-apples: same
+space units (Java-reachability words, DESIGN.md §5), same throughput proxy
+(completed operations per million simulated work units), same JSON schema
+(which ``tools/compare_bench.py`` — the CI bench-trajectory gate — diffs
+against the committed repo-root files).
 
-``BENCH_*.json`` schema (``SCHEMA_VERSION`` = 1)::
+``BENCH_*.json`` schema (``SCHEMA_VERSION`` = 2 — v2 added the read-write
+transaction row fields ``txn_size`` / ``rw_ratio`` / ``txns_committed`` /
+``txns_aborted`` / ``abort_rate``, DESIGN.md §8)::
 
     {
       "bench": "<driver name>",
-      "schema_version": 1,
+      "schema_version": 2,
       "units": {...},                 # human-readable unit strings
       "meta": {...},                  # driver-specific run parameters
       "rows": [<Measurement dict>, ...]
@@ -27,7 +32,7 @@ import json
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 UNITS = {
     "space": "words, Java-style reachability from the structure roots "
@@ -37,6 +42,10 @@ UNITS = {
                   "(work unit = one shared-memory access of the lock-free "
                   "algorithm; DESIGN.md §5)",
     "scan_size": "keys per range scan (half-open key interval [lo, lo+s))",
+    "txn_size": "buffered writes per read-write transaction (DESIGN.md §8)",
+    "abort_rate": "aborted commit attempts / all commit attempts, in [0, 1]",
+    "rw_ratio": "read-write transactions / all transactions (scan-only rtxs "
+                "+ read-write txns), in [0, 1]",
 }
 
 REQUIRED_TOP_KEYS = ("bench", "schema_version", "units", "meta", "rows")
@@ -49,6 +58,8 @@ REQUIRED_ROW_KEYS = (
     "peak_space_words", "peak_versions", "avg_space_words",
     "end_space_words", "end_versions_per_list",
     "scans_validated", "scan_violations", "wall_s",
+    # read-write transactions (schema v2, DESIGN.md §8)
+    "txn_size", "rw_ratio", "txns_committed", "txns_aborted", "abort_rate",
 )
 
 
@@ -60,9 +71,12 @@ class OpMix:
     """A mixed workload's operation distribution.
 
     Fractions are per-operation probabilities (update / point lookup / range
-    scan) and must sum to 1.  ``scan_size`` is the number of keys each range
-    scan covers.  EEMARQ (Sheffi et al., 2022) names its mixes
-    "update/lookup/scan" percentage triples; ``name`` carries that label.
+    scan / read-write transaction) and must sum to 1.  ``scan_size`` is the
+    number of keys each range scan covers — read-write transactions scan the
+    same interval size before writing ``txn_size`` buffered keys inside it
+    (EEMARQ-style update-in-scan, DESIGN.md §8).  EEMARQ (Sheffi et al.,
+    2022) names its mixes "update/lookup/scan" percentage triples; ``name``
+    carries that label (four components when ``rwtxn_frac`` > 0).
     """
 
     update_frac: float
@@ -70,24 +84,37 @@ class OpMix:
     scan_frac: float
     scan_size: int = 64
     name: str = ""
+    rwtxn_frac: float = 0.0
+    txn_size: int = 4
 
     def __post_init__(self):
-        for f in (self.update_frac, self.lookup_frac, self.scan_frac):
+        for f in (self.update_frac, self.lookup_frac, self.scan_frac,
+                  self.rwtxn_frac):
             if not (0.0 <= f <= 1.0):
                 raise ValueError(f"OpMix fraction {f} outside [0, 1]")
-        total = self.update_frac + self.lookup_frac + self.scan_frac
+        total = (self.update_frac + self.lookup_frac + self.scan_frac
+                 + self.rwtxn_frac)
         if abs(total - 1.0) > 1e-9:
             raise ValueError(f"OpMix fractions sum to {total}, expected 1.0")
-        if self.scan_frac > 0 and self.scan_size < 1:
-            raise ValueError("scan_frac > 0 requires scan_size >= 1")
+        if (self.scan_frac > 0 or self.rwtxn_frac > 0) and self.scan_size < 1:
+            raise ValueError("scan/rwtxn fractions > 0 require scan_size >= 1")
+        if self.rwtxn_frac > 0 and self.txn_size < 1:
+            raise ValueError("rwtxn_frac > 0 requires txn_size >= 1")
 
     @property
     def label(self) -> str:
         if self.name:
             return self.name
-        return (f"{round(100 * self.update_frac)}/"
-                f"{round(100 * self.lookup_frac)}/"
-                f"{round(100 * self.scan_frac)}")
+        parts = [self.update_frac, self.lookup_frac, self.scan_frac]
+        if self.rwtxn_frac > 0:
+            parts.append(self.rwtxn_frac)
+        return "/".join(str(round(100 * p)) for p in parts)
+
+    @property
+    def rw_ratio(self) -> float:
+        """Share of transactions (scan-only rtxs + rw txns) that read-write."""
+        txn_frac = self.scan_frac + self.rwtxn_frac
+        return round(self.rwtxn_frac / txn_frac, 4) if txn_frac > 0 else 0.0
 
 
 # The EEMARQ-style range-heavy mixes (update/lookup/scan).
@@ -97,6 +124,16 @@ EEMARQ_MIXES = (
 )
 EEMARQ_SCAN_SIZES = (8, 64, 1024, 8192)
 EEMARQ_ZIPFS = (0.0, 0.99)   # uniform + the YCSB-default Zipfian
+
+# The read-write update-in-scan mixes (update/lookup/scan/rwtxn; DESIGN.md
+# §8): a balanced mix (half of all txns read-write) and a txn-heavy one
+# (three quarters read-write), spanning the rw/ro-ratio axis.
+EEMARQ_RW_MIXES = (
+    OpMix(0.30, 0.20, 0.25, rwtxn_frac=0.25, name="30/20/25/25"),
+    OpMix(0.10, 0.10, 0.20, rwtxn_frac=0.60, name="10/10/20/60"),
+)
+EEMARQ_TXN_SIZES = (2, 8)
+EEMARQ_RW_SCAN_SIZES = (16, 128)
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +171,11 @@ class Measurement:
     scans_validated: int
     scan_violations: int
     wall_s: float
+    txn_size: int = 0
+    rw_ratio: float = 0.0
+    txns_committed: int = 0
+    txns_aborted: int = 0
+    abort_rate: float = 0.0
     scheme_stats: Dict[str, Any] = field(default_factory=dict)
 
     @classmethod
@@ -178,11 +220,80 @@ class Measurement:
             scans_validated=result.get("scans_validated", 0),
             scan_violations=result.get("scan_violations", 0),
             wall_s=round(wall_s, 2),
+            txn_size=(mix.txn_size if mix is not None and mix.rwtxn_frac > 0
+                      else 0),
+            rw_ratio=(mix.rw_ratio if mix is not None else 0.0),
+            txns_committed=c.get("txn_commits", 0),
+            txns_aborted=c.get("txn_aborts", 0),
+            abort_rate=round(
+                c.get("txn_aborts", 0)
+                / max(1, c.get("txn_commits", 0) + c.get("txn_aborts", 0)), 4),
             scheme_stats=dict(result.get("scheme_stats", {})),
         )
 
     def to_row(self) -> Dict[str, Any]:
         return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Shared CLI scaffolding for the tiered bench drivers
+# ---------------------------------------------------------------------------
+def parse_tier_argv(argv: Sequence[str], tiers: Dict[str, Any],
+                    default_tier: str = "standard"):
+    """Shared ``--smoke`` / ``--full`` / ``--tiers a,b`` parsing for
+    ``benchmarks/range_query.py`` and ``benchmarks/txn_mix.py``.  Returns
+    ``(tier_names, None)`` or ``(None, error_message)``."""
+    names = [default_tier]
+    if "--smoke" in argv:
+        names = ["smoke"]
+    elif "--full" in argv:
+        names = ["full"]
+    if "--tiers" in argv:
+        i = argv.index("--tiers") + 1
+        if i >= len(argv):
+            return None, "--tiers needs a comma-separated value"
+        names = argv[i].split(",")
+    unknown = [t for t in names if t not in tiers]
+    if unknown:
+        return None, f"unknown tier(s) {unknown} (have {list(tiers)})"
+    return names, None
+
+
+def parse_out_argv(argv: Sequence[str], default_out: str):
+    """Shared ``--out PATH`` parsing; returns ``(path, None)`` or
+    ``(None, error_message)``."""
+    if "--out" in argv:
+        i = argv.index("--out") + 1
+        if i >= len(argv):
+            return None, "--out needs a path"
+        return argv[i], None
+    return default_out, None
+
+
+def tier_meta(tier_names: Sequence[str],
+              tiers: Dict[str, Any]) -> Dict[str, Any]:
+    """BENCH ``meta`` block for a (possibly concatenated) tier run."""
+    meta: Dict[str, Any] = {
+        "tier": tier_names[0] if len(tier_names) == 1 else "+".join(tier_names),
+        "tiers": list(tier_names),
+    }
+    for t in tier_names:
+        meta[t] = {k: list(v) if isinstance(v, tuple) else v
+                   for k, v in tiers[t].items()}
+    return meta
+
+
+def print_rows_by_figure(rows: Sequence[Measurement],
+                         cols: Sequence[str], width: int = 18) -> None:
+    """Group measurement rows by figure and print fixed-width tables."""
+    by_figure: Dict[str, List[Dict[str, Any]]] = {}
+    for m in rows:
+        by_figure.setdefault(m.figure, []).append(m.to_row())
+    for figure, rs in by_figure.items():
+        print(f"\n== {figure} ==")
+        print("  ".join(f"{c:>{width}s}" for c in cols))
+        for r in rs:
+            print("  ".join(f"{str(r[c]):>{width}s}" for c in cols))
 
 
 # ---------------------------------------------------------------------------

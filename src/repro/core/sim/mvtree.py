@@ -125,6 +125,15 @@ class MVTree:
         _, _, node = self._descend(k)
         return node.val if isinstance(node, Leaf) and node.key == k else None
 
+    def rtx_lookup(self, pid: int, k: int, t: float) -> Optional[Any]:
+        """Read key k in the snapshot at timestamp t: descend through the
+        child pointers' *versions* at t (one key of an rtx / txn read set)."""
+        node = self.root_v.read_version(t)
+        while isinstance(node, Internal):
+            child = node.left_v if k < node.router else node.right_v
+            node = child.read_version(t)
+        return node.val if isinstance(node, Leaf) and node.key == k else None
+
     def range_scan(self, pid: int, lo: int, hi: int, t: float) -> Generator:
         """Sliced snapshot range scan at timestamp ``t``: in-order traversal
         through child-pointer versions, one yield per vCAS version read;

@@ -31,7 +31,11 @@ measures; DESIGN.md §7).
 Terminology: an **rtx** (read-only transaction) is the announce/unannounce
 window that pins a snapshot timestamp — ``begin_rtx``/``end_rtx`` below.  A
 **range scan** is the sliced traversal executed inside an rtx
-(``MVTree.range_scan`` / ``MVHashTable.range_scan``).
+(``MVTree.range_scan`` / ``MVHashTable.range_scan``).  A **read-write txn**
+(``repro.core.sim.txn.Txn``, DESIGN.md §8) pins its snapshot the same way via
+``begin_txn`` but keeps the pin through its commit-time writes; reclamation
+must respect these write-phase pins exactly like scan pins
+(``commit_txn``/``abort_txn`` release them).
 
 All schemes run in the discrete-event harness (``workload.py``): updates and
 range scans interleave at sub-operation granularity, which is what drives the
@@ -69,6 +73,7 @@ class SchemeBase:
         self.env = env
         self.work = 0           # scheme-only overhead (list work is in lst.work)
         self.gc_list_work = 0   # list work performed on behalf of GC (reporting)
+        self.txn_pins = 0       # read-write txn snapshot pins taken
         self.lists: List[Any] = []
 
     # -- list/node factories ----------------------------------------------
@@ -97,6 +102,29 @@ class SchemeBase:
     def end_rtx(self, pid: int) -> None:
         self.env.unannounce(pid)
         self.work += 1
+
+    # -- read-write transactions (DESIGN.md §8) -----------------------------
+    # A txn's snapshot pin is the same announce/unannounce (plus, for EBR,
+    # epoch-pin) window as an rtx — but it *survives into the write phase*:
+    # commit-time writes run under the begin_txn pin, with no per-write
+    # begin_update/end_update (which would, for EBR, re-pin at the current
+    # epoch and release the snapshot mid-transaction).  Every scheme's
+    # reclamation therefore respects write-phase pins exactly as it respects
+    # scan pins: the announce array (RangeTracker schemes, Steam's AnnScan)
+    # or the pinned epoch (EBR) keeps the begin-ts snapshot live until
+    # commit_txn/abort_txn releases it.
+    def begin_txn(self, pid: int) -> float:
+        """Pin a snapshot for a read-write transaction; returns begin ts."""
+        self.txn_pins += 1
+        return self.begin_rtx(pid)
+
+    def commit_txn(self, pid: int) -> None:
+        """Release the pin after the commit's writes are all applied."""
+        self.end_rtx(pid)
+
+    def abort_txn(self, pid: int) -> None:
+        """Release the pin of an aborted txn (no writes were applied)."""
+        self.end_rtx(pid)
 
     # -- the GC hook ---------------------------------------------------------
     def on_overwrite(self, pid: int, lst, old_node, low: float, high: float) -> None:

@@ -1,0 +1,182 @@
+"""Read-write transactions over the multiversion structures (DESIGN.md §8).
+
+EEMARQ (Sheffi, Ramalhete, Petrank 2022 — ``PAPERS.md``) extends the
+range-scan family this sim already reproduces with *read-write* transactions
+whose range scans and updates commit atomically: all of a txn's reads observe
+one snapshot and all of its writes become visible at one timestamp.  This is
+the regime that stresses MVGC hardest — the txn's snapshot pin must survive
+into its own write phase, so every version a scan at the begin timestamp
+still needs stays live while the txn itself allocates new versions.
+
+:class:`Txn` implements that model generically over both ``MVTree`` and
+``MVHashTable`` (anything exposing ``insert``/``delete``/``rtx_lookup``/
+``range_scan``/``range_query``):
+
+* **begin** — ``scheme.begin_txn(pid)`` pins a snapshot at the begin
+  timestamp ``tb`` (announce + for EBR the epoch pin; the pin is released
+  only by commit/abort, *after* the write phase).
+* **read phase** — ``get`` / ``range_scan`` read the ``tb`` snapshot through
+  the structures' versioned read paths, overlaid with the txn's own buffered
+  writes (read-your-writes).  Scans are the same sliced multi-yield
+  operations as read-only rtx scans, so updates interleave inside them.
+* **write phase** — ``put`` / ``delete`` buffer into a private write set;
+  nothing touches shared state before commit, so an aborted txn leaves no
+  versions anywhere.
+* **commit** — ``try_commit`` linearizes the whole txn at a single commit
+  timestamp ``tc``: it advances the global timestamp once, validates that
+  every key in the txn's *footprint* (point reads, scanned intervals,
+  buffered writes) still has its ``tb``-snapshot value, and only then applies
+  all buffered writes — each stamped ``tc`` — and records them in the shared
+  ``UpdateLog``.  On validation failure it aborts (releasing the pin) and the
+  caller retries with a fresh snapshot.  A txn with an empty write set is
+  read-only and commits validation-free: its snapshot reads linearize at
+  ``tb``.
+
+Commit is slice-atomic in the discrete-event driver, mirroring the sim's
+slice-atomic updates: validation + apply happen between two scheduler yields,
+which models the commit's single linearization point (DESIGN.md §8 records
+why this is faithful for the GC dynamics under study).  Validation is
+value-level per key (ABA-tolerant: a key overwritten back to its snapshot
+value revalidates — the reads are still serializable at ``tc``), and its
+reads go through the version lists, so long-footprint txns pay their
+validation cost in work units like every other traversal.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Generator, List, Optional, Tuple
+
+
+class Txn:
+    """One read-write transaction.  Lifecycle::
+
+        txn = Txn(pid, ds, env, scheme, log=log)   # pins the snapshot
+        gen = txn.range_scan(lo, hi)                # sliced snapshot scan
+        ... drive gen, buffer writes via txn.put / txn.delete ...
+        if not txn.try_commit():                    # atomic validate+apply
+            ...retry with a fresh Txn...
+
+    ``log`` (an ``UpdateLog``) receives the committed writes at the commit
+    timestamp so subsequent validated scans hold the txn's writes visible
+    exactly at ``tc``; aborted txns never touch it.
+    """
+
+    __slots__ = ("pid", "ds", "env", "scheme", "log", "begin_ts", "commit_ts",
+                 "writes", "read_footprint", "scan_footprint", "state")
+
+    def __init__(self, pid: int, ds, env, scheme, log=None):
+        self.pid = pid
+        self.ds = ds
+        self.env = env
+        self.scheme = scheme
+        self.log = log
+        self.begin_ts: float = scheme.begin_txn(pid)
+        self.commit_ts: Optional[float] = None
+        self.writes: Dict[int, Any] = {}          # key -> value (None = delete)
+        self.read_footprint: Dict[int, Any] = {}  # key -> tb-snapshot value
+        self.scan_footprint: List[Tuple[int, int, List[Tuple[int, Any]]]] = []
+        self.state = "active"                     # active | committed | aborted
+
+    # -- read phase ---------------------------------------------------------
+    def get(self, k: int) -> Optional[Any]:
+        """Snapshot read of one key, overlaid with the txn's own writes."""
+        assert self.state == "active"
+        if k in self.writes:
+            return self.writes[k]
+        if k in self.read_footprint:
+            return self.read_footprint[k]
+        v = self.ds.rtx_lookup(self.pid, k, self.begin_ts)
+        self.read_footprint[k] = v
+        return v
+
+    def range_scan(self, lo: int, hi: int) -> Generator:
+        """Sliced snapshot scan of [lo, hi) at the begin timestamp (one yield
+        per versioned read, like the read-only rtx scans); ``return``s the
+        sorted [(key, val)] snapshot overlaid with the txn's own writes."""
+        assert self.state == "active"
+        raw = yield from self.ds.range_scan(self.pid, lo, hi, self.begin_ts)
+        self.scan_footprint.append((lo, hi, list(raw)))
+        return self._overlay(lo, hi, raw)
+
+    def range_query(self, lo: int, hi: int) -> List[Tuple[int, Any]]:
+        """Atomic convenience form of :meth:`range_scan`."""
+        gen = self.range_scan(lo, hi)
+        while True:
+            try:
+                next(gen)
+            except StopIteration as stop:
+                return stop.value
+
+    def _overlay(self, lo: int, hi: int, raw) -> List[Tuple[int, Any]]:
+        merged = {k: v for k, v in raw}
+        for k, v in self.writes.items():
+            if lo <= k < hi:
+                if v is None:
+                    merged.pop(k, None)
+                else:
+                    merged[k] = v
+        return sorted(merged.items())
+
+    # -- write phase (buffered) ----------------------------------------------
+    def put(self, k: int, v: Any) -> None:
+        assert self.state == "active" and v is not None
+        self.writes[k] = v
+
+    def delete(self, k: int) -> None:
+        assert self.state == "active"
+        self.writes[k] = None
+
+    # -- commit / abort -------------------------------------------------------
+    def try_commit(self) -> bool:
+        """Validate + apply atomically; returns False (and aborts) on
+        conflict.  The snapshot pin is released either way."""
+        assert self.state == "active"
+        if not self.writes:
+            # read-only: linearizes at begin_ts, no validation needed
+            self.commit_ts = self.begin_ts
+            self.state = "committed"
+            self.scheme.commit_txn(self.pid)
+            return True
+        tc = self.env.advance_ts()
+        if not self._validate():
+            self.abort()
+            return False
+        for k in sorted(self.writes):
+            v = self.writes[k]
+            if v is None:
+                self.ds.delete(self.pid, k)
+            else:
+                self.ds.insert(self.pid, k, v)
+            if self.log is not None:
+                self.log.record(tc, k, v)
+        self.commit_ts = tc
+        self.state = "committed"
+        self.scheme.commit_txn(self.pid)
+        return True
+
+    def abort(self) -> None:
+        """Discard buffered writes and release the snapshot pin."""
+        if self.state == "active":
+            self.state = "aborted"
+            self.scheme.abort_txn(self.pid)
+
+    def _validate(self) -> bool:
+        """Footprint validation at the commit timestamp: every key the txn
+        read or is about to write must still hold its begin-ts snapshot
+        value.  Reads go through the current version-list heads (= the state
+        at tc — commit is slice-atomic), charging work like any traversal."""
+        now = self.env.read_ts()
+        for lo, hi, raw in self.scan_footprint:
+            if self.ds.range_query(self.pid, lo, hi, now) != raw:
+                return False
+        for k, seen in self.read_footprint.items():
+            if self.ds.lookup(self.pid, k) != seen:
+                return False
+        for k in self.writes:
+            if k in self.read_footprint:
+                continue  # already validated above
+            if any(lo <= k < hi for lo, hi, _ in self.scan_footprint):
+                continue  # covered by an interval check
+            snap = self.ds.rtx_lookup(self.pid, k, self.begin_ts)
+            if self.ds.lookup(self.pid, k) != snap:
+                return False
+        return True

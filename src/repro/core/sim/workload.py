@@ -25,10 +25,20 @@ Workload shapes:
   / variable-size-scan in the paper's ratio.
 * **mixed** mode (paper Figs 7-8 and the EEMARQ matrix): every process draws
   each operation from an :class:`~repro.core.sim.measure.OpMix`
-  (update/lookup/scan fractions + scan size).  ``eemarq_matrix`` enumerates
-  the range-heavy family: mixes 50/25/25 and 10/10/80, scan sizes
+  (update/lookup/scan/rwtxn fractions + scan size).  ``eemarq_matrix``
+  enumerates the range-heavy family: mixes 50/25/25 and 10/10/80, scan sizes
   s ∈ {8, 64, 1024, 8192}, uniform + Zipfian 0.99, all five schemes, both
   structures.
+* **read-write transactions** (DESIGN.md §8): when ``OpMix.rwtxn_frac`` > 0,
+  a process draws EEMARQ-style update-in-scan txns
+  (:class:`~repro.core.sim.txn.Txn`): scan a ``scan_size`` interval at the
+  begin snapshot, buffer ``txn_size`` writes inside it, commit all writes at
+  one validated commit timestamp — abort + retry (fresh snapshot) on
+  conflict, giving up after ``max_retries``.  The txn's snapshot pin
+  survives its write phase, which is exactly the regime where the schemes'
+  version-list truncation must hold both the scan's pin and the txn's own
+  writes live.  ``eemarq_rw_matrix`` enumerates the family (rw mixes ×
+  scan/txn sizes × distributions × schemes × structures).
 
 Measurements (serialized via :class:`~repro.core.sim.measure.Measurement`):
 * **space**: words reachable from the data structure roots (Java GC model —
@@ -56,12 +66,14 @@ from typing import Any, Dict, Generator, List, Optional, Sequence
 import numpy as np
 
 from repro.core.sim.linearize import ScanValidator, UpdateLog
-from repro.core.sim.measure import (EEMARQ_MIXES, EEMARQ_SCAN_SIZES,
-                                    EEMARQ_ZIPFS, OpMix)
+from repro.core.sim.measure import (EEMARQ_MIXES, EEMARQ_RW_MIXES,
+                                    EEMARQ_RW_SCAN_SIZES, EEMARQ_SCAN_SIZES,
+                                    EEMARQ_TXN_SIZES, EEMARQ_ZIPFS, OpMix)
 from repro.core.sim.mvhash import MVHashTable
 from repro.core.sim.mvtree import MVTree, Leaf, Internal
 from repro.core.sim.schemes import SCHEMES, SchemeBase, make_scheme
 from repro.core.sim.ssl_list import MVEnv
+from repro.core.sim.txn import Txn
 
 # paper Figs 7-8: 50% updates, 49% lookups, 1% scans.  The paper uses
 # 1024-key scans; drivers size the scan to their key range via
@@ -210,6 +222,44 @@ def eemarq_matrix(
     return cfgs
 
 
+def eemarq_rw_matrix(
+    *,
+    structures: Sequence[str] = ("hash", "tree"),
+    schemes: Sequence[str] = tuple(SCHEMES),
+    mixes: Sequence[OpMix] = EEMARQ_RW_MIXES,
+    scan_sizes: Sequence[int] = EEMARQ_RW_SCAN_SIZES,
+    txn_sizes: Sequence[int] = EEMARQ_TXN_SIZES,
+    zipfs: Sequence[float] = EEMARQ_ZIPFS,
+    n_keys: int = 1024,
+    num_procs: int = 16,
+    ops_per_proc: int = 120,
+    seed: int = 7,
+    **overrides,
+) -> List[WorkloadConfig]:
+    """Enumerate the EEMARQ-style read-write update-in-scan matrix
+    (DESIGN.md §8): rw mix × scan size × txn size × key distribution ×
+    scheme × structure.  Defaults are the full family; ``benchmarks/
+    txn_mix.py`` passes tiered subsets."""
+    cfgs = []
+    for ds in structures:
+        for mix in mixes:
+            for size in scan_sizes:
+                for tsize in txn_sizes:
+                    for z in zipfs:
+                        for scheme in schemes:
+                            kw = ({"batch_size": max(8, num_procs)}
+                                  if scheme in ("dlrt", "slrt", "bbf") else {})
+                            cfgs.append(WorkloadConfig(
+                                ds=ds, scheme=scheme, n_keys=n_keys,
+                                num_procs=num_procs, mode="mixed",
+                                op_mix=replace(mix, scan_size=size,
+                                               txn_size=tsize),
+                                ops_per_proc=ops_per_proc, zipf=z, seed=seed,
+                                scheme_kwargs=kw, **overrides,
+                            ))
+    return cfgs
+
+
 # ---------------------------------------------------------------------------
 # Process scripts (generators; one yield per slice)
 # ---------------------------------------------------------------------------
@@ -258,6 +308,47 @@ def _scan_slices(pid, ds, env, scheme, rng, size, key_range, chunk, counters,
         validator.check(a, a + size, t, result)
 
 
+def _rwtxn_slices(pid, ds, env, scheme, rng, mix: OpMix, key_range, chunk,
+                  counters, log=None, validator=None, max_retries=16):
+    """One EEMARQ-style update-in-scan read-write transaction (DESIGN.md §8),
+    retried with a fresh snapshot on abort: scan a ``scan_size`` interval at
+    the begin timestamp, buffer ``txn_size`` writes to keys inside it, then
+    commit all writes at one validated commit timestamp.  The snapshot pin
+    survives into the write phase; commit is slice-atomic like updates."""
+    size = min(mix.scan_size, key_range)
+    for _ in range(max_retries):
+        txn = Txn(pid, ds, env, scheme, log=log)
+        a = rng.randrange(1, max(2, key_range - size + 1))
+        gen = txn.range_scan(a, a + size)
+        steps = 0
+        while True:
+            try:
+                next(gen)
+            except StopIteration:
+                break
+            steps += 1
+            if steps % chunk == 0:
+                yield
+        # update-in-scan: the write set lives inside the scanned interval
+        for _ in range(mix.txn_size):
+            k = rng.randrange(a, a + size)
+            if rng.random() < 0.5:
+                txn.put(k, rng.randrange(1 << 30))
+            else:
+                txn.delete(k)
+        yield  # slice boundary between read phase and the atomic commit
+        committed = txn.try_commit()
+        if validator is not None:
+            validator.check_txn(txn)
+        counters["txn_scan_keys"] += size
+        if committed:
+            counters["txn_commits"] += 1
+            return
+        counters["txn_aborts"] += 1
+        yield  # back off one slice before retrying with a fresh snapshot
+    counters["txn_giveups"] += 1
+
+
 def update_script(pid, ds, env, scheme, sampler, rng, n_ops, counters,
                   log=None) -> Generator:
     for _ in range(n_ops):
@@ -291,6 +382,13 @@ def mixed_script(
             ds.lookup(pid, sampler())
             counters["lookups"] += 1
             yield
+        elif (mix.rwtxn_frac > 0
+              and r >= mix.update_frac + mix.lookup_frac + mix.scan_frac):
+            yield from _rwtxn_slices(
+                pid, ds, env, scheme, rng, mix, key_range, cfg.scan_chunk,
+                counters, log, validator,
+            )
+            yield
         else:
             yield from _scan_slices(
                 pid, ds, env, scheme, rng, mix.scan_size, key_range,
@@ -322,7 +420,9 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
     scheme.quiesce()
     base_work = _total_work(scheme)
     counters: Dict[str, int] = {"updates": 0, "scans": 0, "scan_keys": 0,
-                                "lookups": 0}
+                                "lookups": 0, "txn_commits": 0,
+                                "txn_aborts": 0, "txn_giveups": 0,
+                                "txn_scan_keys": 0}
 
     scripts: List[Generator] = []
     if cfg.mode == "split":
@@ -391,7 +491,8 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
         "total_work": total_work,
         "updates_per_mwork": counters["updates"] * 1e6 / max(1, total_work),
         "scan_keys_per_mwork": counters["scan_keys"] * 1e6 / max(1, total_work),
-        "ops_per_mwork": (counters["updates"] + counters["scans"] + counters["lookups"])
+        "ops_per_mwork": (counters["updates"] + counters["scans"]
+                          + counters["lookups"] + counters["txn_commits"])
         * 1e6 / max(1, total_work),
         "peak_space": peak,
         "avg_space": sum(space_samples) / max(1, len(space_samples)),
@@ -400,6 +501,8 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
         "scheme_stats": scheme.stats(),
         "scans_validated": validator.checked if validator else 0,
         "scan_violations": validator.violations if validator else 0,
+        "txns_validated": validator.txns_checked if validator else 0,
+        "txn_violations": validator.txn_violations if validator else 0,
         "violation_examples": validator.examples if validator else [],
     }
 

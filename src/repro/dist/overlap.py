@@ -6,7 +6,9 @@ reduce-scatter then all-gather, one chunk in flight per hop — gives the
 scheduler n-1 independent send/recv pairs to overlap with whatever compute
 the caller interleaves (gradient compression, the next microbatch's
 backward, ...).  Numerically it computes exactly ``psum``: every element is
-the sum of all n shards, accumulated in ring order.
+the sum of all n shards, accumulated in ring order.  ``reduce="mean"``
+divides by the axis size (= ``pmean``), the correct reduction for
+data-parallel gradient averaging.
 """
 from __future__ import annotations
 
@@ -17,20 +19,28 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 
-def make_ring_all_reduce(mesh: Mesh, axis: str) -> Callable[[jax.Array], jax.Array]:
+def make_ring_all_reduce(
+    mesh: Mesh, axis: str, reduce: str = "sum"
+) -> Callable[[jax.Array], jax.Array]:
     """Build ``fn(x)``: an all-reduce over ``axis`` as a chunked ppermute ring.
 
     ``x``'s leading dim is sharded over ``axis`` (it must divide); every
     device ends up with the sum of all shards, so the global result is the
     per-axis shard sum tiled ``n`` times — bitwise the ``psum`` of the local
     shards.
+
+    ``reduce="mean"`` divides the ring sum by the axis size, matching
+    ``jax.lax.pmean`` — the right reduction for data-parallel gradients,
+    where the bare sum trains with gradients ``n``× too large.
     """
+    if reduce not in ("sum", "mean"):
+        raise ValueError(f"reduce must be 'sum' or 'mean', got {reduce!r}")
     n = mesh.shape[axis]
     perm = [(i, (i + 1) % n) for i in range(n)]
 
     def local(x: jax.Array) -> jax.Array:
         if n == 1:
-            return x
+            return x / 1.0 if reduce == "mean" else x
         shape = x.shape
         flat = x.reshape(-1)
         c = -(-flat.size // n)                       # chunk elements (ceil)
@@ -52,7 +62,8 @@ def make_ring_all_reduce(mesh: Mesh, axis: str) -> Callable[[jax.Array], jax.Arr
             return b.at[(r - s) % n].set(recv)
 
         buf = jax.lax.fori_loop(0, n - 1, ag_hop, buf)
-        return buf.reshape(-1)[: flat.size].reshape(shape)
+        out = buf.reshape(-1)[: flat.size].reshape(shape)
+        return out / n if reduce == "mean" else out
 
     return jax.shard_map(local, mesh=mesh, in_specs=P(axis),
                          out_specs=P(axis), check_vma=False)

@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import reduced_config
 from repro.configs.base import RunConfig, SHAPES
+from repro.dist.overlap import make_ring_all_reduce
 from repro.dist.sharding import (_keypath_parts, batch_sharding, batch_spec,
                                  param_shardings)
 from repro.dist.straggler import HeartbeatFile, StepWatchdog
@@ -139,6 +140,43 @@ def test_ring_all_reduce_padded_chunks():
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, timeout=300, env=env)
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
+@pytest.mark.slow
+def test_ring_all_reduce_mean_matches_pmean():
+    """reduce='mean' must reproduce jax.lax.pmean semantics exactly (the sum
+    variant trains DP gradients n x too large — PR-2 known issue)."""
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.overlap import make_ring_all_reduce
+        mesh = jax.make_mesh((4,), ("data",))
+        x = jnp.arange(36.0) * 0.25 - 2.0
+        fn = make_ring_all_reduce(mesh, "data", reduce="mean")
+        got = jax.jit(fn)(x)
+        ref = jax.shard_map(lambda s: jax.lax.pmean(s, "data"), mesh=mesh,
+                            in_specs=P("data"), out_specs=P("data"))
+        want = jax.jit(ref)(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+        # and the sum path stays the sum path
+        fs = make_ring_all_reduce(mesh, "data", reduce="sum")
+        np.testing.assert_allclose(np.asarray(jax.jit(fs)(x)),
+                                   np.asarray(want) * 4, rtol=1e-6)
+        print("mean ring OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=300, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
+def test_ring_all_reduce_rejects_unknown_reduce():
+    mesh = _mesh11()
+    with pytest.raises(ValueError):
+        make_ring_all_reduce(mesh, "data", reduce="max")
 
 
 # ---------------------------------------------------------------------------

@@ -8,10 +8,11 @@ import sys
 
 import pytest
 
-from repro.core.sim.measure import (EEMARQ_MIXES, EEMARQ_SCAN_SIZES,
-                                    EEMARQ_ZIPFS, Measurement, OpMix,
-                                    REQUIRED_ROW_KEYS, bench_payload,
-                                    validate_bench_payload, write_bench_json)
+from repro.core.sim.measure import (EEMARQ_MIXES, EEMARQ_RW_MIXES,
+                                    EEMARQ_SCAN_SIZES, EEMARQ_ZIPFS,
+                                    Measurement, OpMix, REQUIRED_ROW_KEYS,
+                                    bench_payload, validate_bench_payload,
+                                    write_bench_json)
 from repro.core.sim.workload import (WorkloadConfig, eemarq_matrix,
                                      run_workload)
 
@@ -29,12 +30,26 @@ def test_opmix_validates_fractions():
         OpMix(-0.1, 0.6, 0.5)                   # negative
     with pytest.raises(ValueError):
         OpMix(0.5, 0.25, 0.25, scan_size=0)     # scans but no size
+    OpMix(0.3, 0.2, 0.25, rwtxn_frac=0.25)      # 4-way ok
+    with pytest.raises(ValueError):
+        OpMix(0.5, 0.25, 0.25, rwtxn_frac=0.25)  # sums to 1.25
+    with pytest.raises(ValueError):
+        OpMix(0.3, 0.2, 0.25, rwtxn_frac=0.25, txn_size=0)
 
 
 def test_opmix_labels():
     assert OpMix(0.5, 0.25, 0.25).label == "50/25/25"
     assert OpMix(0.1, 0.1, 0.8, name="custom").label == "custom"
     assert [m.label for m in EEMARQ_MIXES] == ["50/25/25", "10/10/80"]
+    assert OpMix(0.3, 0.2, 0.25, rwtxn_frac=0.25).label == "30/20/25/25"
+    assert [m.label for m in EEMARQ_RW_MIXES] == ["30/20/25/25", "10/10/20/60"]
+
+
+def test_opmix_rw_ratio():
+    assert OpMix(0.5, 0.25, 0.25).rw_ratio == 0.0
+    assert OpMix(0.3, 0.2, 0.25, rwtxn_frac=0.25).rw_ratio == 0.5
+    assert OpMix(0.1, 0.1, 0.2, rwtxn_frac=0.6).rw_ratio == 0.75
+    assert OpMix(1.0, 0.0, 0.0).rw_ratio == 0.0   # no txns at all
 
 
 def test_eemarq_matrix_enumeration():
@@ -136,3 +151,78 @@ def test_range_query_smoke_emits_valid_bench_json(tmp_path):
 def test_design_doc_citations_resolve():
     p = _run([sys.executable, "tools/check_design_refs.py"])
     assert p.returncode == 0, p.stdout + p.stderr
+
+
+def test_txn_mix_smoke_emits_valid_bench_json(tmp_path):
+    out = str(tmp_path / "BENCH_txn_mix.json")
+    p = _run([sys.executable, "benchmarks/txn_mix.py", "--smoke",
+              "--out", out])
+    assert p.returncode == 0, p.stderr
+    payload = json.loads(open(out).read())
+    assert validate_bench_payload(payload) == []
+    rows = payload["rows"]
+    assert {r["scheme"] for r in rows} == {"ebr", "steam", "dlrt", "slrt", "bbf"}
+    assert {r["ds"] for r in rows} == {"hash", "tree"}
+    assert {r["mix"] for r in rows} == {"30/20/25/25", "10/10/20/60"}
+    assert all(r["scan_violations"] == 0 for r in rows)
+    assert sum(r["txns_committed"] for r in rows) > 0
+    assert all(0.0 <= r["abort_rate"] <= 1.0 for r in rows)
+    assert {r["rw_ratio"] for r in rows} == {0.5, 0.75}
+    # the schema checker agrees, including the txn-field validation
+    p = _run([sys.executable, "tools/check_bench_json.py", out,
+              "--schemes", "ebr,steam,dlrt,slrt,bbf",
+              "--structures", "hash,tree", "--min-mixes", "2", "--txn"])
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+# ---------------------------------------------------------------------------
+# compare_bench (the bench-trajectory CI gate)
+# ---------------------------------------------------------------------------
+def _write_payload(path, rows, bench="txn_mix"):
+    with open(path, "w") as f:
+        json.dump(bench_payload(bench, rows), f)
+
+
+def test_compare_bench_trajectory_gate(tmp_path):
+    r = _tiny_result()
+    m = Measurement.from_result("txn_mix", "hash/tiny", r)
+    committed, fresh = str(tmp_path / "c.json"), str(tmp_path / "f.json")
+    _write_payload(committed, [m])
+    _write_payload(fresh, [m])
+    p = _run([sys.executable, "tools/compare_bench.py", committed, fresh])
+    assert p.returncode == 0, p.stdout + p.stderr
+
+    # drifted space beyond tolerance -> fail; waiving the cell -> pass
+    import dataclasses
+    drifted = dataclasses.replace(
+        m, peak_space_words=int(m.peak_space_words * 2))
+    _write_payload(fresh, [drifted])
+    p = _run([sys.executable, "tools/compare_bench.py", committed, fresh,
+              "--tolerance", "0.15"])
+    assert p.returncode == 1 and "drifted" in p.stdout, p.stdout + p.stderr
+    p = _run([sys.executable, "tools/compare_bench.py", committed, fresh,
+              "--tolerance", "0.15", "--waive", "ds=hash,scheme=slrt"])
+    assert p.returncode == 0, p.stdout + p.stderr
+
+    # a fresh cell absent from the committed file -> stale-file failure
+    moved = dataclasses.replace(m, seed=m.seed + 1)
+    _write_payload(fresh, [moved])
+    p = _run([sys.executable, "tools/compare_bench.py", committed, fresh])
+    assert p.returncode == 1 and "stale" in p.stdout, p.stdout + p.stderr
+
+
+@pytest.mark.slow   # CI's bench-smoke + bench-trajectory steps run this flow
+def test_committed_bench_files_pass_the_trajectory_gate(tmp_path):
+    """The repo-root BENCH files must contain every cell a fresh smoke run
+    emits, within tolerance — exactly what the CI bench-trajectory step
+    enforces (here against a freshly generated smoke emission)."""
+    for driver, committed in (("benchmarks/txn_mix.py", "BENCH_txn_mix.json"),
+                              ("benchmarks/range_query.py",
+                               "BENCH_range_query.json")):
+        fresh = str(tmp_path / f"fresh_{os.path.basename(committed)}")
+        p = _run([sys.executable, driver, "--smoke", "--out", fresh])
+        assert p.returncode == 0, p.stderr
+        p = _run([sys.executable, "tools/compare_bench.py",
+                  os.path.join(REPO, committed), fresh,
+                  "--tolerance", "0.15"])
+        assert p.returncode == 0, p.stdout + p.stderr

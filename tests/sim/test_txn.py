@@ -1,0 +1,312 @@
+"""Read-write transaction semantics (DESIGN.md §8).
+
+Covers the txn model's load-bearing promises: read-your-own-writes overlay,
+single-commit-timestamp atomicity, abort-then-retry leaving no visible
+versions, write-phase pins blocking EBR epoch advance and STEAM compaction of
+the txn's snapshot, conflict validation (abort on footprint change,
+ABA-tolerant revalidation), and the randomized acceptance bar: >= 1000
+committed validated read-write txns per structure x scheme.
+"""
+import random
+
+import pytest
+
+from repro.core.sim.linearize import ScanValidator, UpdateLog
+from repro.core.sim.measure import EEMARQ_RW_MIXES, OpMix
+from repro.core.sim.mvhash import MVHashTable
+from repro.core.sim.mvtree import MVTree
+from repro.core.sim.schemes import SCHEMES, make_scheme
+from repro.core.sim.ssl_list import MVEnv
+from repro.core.sim.txn import Txn
+from repro.core.sim.workload import (WorkloadConfig, eemarq_rw_matrix,
+                                     measure_space, run_workload)
+
+ALL = list(SCHEMES)
+RT_SCHEMES = ("dlrt", "slrt", "bbf")
+
+
+def _mk(ds_kind, scheme_name, P=4, n=32, **scheme_kw):
+    env = MVEnv(P)
+    if scheme_name in RT_SCHEMES:
+        scheme_kw.setdefault("batch_size", 2)
+    scheme = make_scheme(scheme_name, env, **scheme_kw)
+    ds = MVHashTable(env, scheme, n) if ds_kind == "hash" else MVTree(env, scheme)
+    return env, scheme, ds
+
+
+def _upd(env, scheme, ds, log, pid, k, v):
+    ctx = scheme.begin_update(pid)
+    env.advance_ts()
+    if v is None:
+        ds.delete(pid, k)
+    else:
+        ds.insert(pid, k, v)
+    log.record(env.read_ts(), k, v)
+    scheme.end_update(pid, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Basic commit path: snapshot reads, buffered writes, single commit timestamp
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+def test_txn_commit_single_timestamp(ds_kind):
+    env, scheme, ds = _mk(ds_kind, "slrt")
+    log = UpdateLog()
+    for k in range(1, 11):
+        _upd(env, scheme, ds, log, 0, k, 100 + k)
+
+    txn = Txn(1, ds, env, scheme, log=log)
+    scanned = txn.range_query(1, 11)
+    assert scanned == log.snapshot_range(1, 11, txn.begin_ts)
+    txn.put(3, 999)
+    txn.delete(7)
+    txn.put(20, 555)          # blind write outside the scanned interval
+    assert txn.try_commit()
+    tc = txn.commit_ts
+    assert tc > txn.begin_ts
+    # all writes visible at exactly tc, in structure and log
+    assert ds.rtx_lookup(1, 3, tc) == 999
+    assert ds.rtx_lookup(1, 7, tc) is None
+    assert ds.rtx_lookup(1, 20, tc) == 555
+    for k in (3, 7, 20):
+        assert log.value_at(k, tc) == {3: 999, 7: None, 20: 555}[k]
+        # invisible one tick before commit
+        assert log.value_at(k, tc - 1) != {3: 999, 7: None, 20: 555}[k] or k == 7
+    v = ScanValidator(log)
+    assert v.check_txn(txn)
+    assert v.txns_checked == 1 and v.violations == 0
+
+
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+def test_txn_read_your_own_writes(ds_kind):
+    env, scheme, ds = _mk(ds_kind, "ebr")
+    log = UpdateLog()
+    for k in (2, 4, 6):
+        _upd(env, scheme, ds, log, 0, k, 10 * k)
+
+    txn = Txn(1, ds, env, scheme, log=log)
+    txn.put(4, -44)
+    txn.put(5, -55)
+    txn.delete(6)
+    # get: overlay wins over the snapshot
+    assert txn.get(4) == -44
+    assert txn.get(5) == -55
+    assert txn.get(6) is None
+    assert txn.get(2) == 20
+    # range_query: overlay merged into the snapshot scan
+    assert txn.range_query(1, 8) == [(2, 20), (4, -44), (5, -55)]
+    assert txn.try_commit()
+    # committed state matches what the txn read
+    t2 = scheme.begin_rtx(2)
+    assert ds.range_query(2, 1, 8, t2) == [(2, 20), (4, -44), (5, -55)]
+    scheme.end_rtx(2)
+
+
+# ---------------------------------------------------------------------------
+# Abort: no visible versions, retry succeeds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+@pytest.mark.parametrize("scheme_name", ALL)
+def test_abort_then_retry_leaves_no_visible_versions(ds_kind, scheme_name):
+    env, scheme, ds = _mk(ds_kind, scheme_name)
+    log = UpdateLog()
+    for k in range(1, 9):
+        _upd(env, scheme, ds, log, 0, k, k)
+
+    space_before = measure_space(ds, scheme)
+    log_events_before = log.events
+    txn = Txn(1, ds, env, scheme, log=log)
+    txn.range_query(1, 9)
+    txn.put(3, 777)
+    txn.delete(5)
+    # conflicting committed update inside the footprint => validation fails
+    _upd(env, scheme, ds, log, 2, 3, 42)
+    assert not txn.try_commit()
+    assert txn.state == "aborted"
+    # aborted txn created no versions and recorded nothing: the only delta
+    # is the conflicting update's own version
+    space_after = measure_space(ds, scheme)
+    assert space_after["versions"] == space_before["versions"] + 1
+    assert log.events == log_events_before + 1
+    assert ds.lookup(1, 3) == 42 and ds.lookup(1, 5) == 5
+    v = ScanValidator(log)
+    assert v.check_txn(txn)      # its completed scan is still a valid read
+
+    # retry with a fresh snapshot commits cleanly
+    txn2 = Txn(1, ds, env, scheme, log=log)
+    txn2.range_query(1, 9)
+    txn2.put(3, 777)
+    txn2.delete(5)
+    assert txn2.try_commit()
+    assert ds.lookup(1, 3) == 777 and ds.lookup(1, 5) is None
+    assert v.check_txn(txn2) and v.violations == 0
+
+
+def test_readonly_txn_commits_without_validation():
+    env, scheme, ds = _mk("hash", "slrt")
+    log = UpdateLog()
+    for k in range(1, 6):
+        _upd(env, scheme, ds, log, 0, k, k)
+    txn = Txn(1, ds, env, scheme, log=log)
+    res = txn.range_query(1, 6)
+    _upd(env, scheme, ds, log, 2, 3, 99)   # concurrent change: no conflict
+    ts_before = env.read_ts()
+    assert txn.try_commit()                # read-only: linearizes at begin_ts
+    assert txn.commit_ts == txn.begin_ts
+    assert env.read_ts() == ts_before      # no timestamp consumed
+    assert res == log.snapshot_range(1, 6, txn.begin_ts)
+
+
+def test_txn_aba_revalidates():
+    """A footprint key overwritten back to its snapshot value revalidates:
+    value-level validation is ABA-tolerant by design (DESIGN.md §8)."""
+    env, scheme, ds = _mk("hash", "ebr")
+    log = UpdateLog()
+    _upd(env, scheme, ds, log, 0, 1, 7)
+    txn = Txn(1, ds, env, scheme, log=log)
+    assert txn.get(1) == 7
+    txn.put(2, 22)
+    _upd(env, scheme, ds, log, 2, 1, 8)   # away...
+    _upd(env, scheme, ds, log, 2, 1, 7)   # ...and back
+    assert txn.try_commit()
+    assert ScanValidator(log).check_txn(txn)
+
+
+# ---------------------------------------------------------------------------
+# Write-phase pins: EBR epoch advance and STEAM compaction respect them
+# ---------------------------------------------------------------------------
+def test_write_phase_pin_blocks_ebr_epoch_advance():
+    """The txn pin (taken at begin) must keep blocking epoch advance through
+    the write phase — a per-write begin_update would re-pin at the current
+    epoch and release the snapshot; the txn path must not do that."""
+    env, scheme, ds = _mk("hash", "ebr", advance_every=2)
+    log = UpdateLog()
+    for k in range(1, 17):
+        _upd(env, scheme, ds, log, 0, k, k)
+    for i in range(20):                       # let epochs churn first
+        _upd(env, scheme, ds, log, i % 3, 1 + i % 16, 50 + i)
+
+    txn = Txn(3, ds, env, scheme, log=log)
+    e0 = scheme.epoch
+    gen = txn.range_scan(1, 17)
+    for step in range(8):                     # updates interleave mid-scan
+        next(gen)
+        _upd(env, scheme, ds, log, step % 3, 1 + (5 * step) % 16, 1000 + step)
+    try:
+        while True:
+            next(gen)
+    except StopIteration:
+        pass
+    # write phase: buffer writes, keep churning from other pids
+    txn.put(1, -1)
+    txn.put(16, -16)
+    for i in range(10):
+        _upd(env, scheme, ds, log, i % 3, 2 + i % 10, 3000 + i)
+    assert scheme.epoch <= e0 + 1, \
+        "pinned txn announcement must block epoch advance past one step"
+    v = ScanValidator(log)
+    txn.try_commit()                          # may conflict (churned keys)
+    assert v.check_txn(txn) and v.violations == 0, v.examples
+    # released: epochs move again
+    for i in range(12):
+        _upd(env, scheme, ds, log, i % 3, 1 + i % 16, 4000 + i)
+    assert scheme.epoch >= e0 + 2
+
+
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+def test_write_phase_pin_survives_steam_compaction(ds_kind):
+    """STEAM+LF compacts on every append — including the txn's own commit
+    writes and concurrent hot-key churn.  The txn's begin-ts snapshot must
+    survive until commit, and its scan must validate."""
+    env, scheme, ds = _mk(ds_kind, "steam", scan_every=2)
+    log = UpdateLog()
+    for k in range(1, 13):
+        _upd(env, scheme, ds, log, 0, k, 100 + k)
+
+    txn = Txn(1, ds, env, scheme, log=log)
+    gen = txn.range_scan(1, 13)
+    next(gen)
+    # hot-key churn on keys the scan has not reached yet: compaction runs
+    # per append, with the txn's announce pinning its snapshot
+    for i in range(30):
+        _upd(env, scheme, ds, log, 2, 1 + i % 12, 500 + i)
+    try:
+        while True:
+            next(gen)
+    except StopIteration:
+        pass
+    assert scheme.compactions > 0
+    txn.put(30, 1)                      # write outside the churned interval
+    txn.try_commit()                    # footprint churned => likely aborts
+    v = ScanValidator(log)
+    assert v.check_txn(txn) and v.violations == 0, v.examples
+
+
+# ---------------------------------------------------------------------------
+# Randomized acceptance: >= 1000 committed validated rw txns per ds x scheme
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+@pytest.mark.parametrize("scheme_name", ALL)
+def test_thousand_randomized_rw_txns_validated(ds_kind, scheme_name):
+    kw = {"batch_size": 8} if scheme_name in RT_SCHEMES else {}
+    cfg = WorkloadConfig(
+        ds=ds_kind, scheme=scheme_name, n_keys=32, num_procs=8, mode="mixed",
+        op_mix=OpMix(0.10, 0.05, 0.05, scan_size=8, rwtxn_frac=0.80,
+                     txn_size=3),
+        ops_per_proc=175, zipf=0.99, seed=31, scan_chunk=3,
+        sample_every=1_000_000, validate_scans=True, scheme_kwargs=kw,
+    )
+    r = run_workload(cfg)
+    c = r["counters"]
+    assert c["txn_commits"] >= 1000, \
+        f"only {c['txn_commits']} txns committed; config too small"
+    assert r["txns_validated"] >= c["txn_commits"] + c["txn_aborts"] - 8 * 16
+    assert r["txn_violations"] == 0, r["violation_examples"]
+    assert r["scan_violations"] == 0, (
+        f"{scheme_name}/{ds_kind}: {r['scan_violations']} violations over "
+        f"{r['scans_validated']} checked scans: {r['violation_examples']}")
+
+
+# ---------------------------------------------------------------------------
+# Matrix enumeration
+# ---------------------------------------------------------------------------
+def test_eemarq_rw_matrix_enumeration():
+    full = eemarq_rw_matrix()
+    # 2 structures x 2 mixes x 2 scan sizes x 2 txn sizes x 2 zipfs x 5 schemes
+    assert len(full) == 2 * len(EEMARQ_RW_MIXES) * 2 * 2 * 2 * 5
+    assert {c.ds for c in full} == {"hash", "tree"}
+    assert all(c.op_mix.rwtxn_frac > 0 for c in full)
+    assert {c.op_mix.txn_size for c in full} == {2, 8}
+    assert {round(c.op_mix.rw_ratio, 2) for c in full} == {0.5, 0.75}
+    sub = eemarq_rw_matrix(structures=("tree",), scan_sizes=(16,),
+                           txn_sizes=(4,), zipfs=(0.99,),
+                           schemes=("ebr", "dlrt"))
+    assert len(sub) == 1 * 2 * 1 * 1 * 1 * 2
+    assert all(c.mode == "mixed" for c in sub)
+
+
+# ---------------------------------------------------------------------------
+# check_txn must be falsifiable
+# ---------------------------------------------------------------------------
+def test_check_txn_catches_corruption():
+    env, scheme, ds = _mk("hash", "slrt")
+    log = UpdateLog()
+    for k in range(1, 6):
+        _upd(env, scheme, ds, log, 0, k, k)
+    txn = Txn(1, ds, env, scheme, log=log)
+    txn.range_query(1, 6)
+    txn.put(2, 22)
+    assert txn.try_commit()
+    # tamper: pretend the txn wrote a value the log never saw
+    txn.writes[2] = 23
+    v = ScanValidator(log)
+    assert not v.check_txn(txn)
+    assert v.txn_violations == 1 and v.examples
+    # tamper: a scan result inconsistent with the snapshot
+    txn2 = Txn(1, ds, env, scheme, log=log)
+    txn2.range_query(1, 6)
+    txn2.scan_footprint[0] = (1, 6, [(1, 999)])
+    txn2.try_commit()
+    v2 = ScanValidator(log)
+    assert not v2.check_txn(txn2)
+    assert v2.violations >= 1

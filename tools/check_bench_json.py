@@ -6,7 +6,10 @@
 
 Fails (exit 1) if required top-level/row keys are missing, rows are empty,
 requested scheme/structure coverage is absent, or any row reports snapshot
-violations.
+violations.  With ``--txn`` additionally validates the read-write-transaction
+fields (schema v2, DESIGN.md §8): ``txn_size`` >= 1, ``rw_ratio`` and
+``abort_rate`` in [0, 1], commit/abort counters consistent with the rate, and
+at least ``--min-txn-sizes`` distinct write-set sizes with committed txns.
 """
 from __future__ import annotations
 
@@ -15,6 +18,44 @@ import json
 import sys
 
 from repro.core.sim.measure import validate_bench_payload
+
+
+TXN_FIELDS = ("txn_size", "rw_ratio", "txns_committed", "txns_aborted",
+              "abort_rate")
+
+
+def check_txn_fields(rows, min_txn_sizes: int):
+    """Validate the schema-v2 read-write-txn row fields (DESIGN.md §8)."""
+    problems = []
+    txn_rows = []
+    for i, r in enumerate(rows):
+        missing = [k for k in TXN_FIELDS if k not in r]
+        if missing:
+            problems.append(f"row {i} missing txn fields: {missing}")
+            continue
+        for f in ("rw_ratio", "abort_rate"):
+            if not (0.0 <= r[f] <= 1.0):
+                problems.append(f"row {i}: {f}={r[f]} outside [0, 1]")
+        attempts = r["txns_committed"] + r["txns_aborted"]
+        if attempts:
+            txn_rows.append(r)
+            if r["txn_size"] < 1:
+                problems.append(f"row {i}: txns ran but txn_size="
+                                f"{r['txn_size']} < 1")
+            if r["rw_ratio"] <= 0.0:
+                problems.append(f"row {i}: txns ran but rw_ratio="
+                                f"{r['rw_ratio']} <= 0")
+            want = round(r["txns_aborted"] / attempts, 4)
+            if abs(r["abort_rate"] - want) > 1e-4:
+                problems.append(f"row {i}: abort_rate {r['abort_rate']} != "
+                                f"aborted/attempts {want}")
+    if not txn_rows:
+        problems.append("--txn: no row has any committed or aborted txns")
+    sizes = {r["txn_size"] for r in txn_rows}
+    if len(sizes) < min_txn_sizes:
+        problems.append(f"only {len(sizes)} distinct txn sizes ({sorted(sizes)}), "
+                        f"need >= {min_txn_sizes}")
+    return problems
 
 
 def main() -> int:
@@ -26,6 +67,10 @@ def main() -> int:
                     help="comma-separated structures that must all appear")
     ap.add_argument("--min-mixes", type=int, default=0,
                     help="minimum number of distinct operation mixes")
+    ap.add_argument("--txn", action="store_true",
+                    help="validate read-write-txn fields (txn benches)")
+    ap.add_argument("--min-txn-sizes", type=int, default=1,
+                    help="with --txn: minimum distinct txn write-set sizes")
     args = ap.parse_args()
 
     payload = json.load(open(args.path))
@@ -50,6 +95,8 @@ def main() -> int:
     bad = [r for r in rows if r.get("scan_violations", 0)]
     if bad:
         problems.append(f"{len(bad)} rows report snapshot violations")
+    if args.txn:
+        problems.extend(check_txn_fields(rows, args.min_txn_sizes))
 
     if problems:
         print(f"FAIL {args.path}:")

@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Bench-trajectory gate: compare a committed BENCH_*.json against a fresh
+(smoke) emission of the same driver, so sim perf/space regressions are caught
+at PR time (run by the CI ``bench-trajectory`` step).
+
+  PYTHONPATH=src python tools/compare_bench.py BENCH_txn_mix.json \\
+      /tmp/BENCH_txn_mix.json --tolerance 0.15
+
+Checks, in order:
+
+1. both payloads satisfy the BENCH schema (``measure.validate_bench_payload``)
+   and report zero snapshot violations;
+2. coverage: the fresh run's scheme and structure sets equal the committed
+   file's, and every mix the fresh run emits appears in the committed file
+   (the committed file may carry more — e.g. extra tiers);
+3. cell-for-cell: every fresh row must have a committed row with the same
+   identity key (ds, scheme, mix, scan_size, txn_size, zipf, n_keys,
+   num_procs, ops_per_proc, seed) — a missing cell means the committed file
+   is stale and must be regenerated;
+4. for each matched cell, ``peak_space_words`` and ``end_space_words`` must
+   agree within ``--tolerance`` (relative).  The sim is deterministic, so
+   matched cells normally agree exactly; the tolerance absorbs cross-version
+   RNG/library drift.  A knowingly-changed cell can be waived with
+   ``--waive field=value[,field=value...]`` (conjunctive; repeatable).
+
+At least ``--require-overlap`` cells must match (default 1) so the value
+comparison cannot silently become vacuous.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+from repro.core.sim.measure import validate_bench_payload
+
+KEY_FIELDS = ("ds", "scheme", "mix", "scan_size", "txn_size", "zipf",
+              "n_keys", "num_procs", "ops_per_proc", "seed")
+SPACE_FIELDS = ("peak_space_words", "end_space_words")
+
+
+def row_key(row: Dict[str, Any]) -> Tuple:
+    return tuple(row.get(f) for f in KEY_FIELDS)
+
+
+def parse_waive(spec: str) -> Dict[str, str]:
+    out = {}
+    for part in spec.split(","):
+        if "=" not in part:
+            raise ValueError(f"bad --waive clause {part!r} (want field=value)")
+        f, v = part.split("=", 1)
+        out[f.strip()] = v.strip()
+    return out
+
+
+def waived(row: Dict[str, Any], waivers: List[Dict[str, str]]) -> bool:
+    return any(all(str(row.get(f)) == v for f, v in w.items())
+               for w in waivers)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("committed", help="BENCH json committed at the repo root")
+    ap.add_argument("fresh", help="freshly emitted BENCH json (smoke run)")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="max relative delta on space words (default 0.15)")
+    ap.add_argument("--waive", action="append", default=[],
+                    help="field=value[,field=value...] — skip the space "
+                         "comparison for matching rows (repeatable)")
+    ap.add_argument("--require-overlap", type=int, default=1,
+                    help="minimum matched cells (default 1)")
+    args = ap.parse_args()
+    waivers = [parse_waive(w) for w in args.waive]
+
+    committed = json.load(open(args.committed))
+    fresh = json.load(open(args.fresh))
+    problems: List[str] = []
+
+    for name, payload in (("committed", committed), ("fresh", fresh)):
+        for p in validate_bench_payload(payload):
+            problems.append(f"{name}: schema problem: {p}")
+        bad = [r for r in payload.get("rows", [])
+               if r.get("scan_violations", 0)]
+        if bad:
+            problems.append(f"{name}: {len(bad)} rows report violations")
+    if committed.get("bench") != fresh.get("bench"):
+        problems.append(f"bench name mismatch: committed "
+                        f"{committed.get('bench')!r} vs fresh "
+                        f"{fresh.get('bench')!r}")
+    if problems:
+        return fail(args, problems)
+
+    crows, frows = committed["rows"], fresh["rows"]
+    for field in ("scheme", "ds"):
+        cset = {r.get(field) for r in crows}
+        fset = {r.get(field) for r in frows}
+        if cset != fset:
+            problems.append(
+                f"{field} coverage differs: committed {sorted(cset)} vs "
+                f"fresh {sorted(fset)}")
+    cmixes = {r.get("mix") for r in crows}
+    fmixes = {r.get("mix") for r in frows}
+    if not fmixes <= cmixes:
+        problems.append(f"fresh mixes {sorted(fmixes - cmixes)} absent from "
+                        f"the committed file")
+
+    by_key = {row_key(r): r for r in crows}
+    matched = 0
+    for fr in frows:
+        cr = by_key.get(row_key(fr))
+        if cr is None:
+            problems.append(
+                "no committed cell for fresh row "
+                + "/".join(f"{f}={fr.get(f)}" for f in KEY_FIELDS[:6])
+                + " — committed file is stale, regenerate it")
+            continue
+        matched += 1
+        if waived(fr, waivers):
+            continue
+        for sf in SPACE_FIELDS:
+            a, b = fr.get(sf, 0), cr.get(sf, 0)
+            denom = max(abs(b), 1)
+            if abs(a - b) / denom > args.tolerance:
+                problems.append(
+                    f"{sf} drifted {abs(a - b) / denom:.1%} (> "
+                    f"{args.tolerance:.0%}) on "
+                    + "/".join(f"{fr.get(f)}" for f in KEY_FIELDS[:6])
+                    + f": fresh {a} vs committed {b}")
+    if matched < args.require_overlap:
+        problems.append(f"only {matched} cells matched; need >= "
+                        f"{args.require_overlap} for a meaningful comparison")
+
+    if problems:
+        return fail(args, problems)
+    print(f"OK {args.committed} vs {args.fresh}: {matched} cells compared "
+          f"within {args.tolerance:.0%}"
+          + (f" ({len(waivers)} waiver(s) active)" if waivers else ""))
+    return 0
+
+
+def fail(args, problems: List[str]) -> int:
+    print(f"FAIL {args.committed} vs {args.fresh}:")
+    for p in problems:
+        print(f"  - {p}")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
