@@ -103,4 +103,11 @@ def main(fast: bool = True, out: str = DEFAULT_OUT) -> Dict[str, List[Dict]]:
 
 if __name__ == "__main__":
     import sys
-    main(fast="--full" not in sys.argv)
+
+    from repro.core.sim.measure import parse_out_argv
+
+    out, err = parse_out_argv(sys.argv[1:], DEFAULT_OUT)
+    if err:
+        print(err, file=sys.stderr)
+        raise SystemExit(2)
+    main(fast="--full" not in sys.argv, out=out)

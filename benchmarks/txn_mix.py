@@ -1,32 +1,39 @@
-"""EEMARQ-style read-write transaction benchmark driver (DESIGN.md §8).
+"""MV-RLU-style read-write transaction benchmark driver (DESIGN.md §8-§9).
 
-Runs the update-in-scan txn workload family over the five MVGC schemes and
+Runs the multi-interval txn workload family over the five MVGC schemes and
 both multiversion structures: read-write mixes (update/lookup/scan/rwtxn
 30/20/25/25 and 10/10/20/60 — half vs. three quarters of all transactions
 read-write), scan sizes s ∈ {16, 128}, txn write-set sizes w ∈ {2, 8},
-uniform and Zipfian-0.99 key draws.  Every txn pins its begin-timestamp
-snapshot *through its write phase* and commits all writes at one validated
-commit timestamp — the regime where version-list reclamation must hold both
-the scan's pin and the txn's own writes live, and where the abort-rate axis
-opens (long scans + churn ⇒ footprint validation failures).
+interval counts r ∈ {2, 4} (each txn scans r *disjoint* intervals plus two
+tracked version-wise point reads), uniform and Zipfian key draws.  Every txn
+pins its begin-timestamp snapshot *through its write phase* and commits all
+writes at one validated commit timestamp; aborts are classified
+(``footprint`` / ``wcc`` / ``capacity``) and followed by contention-managed
+bounded-exponential backoff.
 
-Every completed scan and txn is replayed against the reference UpdateLog
-(repro.core.sim.linearize: scans against the begin-ts snapshot, committed
-writes visible exactly at commit-ts); the driver exits nonzero on any
-violation.  Results are emitted as ``BENCH_txn_mix.json`` (schema v2:
-repro.core.sim.measure — adds ``txn_size``/``rw_ratio``/``txns_committed``/
-``txns_aborted``/``abort_rate`` rows).
+The ``hc`` tier is the high-contention storm regime (Zipf 1.2 on a small key
+space, version-budget capacity gate active): abort/retry storms stretch pin
+lifetimes, which is where per-scheme space divergence — the paper's
+bounded-space story — becomes visible in the trajectory.
+
+Every completed scan, point read and txn is replayed against the reference
+UpdateLog (repro.core.sim.linearize); the driver exits nonzero on any
+violation.  Results are emitted as ``BENCH_txn_mix.json`` (schema v3:
+repro.core.sim.measure — adds ``txn_ranges``/``point_reads``/
+``aborts_footprint``/``aborts_wcc``/``aborts_capacity``/``txn_giveups``/
+``backoff_slices`` row fields).
 
   python benchmarks/txn_mix.py                     # standard matrix
   python benchmarks/txn_mix.py --smoke             # tiny CI matrix (seconds)
   python benchmarks/txn_mix.py --full              # full matrix (slow)
-  python benchmarks/txn_mix.py --tiers smoke,standard   # concatenated tiers
+  python benchmarks/txn_mix.py --tiers smoke,standard,hc  # concatenated
   python benchmarks/txn_mix.py --out PATH          # where to write the JSON
 
 The committed repo-root ``BENCH_txn_mix.json`` is generated with
-``--tiers smoke,standard`` so the CI ``bench-trajectory`` step can compare a
-fresh ``--smoke`` run cell-for-cell against the committed smoke rows
-(``tools/compare_bench.py``).
+``--tiers smoke,standard,hc`` so the CI ``bench-trajectory`` step can compare
+a fresh ``--smoke`` run cell-for-cell against the committed smoke rows
+(``tools/compare_bench.py``) while the trajectory keeps the standard and
+high-contention tiers for plotting (``tools/plot_bench.py``).
 """
 from __future__ import annotations
 
@@ -35,29 +42,41 @@ import sys
 import time
 from typing import List
 
-from repro.core.sim.measure import (EEMARQ_RW_MIXES, Measurement,
-                                    parse_out_argv, parse_tier_argv,
-                                    print_rows_by_figure, tier_meta,
-                                    write_bench_json)
+from repro.core.sim.measure import (EEMARQ_HC_ZIPF, EEMARQ_RW_MIXES,
+                                    Measurement, parse_out_argv,
+                                    parse_tier_argv, print_rows_by_figure,
+                                    tier_meta, write_bench_json)
 from repro.core.sim.workload import eemarq_rw_matrix, run_workload
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                            "BENCH_txn_mix.json")
 
 TABLE_COLS = [
-    "scheme", "ds", "mix", "scan_size", "txn_size", "zipf", "ops_per_mwork",
-    "txns_committed", "txns_aborted", "abort_rate", "peak_space_words",
+    "scheme", "ds", "mix", "scan_size", "txn_size", "txn_ranges", "zipf",
+    "txns_committed", "txns_aborted", "abort_rate", "aborts_footprint",
+    "aborts_wcc", "aborts_capacity", "backoff_slices", "peak_space_words",
     "end_space_words", "scan_violations", "wall_s",
 ]
 
-# matrix tiers: (n_keys, num_procs, ops_per_proc, scan_sizes, txn_sizes, zipfs)
+# matrix tiers: (n_keys, num_procs, ops_per_proc, scan_sizes, txn_sizes,
+# txn_ranges, zipfs) + optional workload-config overrides.  ``hc`` is the
+# high-contention storm regime: hot Zipf draws on a small key space with the
+# contention manager's version-budget capacity gate active.
 TIERS = {
     "smoke": dict(n_keys=32, num_procs=4, ops_per_proc=16,
-                  scan_sizes=(8,), txn_sizes=(2,), zipfs=(0.99,)),
+                  scan_sizes=(8,), txn_sizes=(2,), txn_ranges=(2,),
+                  zipfs=(0.99,)),
     "standard": dict(n_keys=512, num_procs=12, ops_per_proc=96,
-                     scan_sizes=(16, 128), txn_sizes=(2, 8), zipfs=(0.99,)),
+                     scan_sizes=(16, 128), txn_sizes=(2, 8),
+                     txn_ranges=(2, 4), zipfs=(0.99,)),
+    "hc": dict(n_keys=128, num_procs=16, ops_per_proc=64,
+               scan_sizes=(16,), txn_sizes=(4,), txn_ranges=(2, 4),
+               zipfs=(EEMARQ_HC_ZIPF,),
+               overrides=dict(txn_capacity=384, txn_refill_every=2,
+                              max_retries=32)),
     "full": dict(n_keys=1024, num_procs=16, ops_per_proc=160,
-                 scan_sizes=(16, 128), txn_sizes=(2, 8), zipfs=(0.0, 0.99)),
+                 scan_sizes=(16, 128), txn_sizes=(2, 8), txn_ranges=(2, 4),
+                 zipfs=(0.0, 0.99)),
 }
 
 
@@ -67,18 +86,20 @@ def run_tier(tier: str) -> List[Measurement]:
         mixes=EEMARQ_RW_MIXES,
         scan_sizes=params["scan_sizes"],
         txn_sizes=params["txn_sizes"],
+        txn_ranges=params["txn_ranges"],
         zipfs=params["zipfs"],
         n_keys=params["n_keys"],
         num_procs=params["num_procs"],
         ops_per_proc=params["ops_per_proc"],
         validate_scans=True,
         sample_every=1024,
+        **params.get("overrides", {}),
     )
     rows = []
     for cfg in cfgs:
         mix = cfg.op_mix
         figure = (f"{cfg.ds}/{mix.label}/s={mix.scan_size}"
-                  f"/w={mix.txn_size}/zipf={cfg.zipf}")
+                  f"/w={mix.txn_size}/r={mix.txn_ranges}/zipf={cfg.zipf}")
         t0 = time.time()
         r = run_workload(cfg)
         m = Measurement.from_result("txn_mix", figure, r,
@@ -102,15 +123,17 @@ def main(argv: List[str]) -> int:
     rows: List[Measurement] = []
     for tier in tiers:
         rows.extend(run_tier(tier))
-    print_rows_by_figure(rows, TABLE_COLS)
+    print_rows_by_figure(rows, TABLE_COLS, width=16)
     payload = write_bench_json(out, "txn_mix", rows,
                                meta=tier_meta(tiers, TIERS))
     violations = sum(m.scan_violations for m in rows)
     committed = sum(m.txns_committed for m in rows)
     aborted = sum(m.txns_aborted for m in rows)
     validated = sum(m.scans_validated for m in rows)
+    by_reason = {r: sum(getattr(m, f"aborts_{r}") for m in rows)
+                 for r in ("footprint", "wcc", "capacity")}
     print(f"\nwrote {out} ({len(payload['rows'])} rows, "
-          f"{committed} txns committed / {aborted} aborted, "
+          f"{committed} txns committed / {aborted} aborted {by_reason}, "
           f"{validated} scans validated, {violations} violations, "
           f"{time.time() - t0:.1f}s)")
     if violations:

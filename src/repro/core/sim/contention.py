@@ -1,0 +1,165 @@
+"""Contention manager for the read-write transaction family (DESIGN.md §9).
+
+MV-RLU (Kim et al.) and EEMARQ both pair optimistic multiversion
+transactions with a *contention manager*: aborted transactions back off
+before retrying (bounded exponential, so storms thin out instead of
+convoying), and the system tracks which objects conflict so both the
+workload and the reclamation layer can react.  Under an abort/retry storm
+each retry re-executes its full multi-interval read phase at a fresh
+snapshot, so pins live longer and version lists grow — exactly the
+worst-case-space regime of "Space and Time Bounded Multiversion Garbage
+Collection" (Ben-David et al.; ``PAPERS.md``).  :class:`ContentionManager`
+makes that regime first-class in the sim:
+
+* **per-key conflict stats** — every abort records the keys implicated
+  (write-set keys for ``wcc``, footprint keys for ``footprint``), so hot-key
+  storms are observable (``hot_keys``) and the aggregate conflict recency is
+  available as a 0..1 ``pressure`` signal.
+* **bounded exponential backoff** — ``backoff_slices(pid)`` grows
+  ``base * 2^retries`` up to ``cap`` slices, with a deterministic per-pid
+  jitter so colliding processes desynchronize.  Because the backoff (not the
+  retry count) is what's bounded, every transaction gets its full retry
+  budget — the fairness property ``tests/sim/test_contention.py`` checks.
+* **a version-budget capacity gate** — an optional token bucket modelling
+  the bounded version-log of MV-RLU: commits consume one token per buffered
+  write, the bucket refills with global-timestamp progress (the stand-in for
+  background reclamation).  When the bucket runs dry the commit aborts with
+  reason ``capacity`` — the abort class that only appears when GC cannot
+  keep up with the write rate, i.e. the paper's bounded-space story told
+  from the transaction side.  ``capacity=None`` (the default) disables the
+  gate so read-mostly workloads are unaffected.
+* **a GC pressure signal schemes consult** — ``pressure()`` decays with
+  timestamp progress since the last conflict.  ``EBRScheme`` and
+  ``SteamLFScheme`` (``schemes.py``) shorten their epoch-advance /
+  announce-scan-refresh intervals while pressure is high: under a storm,
+  pins churn quickly, so a stale announcement scan retains garbage for
+  longer than it should — consulting the manager models the adaptive GC
+  cadence both papers describe.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# Abort reasons, in check order (wcc is the eager first-updater-wins check
+# on the write set, footprint is full validation, capacity gates the final
+# apply — charged only for versions actually about to be installed, so
+# doomed txns never drain the budget).
+ABORT_REASONS = ("wcc", "footprint", "capacity")
+
+
+class ContentionManager:
+    """Per-workload conflict statistics + bounded-exponential backoff.
+
+    One instance is shared by every process of a workload run (the driver
+    threads it through ``_rwtxn_slices`` and hands it to the scheme via
+    ``SchemeBase.set_contention``).  All state is deterministic — jitter is
+    derived from (pid, retry count), never from a shared RNG — so workload
+    runs stay reproducible slice-for-slice.
+    """
+
+    def __init__(self, num_procs: int, *, backoff_base: int = 1,
+                 backoff_cap: int = 64, capacity: Optional[int] = None,
+                 refill_every: int = 4, pressure_window: int = 256):
+        if backoff_base < 1 or backoff_cap < backoff_base:
+            raise ValueError("need 1 <= backoff_base <= backoff_cap")
+        self.P = num_procs
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.key_conflicts: Counter = Counter()
+        self.reason_counts: Counter = Counter()
+        self.retries: List[int] = [0] * num_procs
+        self.commits_by_pid: List[int] = [0] * num_procs
+        self.max_retries_seen = 0
+        self.backoff_slices_total = 0
+        self.conflicts = 0
+        self.commits = 0
+        # capacity gate (token bucket in "versions"; None = unbounded)
+        self.capacity = capacity
+        self.budget = capacity if capacity is not None else 0
+        self.refill_every = max(1, refill_every)
+        self._last_refill_ts = 0.0
+        # pressure: decays with timestamp progress since the last conflict
+        self.pressure_window = max(1, pressure_window)
+        self._last_conflict_ts = float("-inf")
+
+    # -- conflict recording -------------------------------------------------
+    def record_conflict(self, pid: int, reason: str,
+                        keys: Iterable[int] = (), now: float = 0.0) -> None:
+        """One aborted commit attempt: bump the per-key stats and the pid's
+        retry counter (which drives its next backoff)."""
+        if reason not in ABORT_REASONS:
+            raise ValueError(f"unknown abort reason {reason!r}")
+        self.conflicts += 1
+        self.reason_counts[reason] += 1
+        self.retries[pid] += 1
+        self.max_retries_seen = max(self.max_retries_seen, self.retries[pid])
+        self._last_conflict_ts = max(self._last_conflict_ts, now)
+        for k in keys:
+            self.key_conflicts[k] += 1
+
+    def record_commit(self, pid: int) -> None:
+        """A successful commit resets the pid's exponential-backoff ladder."""
+        self.commits += 1
+        self.commits_by_pid[pid] += 1
+        self.retries[pid] = 0
+
+    # -- backoff -------------------------------------------------------------
+    def backoff_slices(self, pid: int) -> int:
+        """Slices to wait before this pid's next attempt: bounded exponential
+        in its consecutive-abort count, plus a deterministic per-(pid, retry)
+        jitter in [0, base] so colliding processes desynchronize."""
+        r = self.retries[pid]
+        if r <= 0:
+            return 0
+        raw = self.backoff_base << min(r - 1, 16)
+        jitter = (pid * 2654435761 + r * 40503) % (self.backoff_base + 1)
+        slices = min(self.backoff_cap, raw + jitter)
+        self.backoff_slices_total += slices
+        return slices
+
+    # -- capacity gate (MV-RLU log model) ------------------------------------
+    def try_consume(self, n_versions: int, now: float) -> bool:
+        """Commit-time version-budget check: ``n_versions`` new versions are
+        about to be installed.  Refills ``1`` token per ``refill_every``
+        timestamp ticks (reclamation keeping pace with global progress), then
+        consumes.  Returns False — the caller must abort with reason
+        ``capacity`` — when the bucket cannot cover the commit."""
+        if self.capacity is None:
+            return True
+        elapsed = now - self._last_refill_ts
+        whole = int(elapsed // self.refill_every) if elapsed > 0 else 0
+        if whole > 0:
+            self.budget = min(self.capacity, self.budget + whole)
+            # advance by the whole intervals actually granted, so fractional
+            # refill progress carries over to the next call
+            self._last_refill_ts += whole * self.refill_every
+        if self.budget < n_versions:
+            return False
+        self.budget -= n_versions
+        return True
+
+    # -- signals for schemes and tests ---------------------------------------
+    def pressure(self, now: float) -> float:
+        """0..1 conflict-recency signal: 1.0 at the instant of a conflict,
+        decaying linearly to 0 over ``pressure_window`` timestamp ticks."""
+        age = now - self._last_conflict_ts
+        if age < 0:
+            return 1.0
+        return max(0.0, 1.0 - age / self.pressure_window)
+
+    def hot_keys(self, n: int = 8) -> List[Tuple[int, int]]:
+        """The ``n`` most-conflicted keys as (key, conflicts)."""
+        return self.key_conflicts.most_common(n)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "conflicts": self.conflicts,
+            "commits": self.commits,
+            "max_consecutive_aborts": self.max_retries_seen,
+            "backoff_slices": self.backoff_slices_total,
+            "hot_key_conflicts": (self.key_conflicts.most_common(1)[0][1]
+                                  if self.key_conflicts else 0),
+            **{f"aborts_{r}": self.reason_counts.get(r, 0)
+               for r in ABORT_REASONS},
+        }

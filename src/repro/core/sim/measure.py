@@ -11,9 +11,12 @@ space units (Java-reachability words, DESIGN.md §5), same throughput proxy
 (which ``tools/compare_bench.py`` — the CI bench-trajectory gate — diffs
 against the committed repo-root files).
 
-``BENCH_*.json`` schema (``SCHEMA_VERSION`` = 2 — v2 added the read-write
+``BENCH_*.json`` schema (``SCHEMA_VERSION`` = 3 — v2 added the read-write
 transaction row fields ``txn_size`` / ``rw_ratio`` / ``txns_committed`` /
-``txns_aborted`` / ``abort_rate``, DESIGN.md §8)::
+``txns_aborted`` / ``abort_rate``, DESIGN.md §8; v3 added the MV-RLU-style
+multi-interval/contention fields ``txn_ranges`` / ``point_reads`` /
+``aborts_footprint`` / ``aborts_wcc`` / ``aborts_capacity`` /
+``txn_giveups`` / ``backoff_slices``, DESIGN.md §9)::
 
     {
       "bench": "<driver name>",
@@ -29,10 +32,11 @@ check_bench_json.py`` (run by the CI ``bench-smoke`` step) enforces this.
 from __future__ import annotations
 
 import json
+import os
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 UNITS = {
     "space": "words, Java-style reachability from the structure roots "
@@ -46,6 +50,17 @@ UNITS = {
     "abort_rate": "aborted commit attempts / all commit attempts, in [0, 1]",
     "rw_ratio": "read-write transactions / all transactions (scan-only rtxs "
                 "+ read-write txns), in [0, 1]",
+    "txn_ranges": "disjoint scan intervals per read-write transaction "
+                  "(multi-interval footprint, DESIGN.md §9)",
+    "point_reads": "tracked version-wise point reads per read-write "
+                   "transaction (revalidated at commit, DESIGN.md §9)",
+    "abort_reasons": "aborts_footprint / aborts_wcc / aborts_capacity "
+                     "partition txns_aborted by cause: full-footprint "
+                     "validation failure / eager write-commit (first-"
+                     "updater-wins) conflict / version-budget exhaustion "
+                     "(DESIGN.md §9)",
+    "backoff_slices": "scheduler slices spent in contention-manager backoff "
+                      "between txn retries (bounded exponential)",
 }
 
 REQUIRED_TOP_KEYS = ("bench", "schema_version", "units", "meta", "rows")
@@ -60,6 +75,9 @@ REQUIRED_ROW_KEYS = (
     "scans_validated", "scan_violations", "wall_s",
     # read-write transactions (schema v2, DESIGN.md §8)
     "txn_size", "rw_ratio", "txns_committed", "txns_aborted", "abort_rate",
+    # multi-interval footprints + contention (schema v3, DESIGN.md §9)
+    "txn_ranges", "point_reads", "aborts_footprint", "aborts_wcc",
+    "aborts_capacity", "txn_giveups", "backoff_slices",
 )
 
 
@@ -72,11 +90,15 @@ class OpMix:
 
     Fractions are per-operation probabilities (update / point lookup / range
     scan / read-write transaction) and must sum to 1.  ``scan_size`` is the
-    number of keys each range scan covers — read-write transactions scan the
-    same interval size before writing ``txn_size`` buffered keys inside it
-    (EEMARQ-style update-in-scan, DESIGN.md §8).  EEMARQ (Sheffi et al.,
-    2022) names its mixes "update/lookup/scan" percentage triples; ``name``
-    carries that label (four components when ``rwtxn_frac`` > 0).
+    number of keys each range scan covers — read-write transactions scan
+    ``txn_ranges`` *disjoint* intervals of that size (a multi-interval
+    footprint), perform ``txn_point_reads`` tracked version-wise point
+    reads, and buffer ``txn_size`` writes spread across the scanned
+    intervals, all committed at one validated timestamp (EEMARQ-style
+    update-in-scan pushed to MV-RLU's full footprint model, DESIGN.md
+    §8-§9).  EEMARQ (Sheffi et al., 2022) names its mixes
+    "update/lookup/scan" percentage triples; ``name`` carries that label
+    (four components when ``rwtxn_frac`` > 0).
     """
 
     update_frac: float
@@ -86,6 +108,8 @@ class OpMix:
     name: str = ""
     rwtxn_frac: float = 0.0
     txn_size: int = 4
+    txn_ranges: int = 1
+    txn_point_reads: int = 0
 
     def __post_init__(self):
         for f in (self.update_frac, self.lookup_frac, self.scan_frac,
@@ -100,6 +124,10 @@ class OpMix:
             raise ValueError("scan/rwtxn fractions > 0 require scan_size >= 1")
         if self.rwtxn_frac > 0 and self.txn_size < 1:
             raise ValueError("rwtxn_frac > 0 requires txn_size >= 1")
+        if self.txn_ranges < 1:
+            raise ValueError("txn_ranges must be >= 1")
+        if self.txn_point_reads < 0:
+            raise ValueError("txn_point_reads must be >= 0")
 
     @property
     def label(self) -> str:
@@ -134,6 +162,11 @@ EEMARQ_RW_MIXES = (
 )
 EEMARQ_TXN_SIZES = (2, 8)
 EEMARQ_RW_SCAN_SIZES = (16, 128)
+# multi-interval footprints (MV-RLU-style, DESIGN.md §9): r disjoint scan
+# intervals per txn; the high-contention tier concentrates the key draws
+# (Zipf 1.2 vs the YCSB-default 0.99) so abort/retry storms actually form
+EEMARQ_TXN_RANGES = (2, 4)
+EEMARQ_HC_ZIPF = 1.2
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +209,13 @@ class Measurement:
     txns_committed: int = 0
     txns_aborted: int = 0
     abort_rate: float = 0.0
+    txn_ranges: int = 0
+    point_reads: int = 0
+    aborts_footprint: int = 0
+    aborts_wcc: int = 0
+    aborts_capacity: int = 0
+    txn_giveups: int = 0
+    backoff_slices: int = 0
     scheme_stats: Dict[str, Any] = field(default_factory=dict)
 
     @classmethod
@@ -228,6 +268,16 @@ class Measurement:
             abort_rate=round(
                 c.get("txn_aborts", 0)
                 / max(1, c.get("txn_commits", 0) + c.get("txn_aborts", 0)), 4),
+            txn_ranges=(mix.txn_ranges
+                        if mix is not None and mix.rwtxn_frac > 0 else 0),
+            point_reads=(mix.txn_point_reads
+                         if mix is not None and mix.rwtxn_frac > 0 else 0),
+            aborts_footprint=c.get("txn_aborts_footprint", 0),
+            aborts_wcc=c.get("txn_aborts_wcc", 0),
+            aborts_capacity=c.get("txn_aborts_capacity", 0),
+            txn_giveups=c.get("txn_giveups", 0),
+            backoff_slices=int(
+                result.get("contention_stats", {}).get("backoff_slices", 0)),
             scheme_stats=dict(result.get("scheme_stats", {})),
         )
 
@@ -316,6 +366,9 @@ def write_bench_json(path: str, bench: str,
     """Serialize measurements to ``path`` in the BENCH schema; returns the
     payload dict (also used by in-process tests)."""
     payload = bench_payload(bench, measurements, meta)
+    parent = os.path.dirname(os.path.abspath(path))
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -73,9 +73,19 @@ class MVHashTable:
 
     def rtx_lookup(self, pid: int, k: int, t: float) -> Optional[Any]:
         """Read key k in the snapshot at timestamp t (one key of an rtx)."""
-        chain = self._bucket(k).read_version(t)
-        idx = _find(chain, k)
-        return chain[idx][1] if idx >= 0 else None
+        return self.rtx_lookup_versioned(pid, k, t)[0]
+
+    def rtx_lookup_versioned(self, pid: int, k: int,
+                             t: float) -> Tuple[Optional[Any], float]:
+        """Snapshot read of key k at t returning ``(value, version_ts)``
+        where ``version_ts`` stamps the *governing version* — the bucket's
+        chain version that supplied the value.  The bucket is the CAS
+        granule of this structure (updates path-copy and swing the whole
+        chain), so the chain version is exactly the "object version" a
+        MV-RLU-style try-lock would contend on (DESIGN.md §9)."""
+        node = self._bucket(k).read_version_node(t)
+        idx = _find(node.val, k)
+        return (node.val[idx][1] if idx >= 0 else None), node.ts
 
     def range_scan(self, pid: int, lo: int, hi: int, t: float) -> Generator:
         """Sliced snapshot range scan at timestamp ``t``: one yield per

@@ -128,11 +128,24 @@ class MVTree:
     def rtx_lookup(self, pid: int, k: int, t: float) -> Optional[Any]:
         """Read key k in the snapshot at timestamp t: descend through the
         child pointers' *versions* at t (one key of an rtx / txn read set)."""
-        node = self.root_v.read_version(t)
+        return self.rtx_lookup_versioned(pid, k, t)[0]
+
+    def rtx_lookup_versioned(self, pid: int, k: int,
+                             t: float) -> Tuple[Optional[Any], float]:
+        """Snapshot read of key k at t returning ``(value, version_ts)``
+        where ``version_ts`` stamps the *governing version* — the terminal
+        child-pointer version whose read ended the descent.  That pointer is
+        the CAS granule an update to k swings (leaf replacement / splice),
+        so its version is the "object version" a MV-RLU-style try-lock would
+        contend on (DESIGN.md §9)."""
+        vnode = self.root_v.read_version_node(t)
+        node = vnode.val
         while isinstance(node, Internal):
             child = node.left_v if k < node.router else node.right_v
-            node = child.read_version(t)
-        return node.val if isinstance(node, Leaf) and node.key == k else None
+            vnode = child.read_version_node(t)
+            node = vnode.val
+        val = node.val if isinstance(node, Leaf) and node.key == k else None
+        return val, vnode.ts
 
     def range_scan(self, pid: int, lo: int, hi: int, t: float) -> Generator:
         """Sliced snapshot range scan at timestamp ``t``: in-order traversal

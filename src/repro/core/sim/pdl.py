@@ -166,12 +166,7 @@ class PDL:
         return self.head
 
     def search(self, k):
-        x = self.head
-        self.work += 1
-        while x.key > k:
-            x = x.left
-            self.work += 1
-        return x.val
+        return self.search_node(k).val
 
     def search_node(self, k) -> Node:
         x = self.head

@@ -74,7 +74,26 @@ class SchemeBase:
         self.work = 0           # scheme-only overhead (list work is in lst.work)
         self.gc_list_work = 0   # list work performed on behalf of GC (reporting)
         self.txn_pins = 0       # read-write txn snapshot pins taken
+        self.contention = None  # optional ContentionManager (DESIGN.md §9)
         self.lists: List[Any] = []
+
+    # -- contention consultation (DESIGN.md §9) -----------------------------
+    def set_contention(self, cm) -> None:
+        """Attach the workload's :class:`~repro.core.sim.contention.
+        ContentionManager`.  Schemes with a *cadence* (EBR's epoch advance,
+        Steam's cached announce-scan refresh) consult its pressure signal:
+        under an abort/retry storm pins churn quickly, so stale announcement
+        state retains garbage longer — the schemes shorten their intervals
+        while pressure is high, the adaptive reaction MV-RLU/EEMARQ describe.
+        Schemes without a cadence (the RangeTracker family flushes on batch
+        boundaries) ignore it."""
+        self.contention = cm
+
+    def _pressure(self) -> float:
+        """Current 0..1 contention pressure (0 with no manager attached)."""
+        if self.contention is None:
+            return 0.0
+        return self.contention.pressure(self.env.read_ts())
 
     # -- list/node factories ----------------------------------------------
     def new_list(self):
@@ -202,7 +221,11 @@ class EBRScheme(SchemeBase):
 
     def _maybe_advance(self) -> None:
         self._ops_since_advance += 1
-        if self._ops_since_advance < self.advance_every:
+        # contention-aware cadence: under an abort/retry storm the epoch must
+        # try to turn over faster — pinned snapshots churn, and every missed
+        # advance strands whole list suffixes (DESIGN.md §9)
+        eff = max(1, int(self.advance_every * (1.0 - 0.75 * self._pressure())))
+        if self._ops_since_advance < eff:
             return
         self._ops_since_advance = 0
         self.work += self.env.P  # scan announcement epochs
@@ -280,7 +303,13 @@ class SteamLFScheme(SchemeBase):
 
     def _scan(self):
         self._since_scan += 1
-        if self._cached is None or self._since_scan >= self.scan_every:
+        # contention-aware cadence: a cached announcement scan goes stale
+        # fast under an abort/retry storm (pins are taken and dropped every
+        # few slices), and compacting against a stale scan retains every
+        # version any *recently released* pin needed — refresh more eagerly
+        # while the contention manager reports pressure (DESIGN.md §9)
+        eff = max(1, int(self.scan_every * (1.0 - 0.75 * self._pressure())))
+        if self._cached is None or self._since_scan >= eff:
             self._cached = self.env.scan_announce()
             self.work += self.env.P + 2
             self._since_scan = 0

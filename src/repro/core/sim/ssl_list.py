@@ -198,12 +198,15 @@ class SSL:
         return False
 
     def search(self, k):
+        return self.search_node(k).val
+
+    def search_node(self, k) -> SNode:
         x = self.head
         self.work += 1
         while x.ts > k:
             x = x.left
             self.work += 1
-        return x.val
+        return x
 
     def compact(self, A: List[float], t: float, h: SNode) -> int:
         """Direct single-threaded compact.  Returns #nodes spliced out."""

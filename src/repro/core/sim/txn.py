@@ -1,4 +1,4 @@
-"""Read-write transactions over the multiversion structures (DESIGN.md §8).
+"""Read-write transactions over the multiversion structures (DESIGN.md §8-§9).
 
 EEMARQ (Sheffi, Ramalhete, Petrank 2022 — ``PAPERS.md``) extends the
 range-scan family this sim already reproduces with *read-write* transactions
@@ -8,38 +8,59 @@ the regime that stresses MVGC hardest — the txn's snapshot pin must survive
 into its own write phase, so every version a scan at the begin timestamp
 still needs stays live while the txn itself allocates new versions.
 
-:class:`Txn` implements that model generically over both ``MVTree`` and
-``MVHashTable`` (anything exposing ``insert``/``delete``/``rtx_lookup``/
-``range_scan``/``range_query``):
+:class:`Txn` implements the full MV-RLU-style model generically over both
+``MVTree`` and ``MVHashTable`` (anything exposing ``insert``/``delete``/
+``rtx_lookup``/``rtx_lookup_versioned``/``range_scan``/``range_query``):
 
 * **begin** — ``scheme.begin_txn(pid)`` pins a snapshot at the begin
   timestamp ``tb`` (announce + for EBR the epoch pin; the pin is released
   only by commit/abort, *after* the write phase).
 * **read phase** — ``get`` / ``range_scan`` read the ``tb`` snapshot through
   the structures' versioned read paths, overlaid with the txn's own buffered
-  writes (read-your-writes).  Scans are the same sliced multi-yield
-  operations as read-only rtx scans, so updates interleave inside them.
+  writes (read-your-writes).  A txn's *footprint* may span several disjoint
+  scan intervals (call ``range_scan`` repeatedly) plus tracked point reads;
+  every piece is validated at commit.  Point reads are tracked
+  **version-wise**: ``get`` records the governing version's timestamp
+  (``rtx_lookup_versioned``), and commit re-reads the version — a point read
+  revalidates only if its governing version is unchanged, not merely if the
+  value happens to match (no ABA tolerance for point reads; DESIGN.md §9).
 * **write phase** — ``put`` / ``delete`` buffer into a private write set;
   nothing touches shared state before commit, so an aborted txn leaves no
   versions anywhere.
 * **commit** — ``try_commit`` linearizes the whole txn at a single commit
-  timestamp ``tc``: it advances the global timestamp once, validates that
-  every key in the txn's *footprint* (point reads, scanned intervals,
-  buffered writes) still has its ``tb``-snapshot value, and only then applies
-  all buffered writes — each stamped ``tc`` — and records them in the shared
-  ``UpdateLog``.  On validation failure it aborts (releasing the pin) and the
-  caller retries with a fresh snapshot.  A txn with an empty write set is
-  read-only and commits validation-free: its snapshot reads linearize at
-  ``tb``.
+  timestamp ``tc``: it advances the global timestamp once, then runs the
+  abort taxonomy in order (``contention.ABORT_REASONS``):
+
+  1. **wcc** (write-commit conflict) — eager first-updater-wins: every
+     write-set key's *governing version* (the CAS granule an update swings —
+     hash bucket chain / terminal tree pointer) must still be ``<= tb``; a
+     version committed after ``tb`` aborts the txn before full validation,
+     exactly like a failed MV-RLU try-lock;
+  2. **footprint** — full validation: every scanned interval re-read at
+     ``tc`` must equal the raw ``tb`` scan result (value-level, ABA-tolerant
+     — an interval restored to its snapshot contents revalidates), and every
+     tracked point read must still be served by its recorded version;
+  3. **capacity** — when a :class:`~repro.core.sim.contention.
+     ContentionManager` with a version budget is attached, a txn that would
+     otherwise commit must cover its write set from the budget (the MV-RLU
+     bounded-log model: reclamation not keeping up ⇒ capacity aborts).
+     Checked last so only versions actually about to be installed are
+     charged — doomed txns never drain the budget.
+
+  Only then are all buffered writes applied — each stamped ``tc`` — and
+  recorded in the shared ``UpdateLog``.  On abort the reason lands in
+  ``abort_reason`` and the implicated keys in ``conflict_keys`` so the
+  driver can feed the contention manager's per-key stats; the caller
+  retries with a fresh snapshot after a bounded-exponential backoff.
+  A txn with an empty write set is read-only and commits validation-free:
+  its snapshot reads linearize at ``tb``.
 
 Commit is slice-atomic in the discrete-event driver, mirroring the sim's
 slice-atomic updates: validation + apply happen between two scheduler yields,
 which models the commit's single linearization point (DESIGN.md §8 records
-why this is faithful for the GC dynamics under study).  Validation is
-value-level per key (ABA-tolerant: a key overwritten back to its snapshot
-value revalidates — the reads are still serializable at ``tc``), and its
-reads go through the version lists, so long-footprint txns pay their
-validation cost in work units like every other traversal.
+why this is faithful for the GC dynamics under study).  All validation reads
+go through the version lists, so long-footprint txns pay their validation
+cost in work units like every other traversal.
 """
 from __future__ import annotations
 
@@ -49,49 +70,64 @@ from typing import Any, Dict, Generator, List, Optional, Tuple
 class Txn:
     """One read-write transaction.  Lifecycle::
 
-        txn = Txn(pid, ds, env, scheme, log=log)   # pins the snapshot
+        txn = Txn(pid, ds, env, scheme, log=log, cm=cm)  # pins the snapshot
         gen = txn.range_scan(lo, hi)                # sliced snapshot scan
-        ... drive gen, buffer writes via txn.put / txn.delete ...
+        ... drive gen (repeat for more intervals), txn.get point reads,
+        ... buffer writes via txn.put / txn.delete ...
         if not txn.try_commit():                    # atomic validate+apply
-            ...retry with a fresh Txn...
+            ...txn.abort_reason in ("capacity", "wcc", "footprint");
+            ...back off, retry with a fresh Txn...
 
     ``log`` (an ``UpdateLog``) receives the committed writes at the commit
     timestamp so subsequent validated scans hold the txn's writes visible
-    exactly at ``tc``; aborted txns never touch it.
+    exactly at ``tc``; aborted txns never touch it.  ``cm`` (a
+    ``ContentionManager``) supplies the optional commit-time version budget;
+    conflict recording and backoff stay in the workload driver.
     """
 
-    __slots__ = ("pid", "ds", "env", "scheme", "log", "begin_ts", "commit_ts",
-                 "writes", "read_footprint", "scan_footprint", "state")
+    __slots__ = ("pid", "ds", "env", "scheme", "log", "cm",
+                 "begin_ts", "commit_ts", "writes", "read_footprint",
+                 "read_versions", "scan_footprint", "state",
+                 "abort_reason", "conflict_keys")
 
-    def __init__(self, pid: int, ds, env, scheme, log=None):
+    def __init__(self, pid: int, ds, env, scheme, log=None, cm=None):
         self.pid = pid
         self.ds = ds
         self.env = env
         self.scheme = scheme
         self.log = log
+        self.cm = cm
         self.begin_ts: float = scheme.begin_txn(pid)
         self.commit_ts: Optional[float] = None
         self.writes: Dict[int, Any] = {}          # key -> value (None = delete)
         self.read_footprint: Dict[int, Any] = {}  # key -> tb-snapshot value
+        self.read_versions: Dict[int, float] = {}  # key -> governing version ts
         self.scan_footprint: List[Tuple[int, int, List[Tuple[int, Any]]]] = []
         self.state = "active"                     # active | committed | aborted
+        self.abort_reason: Optional[str] = None   # capacity | wcc | footprint
+        self.conflict_keys: List[int] = []
 
     # -- read phase ---------------------------------------------------------
     def get(self, k: int) -> Optional[Any]:
-        """Snapshot read of one key, overlaid with the txn's own writes."""
+        """Snapshot read of one key, overlaid with the txn's own writes.
+        Tracked version-wise: the governing version's timestamp joins the
+        footprint and is revalidated (not just value-compared) at commit."""
         assert self.state == "active"
         if k in self.writes:
             return self.writes[k]
         if k in self.read_footprint:
             return self.read_footprint[k]
-        v = self.ds.rtx_lookup(self.pid, k, self.begin_ts)
+        v, vts = self.ds.rtx_lookup_versioned(self.pid, k, self.begin_ts)
         self.read_footprint[k] = v
+        self.read_versions[k] = vts
         return v
 
     def range_scan(self, lo: int, hi: int) -> Generator:
         """Sliced snapshot scan of [lo, hi) at the begin timestamp (one yield
         per versioned read, like the read-only rtx scans); ``return``s the
-        sorted [(key, val)] snapshot overlaid with the txn's own writes."""
+        sorted [(key, val)] snapshot overlaid with the txn's own writes.
+        Call repeatedly for a multi-interval footprint — every interval is
+        validated at commit."""
         assert self.state == "active"
         raw = yield from self.ds.range_scan(self.pid, lo, hi, self.begin_ts)
         self.scan_footprint.append((lo, hi, list(raw)))
@@ -127,8 +163,9 @@ class Txn:
 
     # -- commit / abort -------------------------------------------------------
     def try_commit(self) -> bool:
-        """Validate + apply atomically; returns False (and aborts) on
-        conflict.  The snapshot pin is released either way."""
+        """Validate + apply atomically; returns False (and aborts, setting
+        ``abort_reason``/``conflict_keys``) on conflict.  The snapshot pin is
+        released either way."""
         assert self.state == "active"
         if not self.writes:
             # read-only: linearizes at begin_ts, no validation needed
@@ -137,9 +174,18 @@ class Txn:
             self.scheme.commit_txn(self.pid)
             return True
         tc = self.env.advance_ts()
-        if not self._validate():
-            self.abort()
-            return False
+        wcc = self._wcc_conflicts()
+        if wcc:
+            return self._fail("wcc", wcc)
+        bad = self._validate()
+        if bad is not None:
+            return self._fail("footprint", bad)
+        # capacity last: only a txn that would otherwise commit charges the
+        # version budget — aborted txns install no versions, so they must
+        # not drain it (contention.ABORT_REASONS documents the order)
+        if self.cm is not None and not self.cm.try_consume(len(self.writes),
+                                                           tc):
+            return self._fail("capacity", [])
         for k in sorted(self.writes):
             v = self.writes[k]
             if v is None:
@@ -159,24 +205,41 @@ class Txn:
             self.state = "aborted"
             self.scheme.abort_txn(self.pid)
 
-    def _validate(self) -> bool:
-        """Footprint validation at the commit timestamp: every key the txn
-        read or is about to write must still hold its begin-ts snapshot
-        value.  Reads go through the current version-list heads (= the state
-        at tc — commit is slice-atomic), charging work like any traversal."""
+    def _fail(self, reason: str, keys: List[int]) -> bool:
+        self.abort_reason = reason
+        self.conflict_keys = keys
+        self.abort()
+        return False
+
+    def _wcc_conflicts(self) -> List[int]:
+        """Eager first-updater-wins check on the write set: a write key whose
+        governing version postdates ``tb`` lost the update race (another
+        commit swung its CAS granule since the snapshot) — the MV-RLU
+        try-lock failure, detected version-wise, before full validation."""
+        bad = []
+        for k in self.writes:
+            _, vts = self.ds.rtx_lookup_versioned(self.pid, k,
+                                                  self.env.read_ts())
+            if vts > self.begin_ts:
+                bad.append(k)
+        return bad
+
+    def _validate(self) -> Optional[List[int]]:
+        """Footprint validation at the commit timestamp; returns the
+        implicated keys on failure, None when the footprint revalidates.
+        Scanned intervals are re-read at ``tc`` and compared against the raw
+        ``tb`` result (value-level, ABA-tolerant); tracked point reads are
+        revalidated version-wise — the governing version recorded at read
+        time must still serve the key.  Reads go through the current
+        version-list heads (= the state at tc — commit is slice-atomic),
+        charging work like any traversal."""
         now = self.env.read_ts()
         for lo, hi, raw in self.scan_footprint:
-            if self.ds.range_query(self.pid, lo, hi, now) != raw:
-                return False
-        for k, seen in self.read_footprint.items():
-            if self.ds.lookup(self.pid, k) != seen:
-                return False
-        for k in self.writes:
-            if k in self.read_footprint:
-                continue  # already validated above
-            if any(lo <= k < hi for lo, hi, _ in self.scan_footprint):
-                continue  # covered by an interval check
-            snap = self.ds.rtx_lookup(self.pid, k, self.begin_ts)
-            if self.ds.lookup(self.pid, k) != snap:
-                return False
-        return True
+            cur = self.ds.range_query(self.pid, lo, hi, now)
+            if cur != raw:
+                return sorted({k for k, _ in set(cur) ^ set(raw)})
+        for k, vts in self.read_versions.items():
+            _, vts_now = self.ds.rtx_lookup_versioned(self.pid, k, now)
+            if vts_now != vts:
+                return [k]
+        return None

@@ -42,6 +42,12 @@ class VCas:
         """rtx read: latest value whose version timestamp is <= t."""
         return self.lst.search(t)
 
+    def read_version_node(self, t: float):
+        """Like :meth:`read_version` but returns the version *node* itself,
+        so callers can compare version identity/timestamp (the txn commit
+        path's version-wise point-read revalidation, DESIGN.md §9)."""
+        return self.lst.search_node(t)
+
     def cas(self, pid: int, old: Any, new: Any) -> bool:
         h = self.lst.peek_head()
         if h.val is not old and h.val != old:

@@ -29,16 +29,23 @@ Workload shapes:
   enumerates the range-heavy family: mixes 50/25/25 and 10/10/80, scan sizes
   s ∈ {8, 64, 1024, 8192}, uniform + Zipfian 0.99, all five schemes, both
   structures.
-* **read-write transactions** (DESIGN.md §8): when ``OpMix.rwtxn_frac`` > 0,
-  a process draws EEMARQ-style update-in-scan txns
-  (:class:`~repro.core.sim.txn.Txn`): scan a ``scan_size`` interval at the
-  begin snapshot, buffer ``txn_size`` writes inside it, commit all writes at
-  one validated commit timestamp — abort + retry (fresh snapshot) on
-  conflict, giving up after ``max_retries``.  The txn's snapshot pin
-  survives its write phase, which is exactly the regime where the schemes'
-  version-list truncation must hold both the scan's pin and the txn's own
-  writes live.  ``eemarq_rw_matrix`` enumerates the family (rw mixes ×
-  scan/txn sizes × distributions × schemes × structures).
+* **read-write transactions** (DESIGN.md §8-§9): when ``OpMix.rwtxn_frac`` >
+  0, a process draws MV-RLU-style multi-interval txns
+  (:class:`~repro.core.sim.txn.Txn`): scan ``txn_ranges`` *disjoint*
+  ``scan_size`` intervals at the begin snapshot, perform
+  ``txn_point_reads`` tracked version-wise point reads, buffer ``txn_size``
+  writes spread across the intervals, and commit everything at one
+  validated commit timestamp.  On abort (reason ``capacity`` / ``wcc`` /
+  ``footprint`` — the taxonomy in ``contention.ABORT_REASONS``) the process
+  backs off for a contention-manager-chosen number of slices
+  (bounded-exponential per pid) and retries with a fresh snapshot, giving
+  up after ``max_retries``.  The txn's snapshot pin survives its write
+  phase, and under an abort/retry storm each retry re-executes the whole
+  multi-interval read phase — exactly the regime where the schemes'
+  version-list truncation must hold both the scans' pins and the txns' own
+  writes live, and where per-scheme space divergence becomes visible.
+  ``eemarq_rw_matrix`` enumerates the family (rw mixes × scan/txn sizes ×
+  interval counts × distributions × schemes × structures).
 
 Measurements (serialized via :class:`~repro.core.sim.measure.Measurement`):
 * **space**: words reachable from the data structure roots (Java GC model —
@@ -65,10 +72,12 @@ from typing import Any, Dict, Generator, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.sim.contention import ContentionManager
 from repro.core.sim.linearize import ScanValidator, UpdateLog
 from repro.core.sim.measure import (EEMARQ_MIXES, EEMARQ_RW_MIXES,
                                     EEMARQ_RW_SCAN_SIZES, EEMARQ_SCAN_SIZES,
-                                    EEMARQ_TXN_SIZES, EEMARQ_ZIPFS, OpMix)
+                                    EEMARQ_TXN_RANGES, EEMARQ_TXN_SIZES,
+                                    EEMARQ_ZIPFS, OpMix)
 from repro.core.sim.mvhash import MVHashTable
 from repro.core.sim.mvtree import MVTree, Leaf, Internal
 from repro.core.sim.schemes import SCHEMES, SchemeBase, make_scheme
@@ -181,6 +190,12 @@ class WorkloadConfig:
     scan_chunk: int = 8               # versioned reads per scan slice
     sample_every: int = 256           # slices between space samples
     validate_scans: bool = False      # replay every scan against an UpdateLog
+    # read-write txn contention knobs (DESIGN.md §9)
+    max_retries: int = 16             # txn attempts before giving up
+    backoff_base: int = 1             # contention-manager backoff: base slices
+    backoff_cap: int = 64             # ...and the bound on one backoff
+    txn_capacity: Optional[int] = None  # version budget (None = unbounded)
+    txn_refill_every: int = 4         # ts ticks per budget token refill
     scheme_kwargs: Dict[str, Any] = field(default_factory=dict)
 
     def resolved_mix(self) -> OpMix:
@@ -229,6 +244,8 @@ def eemarq_rw_matrix(
     mixes: Sequence[OpMix] = EEMARQ_RW_MIXES,
     scan_sizes: Sequence[int] = EEMARQ_RW_SCAN_SIZES,
     txn_sizes: Sequence[int] = EEMARQ_TXN_SIZES,
+    txn_ranges: Sequence[int] = EEMARQ_TXN_RANGES,
+    point_reads: int = 2,
     zipfs: Sequence[float] = EEMARQ_ZIPFS,
     n_keys: int = 1024,
     num_procs: int = 16,
@@ -236,27 +253,33 @@ def eemarq_rw_matrix(
     seed: int = 7,
     **overrides,
 ) -> List[WorkloadConfig]:
-    """Enumerate the EEMARQ-style read-write update-in-scan matrix
-    (DESIGN.md §8): rw mix × scan size × txn size × key distribution ×
-    scheme × structure.  Defaults are the full family; ``benchmarks/
-    txn_mix.py`` passes tiered subsets."""
+    """Enumerate the MV-RLU-style read-write transaction matrix (DESIGN.md
+    §8-§9): rw mix × scan size × txn size × interval count × key
+    distribution × scheme × structure, each txn carrying a multi-interval
+    footprint (``txn_ranges`` disjoint scans + ``point_reads`` tracked point
+    reads).  Defaults are the full family; ``benchmarks/txn_mix.py`` passes
+    tiered subsets (including the high-contention Zipf tier)."""
     cfgs = []
     for ds in structures:
         for mix in mixes:
             for size in scan_sizes:
                 for tsize in txn_sizes:
-                    for z in zipfs:
-                        for scheme in schemes:
-                            kw = ({"batch_size": max(8, num_procs)}
-                                  if scheme in ("dlrt", "slrt", "bbf") else {})
-                            cfgs.append(WorkloadConfig(
-                                ds=ds, scheme=scheme, n_keys=n_keys,
-                                num_procs=num_procs, mode="mixed",
-                                op_mix=replace(mix, scan_size=size,
-                                               txn_size=tsize),
-                                ops_per_proc=ops_per_proc, zipf=z, seed=seed,
-                                scheme_kwargs=kw, **overrides,
-                            ))
+                    for r in txn_ranges:
+                        for z in zipfs:
+                            for scheme in schemes:
+                                kw = ({"batch_size": max(8, num_procs)}
+                                      if scheme in ("dlrt", "slrt", "bbf")
+                                      else {})
+                                cfgs.append(WorkloadConfig(
+                                    ds=ds, scheme=scheme, n_keys=n_keys,
+                                    num_procs=num_procs, mode="mixed",
+                                    op_mix=replace(
+                                        mix, scan_size=size, txn_size=tsize,
+                                        txn_ranges=r,
+                                        txn_point_reads=point_reads),
+                                    ops_per_proc=ops_per_proc, zipf=z,
+                                    seed=seed, scheme_kwargs=kw, **overrides,
+                                ))
     return cfgs
 
 
@@ -308,30 +331,58 @@ def _scan_slices(pid, ds, env, scheme, rng, size, key_range, chunk, counters,
         validator.check(a, a + size, t, result)
 
 
+def _txn_intervals(rng, ranges: int, size: int,
+                   key_range: int) -> List[Tuple[int, int]]:
+    """``ranges`` disjoint half-open scan intervals of ~``size`` keys each:
+    the key space is cut into ``ranges`` equal segments and one interval is
+    placed uniformly inside each segment (clamped to the segment width), so
+    intervals never overlap while placement stays randomized."""
+    seg = max(2, key_range // ranges)   # degenerate configs: tiny segments
+    out = []
+    for j in range(ranges):
+        lo_bound = 1 + j * seg
+        s = min(size, max(1, seg - 1))
+        a = lo_bound + rng.randrange(max(1, seg - s))
+        out.append((a, a + s))
+    return out
+
+
 def _rwtxn_slices(pid, ds, env, scheme, rng, mix: OpMix, key_range, chunk,
-                  counters, log=None, validator=None, max_retries=16):
-    """One EEMARQ-style update-in-scan read-write transaction (DESIGN.md §8),
-    retried with a fresh snapshot on abort: scan a ``scan_size`` interval at
-    the begin timestamp, buffer ``txn_size`` writes to keys inside it, then
-    commit all writes at one validated commit timestamp.  The snapshot pin
-    survives into the write phase; commit is slice-atomic like updates."""
-    size = min(mix.scan_size, key_range)
-    for _ in range(max_retries):
-        txn = Txn(pid, ds, env, scheme, log=log)
-        a = rng.randrange(1, max(2, key_range - size + 1))
-        gen = txn.range_scan(a, a + size)
-        steps = 0
-        while True:
-            try:
-                next(gen)
-            except StopIteration:
-                break
-            steps += 1
-            if steps % chunk == 0:
-                yield
-        # update-in-scan: the write set lives inside the scanned interval
-        for _ in range(mix.txn_size):
-            k = rng.randrange(a, a + size)
+                  counters, cm: ContentionManager, log=None, validator=None,
+                  max_retries=16):
+    """One MV-RLU-style read-write transaction (DESIGN.md §9), retried with
+    a fresh snapshot on abort: scan ``txn_ranges`` disjoint ``scan_size``
+    intervals at the begin timestamp, perform ``txn_point_reads`` tracked
+    version-wise point reads, buffer ``txn_size`` writes spread across the
+    scanned intervals, then commit everything at one validated commit
+    timestamp.  The snapshot pin survives into the write phase; commit is
+    slice-atomic like updates.  Aborts are classified (``capacity`` /
+    ``wcc`` / ``footprint``), recorded in the contention manager's per-key
+    stats, and followed by a bounded-exponential backoff whose length the
+    manager chooses — so retry storms thin out instead of convoying, while
+    every retry's full multi-interval re-scan stretches pin lifetimes."""
+    size = min(mix.scan_size, max(1, key_range // max(1, mix.txn_ranges) - 1))
+    for attempt in range(max_retries):
+        txn = Txn(pid, ds, env, scheme, log=log, cm=cm)
+        intervals = _txn_intervals(rng, mix.txn_ranges, size, key_range)
+        for a, b in intervals:
+            gen = txn.range_scan(a, b)
+            steps = 0
+            while True:
+                try:
+                    next(gen)
+                except StopIteration:
+                    break
+                steps += 1
+                if steps % chunk == 0:
+                    yield
+        for _ in range(mix.txn_point_reads):
+            txn.get(rng.randrange(1, key_range + 1))
+            yield  # one traversal per tracked point read
+        # update-in-scan: writes spread across the scanned intervals
+        for i in range(mix.txn_size):
+            a, b = intervals[i % len(intervals)]
+            k = rng.randrange(a, b)
             if rng.random() < 0.5:
                 txn.put(k, rng.randrange(1 << 30))
             else:
@@ -340,12 +391,21 @@ def _rwtxn_slices(pid, ds, env, scheme, rng, mix: OpMix, key_range, chunk,
         committed = txn.try_commit()
         if validator is not None:
             validator.check_txn(txn)
-        counters["txn_scan_keys"] += size
+        counters["txn_scan_keys"] += sum(b - a for a, b in intervals)
         if committed:
             counters["txn_commits"] += 1
+            cm.record_commit(pid)
             return
         counters["txn_aborts"] += 1
-        yield  # back off one slice before retrying with a fresh snapshot
+        counters[f"txn_aborts_{txn.abort_reason}"] += 1
+        cm.record_conflict(pid, txn.abort_reason, txn.conflict_keys,
+                           env.read_ts())
+        if attempt + 1 < max_retries:
+            # backoff only precedes an actual retry — the final abort falls
+            # straight through to the give-up, so backoff_slices measures
+            # exactly the slices spent between attempts
+            for _ in range(cm.backoff_slices(pid)):
+                yield
     counters["txn_giveups"] += 1
 
 
@@ -370,7 +430,7 @@ def scan_script(
 
 def mixed_script(
     pid, ds, env, scheme, sampler, rng, cfg: WorkloadConfig, key_range,
-    counters, log=None, validator=None
+    counters, log=None, validator=None, cm: Optional[ContentionManager] = None
 ) -> Generator:
     mix = cfg.resolved_mix()
     for _ in range(cfg.ops_per_proc):
@@ -386,7 +446,7 @@ def mixed_script(
               and r >= mix.update_frac + mix.lookup_frac + mix.scan_frac):
             yield from _rwtxn_slices(
                 pid, ds, env, scheme, rng, mix, key_range, cfg.scan_chunk,
-                counters, log, validator,
+                counters, cm, log, validator, max_retries=cfg.max_retries,
             )
             yield
         else:
@@ -409,6 +469,16 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
     log = UpdateLog() if cfg.validate_scans else None
     validator = ScanValidator(log) if cfg.validate_scans else None
 
+    mix = cfg.resolved_mix()
+    cm: Optional[ContentionManager] = None
+    if cfg.mode == "mixed" and mix.rwtxn_frac > 0:
+        cm = ContentionManager(
+            cfg.num_procs, backoff_base=cfg.backoff_base,
+            backoff_cap=cfg.backoff_cap, capacity=cfg.txn_capacity,
+            refill_every=cfg.txn_refill_every,
+        )
+        scheme.set_contention(cm)
+
     ds = MVHashTable(env, scheme, cfg.n_keys) if cfg.ds == "hash" else MVTree(env, scheme)
     # prefill to ~n_keys live keys
     prefill = rng.sample(range(1, key_range + 1), cfg.n_keys)
@@ -422,7 +492,10 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
     counters: Dict[str, int] = {"updates": 0, "scans": 0, "scan_keys": 0,
                                 "lookups": 0, "txn_commits": 0,
                                 "txn_aborts": 0, "txn_giveups": 0,
-                                "txn_scan_keys": 0}
+                                "txn_scan_keys": 0,
+                                "txn_aborts_footprint": 0,
+                                "txn_aborts_wcc": 0,
+                                "txn_aborts_capacity": 0}
 
     scripts: List[Generator] = []
     if cfg.mode == "split":
@@ -453,7 +526,7 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
         for pid in range(cfg.num_procs):
             scripts.append(
                 mixed_script(pid, ds, env, scheme, sampler, rng, cfg,
-                             key_range, counters, log, validator)
+                             key_range, counters, log, validator, cm)
             )
 
     # round-robin at slice granularity
@@ -499,6 +572,8 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
         "end_space": end_space,
         "end_space_pre_quiesce": end_space_pre_quiesce,
         "scheme_stats": scheme.stats(),
+        "contention_stats": cm.stats() if cm is not None else {},
+        "cm_commits_by_pid": list(cm.commits_by_pid) if cm is not None else None,
         "scans_validated": validator.checked if validator else 0,
         "scan_violations": validator.violations if validator else 0,
         "txns_validated": validator.txns_checked if validator else 0,

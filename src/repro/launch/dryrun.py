@@ -1,6 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512" + (
-    " " + os.environ["XLA_FLAGS"] if "XLA_FLAGS" in os.environ else "")
+import sys as _sys
+# --smoke compiles one tiny cell on a single host device; everything else
+# fakes a pod's worth of devices.  Must be decided before jax imports.
+_FAKE_DEVICES = 1 if "--smoke" in _sys.argv else 512
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_FAKE_DEVICES}" + (
+        " " + os.environ["XLA_FLAGS"] if "XLA_FLAGS" in os.environ else ""))
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell:
@@ -15,6 +20,8 @@ For each cell:
 
 Run:  PYTHONPATH=src python -m repro.launch.dryrun --all
       PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh pod
+      PYTHONPATH=src python -m repro.launch.dryrun --smoke   # CI: smallest
+          # arch x train_4k on a 1-device host mesh, seconds not minutes
 """
 import argparse
 import json
@@ -28,7 +35,7 @@ import jax
 from repro.configs import list_archs, runnable
 from repro.configs.base import SHAPES
 from repro.launch.hlo_cost import analyze_hlo
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch import specs as S
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -84,9 +91,15 @@ def collective_census(hlo: str) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def _mesh_for(mesh_name: str):
+    if mesh_name == "host":          # --smoke: whatever this machine has
+        return make_host_mesh(1, 1)
+    return make_production_mesh(multi_pod=(mesh_name == "multipod"))
+
+
 def dryrun_cell(arch: str, shape: str, mesh_name: str,
                 variant: str = "baseline", **overrides) -> Dict:
-    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    mesh = _mesh_for(mesh_name)
     sh = SHAPES[shape]
     t0 = time.time()
     with jax.set_mesh(mesh):
@@ -121,7 +134,7 @@ def dryrun_cell(arch: str, shape: str, mesh_name: str,
 
     rec = {
         "arch": arch, "shape": shape, "mesh": mesh_name, "variant": variant,
-        "chips": int(jax.device_count()) if mesh_name == "multipod" else 256,
+        "chips": int(mesh.devices.size),
         "seq_len": sh.seq_len, "global_batch": sh.global_batch,
         "kind": sh.kind,
         "flops_per_device": float(hc["flops"]),
@@ -169,15 +182,32 @@ def run_and_save(arch: str, shape: str, mesh_name: str,
     return rec
 
 
+def smallest_arch() -> str:
+    """The arch with the fewest parameters (the CI smoke cell)."""
+    from repro.configs import get_config
+    return min(list_archs(), key=lambda a: get_config(a).param_count())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
-    ap.add_argument("--mesh", default=None, choices=[None, "pod", "multipod"])
+    ap.add_argument("--mesh", default=None,
+                    choices=[None, "pod", "multipod", "host"])
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one cell: smallest arch x train_4k on a 1-device "
+                         "host mesh (the CI launch-dryrun smoke step)")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--variant", default="baseline")
     args = ap.parse_args()
+
+    if args.smoke:
+        args.arch = args.arch or smallest_arch()
+        args.shape = args.shape or "train_4k"
+        args.mesh = "host"
+        args.variant = "smoke"
+        args.force = True
 
     archs = [args.arch] if args.arch else list_archs()
     shapes = [args.shape] if args.shape else list(SHAPES)

@@ -1,0 +1,190 @@
+"""ContentionManager semantics + contention-aware txn-engine properties
+(DESIGN.md §9).
+
+Covers: bounded-exponential backoff (growth, cap, per-pid jitter, reset on
+commit), the version-budget capacity gate (token bucket, refill with
+timestamp progress), the pressure signal and the EBR/STEAM cadence
+consultation, abort-reason taxonomy reconciliation against the workload
+counters, and the fairness acceptance bar: under a high-contention storm no
+transaction starves — every process commits, nobody exhausts its retry
+budget.
+"""
+import pytest
+
+from repro.core.sim.contention import ABORT_REASONS, ContentionManager
+from repro.core.sim.measure import Measurement, OpMix
+from repro.core.sim.schemes import make_scheme
+from repro.core.sim.ssl_list import MVEnv
+from repro.core.sim.workload import WorkloadConfig, run_workload
+
+HC_MIX = OpMix(0.25, 0.10, 0.05, scan_size=16, rwtxn_frac=0.60,
+               txn_size=4, txn_ranges=2, txn_point_reads=2)
+
+
+def _hc_config(scheme: str, **over) -> WorkloadConfig:
+    """The high-contention storm regime (Zipf 1.2, hot keys, capacity gate),
+    mirroring benchmarks/txn_mix.py's ``hc`` tier at test scale."""
+    kw = {"batch_size": 8} if scheme in ("dlrt", "slrt", "bbf") else {}
+    base = dict(
+        ds="hash", scheme=scheme, n_keys=128, num_procs=12, mode="mixed",
+        op_mix=HC_MIX, ops_per_proc=80, zipf=1.2, seed=11, max_retries=24,
+        txn_capacity=256, txn_refill_every=1, validate_scans=True,
+        scheme_kwargs=kw, sample_every=2048,
+    )
+    base.update(over)
+    return WorkloadConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# ContentionManager unit semantics
+# ---------------------------------------------------------------------------
+def test_backoff_grows_exponentially_and_is_bounded():
+    cm = ContentionManager(4, backoff_base=2, backoff_cap=64)
+    assert cm.backoff_slices(0) == 0          # no conflicts yet: no backoff
+    seen = []
+    for _ in range(12):
+        cm.record_conflict(0, "footprint", [5])
+        seen.append(cm.backoff_slices(0))
+    # grows (modulo jitter <= base) and saturates at the cap
+    assert seen[0] >= 2 and seen[3] > seen[0]
+    assert max(seen) == 64 and seen[-1] == 64
+    assert all(s <= 64 for s in seen)
+    # a commit resets the ladder
+    cm.record_commit(0)
+    assert cm.backoff_slices(0) == 0
+    cm.record_conflict(0, "wcc", [5])
+    assert cm.backoff_slices(0) <= 2 + 2
+
+
+def test_backoff_jitter_desynchronizes_pids():
+    cm = ContentionManager(8, backoff_base=4, backoff_cap=1024)
+    for pid in range(8):
+        for _ in range(3):
+            cm.record_conflict(pid, "footprint", [])
+    # same retry count, but not all pids get the identical backoff
+    assert len({cm.backoff_slices(pid) for pid in range(8)}) > 1
+
+
+def test_unknown_abort_reason_rejected():
+    cm = ContentionManager(2)
+    with pytest.raises(ValueError):
+        cm.record_conflict(0, "cosmic-rays")
+
+
+def test_capacity_token_bucket_refills_with_timestamp_progress():
+    cm = ContentionManager(2, capacity=8, refill_every=2)
+    assert cm.try_consume(6, now=0.0)        # 8 -> 2
+    assert not cm.try_consume(4, now=0.0)    # 2 < 4: capacity abort
+    assert cm.try_consume(2, now=0.0)        # exact spend ok: 2 -> 0
+    # 8 ts ticks at refill_every=2 -> 4 tokens back
+    assert not cm.try_consume(5, now=8.0)
+    assert cm.try_consume(4, now=8.0)
+    # unbounded manager never rejects
+    assert ContentionManager(2).try_consume(10**9, now=0.0)
+
+
+def test_pressure_decays_with_timestamp_progress():
+    cm = ContentionManager(2, pressure_window=100)
+    assert cm.pressure(1000.0) == 0.0        # no conflict ever
+    cm.record_conflict(0, "footprint", [3], now=1000.0)
+    assert cm.pressure(1000.0) == 1.0
+    assert 0.4 < cm.pressure(1050.0) < 0.6
+    assert cm.pressure(1100.0) == 0.0
+    assert cm.hot_keys() == [(3, 1)]
+
+
+def test_stats_expose_the_taxonomy():
+    cm = ContentionManager(2)
+    cm.record_conflict(0, "wcc", [1])
+    cm.record_conflict(1, "capacity", [])
+    cm.record_conflict(1, "footprint", [2, 3])
+    cm.record_commit(0)
+    s = cm.stats()
+    assert s["conflicts"] == 3 and s["commits"] == 1
+    assert [s[f"aborts_{r}"] for r in ABORT_REASONS] == [1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# Scheme consultation: GC cadence shortens under pressure
+# ---------------------------------------------------------------------------
+def test_ebr_epoch_cadence_accelerates_under_pressure():
+    env = MVEnv(2)
+    scheme = make_scheme("ebr", env, advance_every=40)
+    cm = ContentionManager(2, pressure_window=10**9)
+    scheme.set_contention(cm)
+    cm.record_conflict(0, "footprint", [], now=env.read_ts())
+
+    def ops_until_advance():
+        e0, n = scheme.epoch, 0
+        while scheme.epoch == e0 and n < 200:
+            scheme.begin_update(0)
+            scheme.end_update(0, None)
+            n += 1
+        return n
+
+    stressed = ops_until_advance()
+    scheme.set_contention(None)              # pressure gone
+    calm = ops_until_advance()
+    assert stressed < calm <= 41
+    assert stressed <= 11                    # 0.75 pressure cut: 40 -> 10
+
+
+def test_steam_refreshes_announce_scan_faster_under_pressure():
+    env = MVEnv(2)
+    scheme = make_scheme("steam", env, scan_every=40)
+    scheme._scan()                           # prime the cache
+    base_work = scheme.work
+
+    def refresh_cost(n):
+        w0 = scheme.work
+        for _ in range(n):
+            scheme._scan()
+        return scheme.work - w0
+
+    calm = refresh_cost(40)                  # ~1 refresh per 40 calls
+    cm = ContentionManager(2, pressure_window=10**9)
+    scheme.set_contention(cm)
+    cm.record_conflict(0, "wcc", [], now=env.read_ts())
+    stressed = refresh_cost(40)              # ~4 refreshes per 40 calls
+    assert stressed >= 3 * max(1, calm)
+    assert base_work > 0                     # the prime actually scanned
+
+
+# ---------------------------------------------------------------------------
+# Workload-level: taxonomy reconciliation + fairness under the storm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", ["ebr", "steam", "slrt"])
+def test_abort_reasons_reconcile_with_txns_aborted(scheme):
+    r = run_workload(_hc_config(scheme))
+    c = r["counters"]
+    assert c["txn_aborts"] > 100, "storm did not form; config too weak"
+    assert (c["txn_aborts_footprint"] + c["txn_aborts_wcc"]
+            + c["txn_aborts_capacity"]) == c["txn_aborts"]
+    assert c["txn_aborts_capacity"] > 0     # the budget gate engaged
+    assert c["txn_aborts_footprint"] > 0    # ...and real validation failures
+    # the Measurement row carries the same partition (schema v3)
+    m = Measurement.from_result("txn_mix", "hc", r)
+    row = m.to_row()
+    assert (row["aborts_footprint"] + row["aborts_wcc"]
+            + row["aborts_capacity"]) == row["txns_aborted"]
+    assert row["backoff_slices"] > 0 and row["txn_ranges"] == 2
+    assert r["scan_violations"] == 0 and r["txn_violations"] == 0
+
+
+@pytest.mark.parametrize("scheme", ["ebr", "dlrt"])
+def test_no_txn_starves_under_high_contention(scheme):
+    """Fairness acceptance: with bounded-exponential backoff active, a
+    high-contention storm must not starve anyone — every process commits
+    transactions, nobody exhausts its retry budget (zero give-ups), and the
+    longest abort streak stays strictly inside ``max_retries``."""
+    cfg = _hc_config(scheme)
+    r = run_workload(cfg)
+    c = r["counters"]
+    cs = r["contention_stats"]
+    assert c["txn_aborts"] > 100, "storm did not form; config too weak"
+    assert c["txn_giveups"] == 0, f"{c['txn_giveups']} txns starved"
+    assert cs["max_consecutive_aborts"] < cfg.max_retries
+    assert cs["backoff_slices"] > 0
+    # every process got read-write txns through the storm
+    assert r["cm_commits_by_pid"] is not None
+    assert all(n > 0 for n in r["cm_commits_by_pid"]), r["cm_commits_by_pid"]

@@ -168,6 +168,10 @@ def test_txn_mix_smoke_emits_valid_bench_json(tmp_path):
     assert sum(r["txns_committed"] for r in rows) > 0
     assert all(0.0 <= r["abort_rate"] <= 1.0 for r in rows)
     assert {r["rw_ratio"] for r in rows} == {0.5, 0.75}
+    # schema v3: multi-interval footprints + the abort taxonomy partition
+    assert all(r["txn_ranges"] >= 2 for r in rows)
+    assert all(r["aborts_footprint"] + r["aborts_wcc"] + r["aborts_capacity"]
+               == r["txns_aborted"] for r in rows)
     # the schema checker agrees, including the txn-field validation
     p = _run([sys.executable, "tools/check_bench_json.py", out,
               "--schemes", "ebr,steam,dlrt,slrt,bbf",
@@ -211,16 +215,50 @@ def test_compare_bench_trajectory_gate(tmp_path):
     assert p.returncode == 1 and "stale" in p.stdout, p.stdout + p.stderr
 
 
+# ---------------------------------------------------------------------------
+# plot_bench (the CI bench-plots step)
+# ---------------------------------------------------------------------------
+def test_plot_bench_renders_pngs(tmp_path):
+    pytest.importorskip("matplotlib")
+    import dataclasses
+    r = _tiny_result()
+    m = Measurement.from_result("range_query", "hash/40-20-40/s=8", r)
+    txn_row = dataclasses.replace(
+        m, bench="txn_mix", txn_size=2, txn_ranges=2, rw_ratio=0.5,
+        txns_committed=10, txns_aborted=4, abort_rate=0.2857,
+        aborts_footprint=2, aborts_wcc=1, aborts_capacity=1,
+        backoff_slices=9)
+    gc_row = dataclasses.replace(m, bench="gc_comparison", figure="fig4")
+    paths = []
+    for bench, rows in (("range_query", [m]), ("txn_mix", [txn_row]),
+                        ("gc_comparison", [gc_row])):
+        p = str(tmp_path / f"BENCH_{bench}.json")
+        _write_payload(p, rows, bench=bench)
+        paths.append(p)
+    outdir = str(tmp_path / "plots")
+    p = _run([sys.executable, "tools/plot_bench.py", *paths,
+              "--outdir", outdir, "--require-matplotlib"])
+    assert p.returncode == 0, p.stdout + p.stderr
+    pngs = sorted(os.listdir(outdir))
+    assert any("space_vs_scan_size" in f for f in pngs)
+    assert any("space_vs_txn_size" in f for f in pngs)
+    assert any("abort_rate" in f for f in pngs)
+    assert any("figures" in f for f in pngs)
+    assert all(f.endswith(".png") for f in pngs)
+
+
 @pytest.mark.slow   # CI's bench-smoke + bench-trajectory steps run this flow
 def test_committed_bench_files_pass_the_trajectory_gate(tmp_path):
-    """The repo-root BENCH files must contain every cell a fresh smoke run
-    emits, within tolerance — exactly what the CI bench-trajectory step
-    enforces (here against a freshly generated smoke emission)."""
-    for driver, committed in (("benchmarks/txn_mix.py", "BENCH_txn_mix.json"),
-                              ("benchmarks/range_query.py",
-                               "BENCH_range_query.json")):
+    """All three repo-root BENCH files must contain every cell a fresh
+    smoke/fast run emits, within tolerance — exactly what the CI
+    bench-trajectory step enforces (here against fresh emissions)."""
+    for driver, committed, flags in (
+            ("benchmarks/txn_mix.py", "BENCH_txn_mix.json", ["--smoke"]),
+            ("benchmarks/range_query.py", "BENCH_range_query.json",
+             ["--smoke"]),
+            ("benchmarks/gc_comparison.py", "BENCH_gc_comparison.json", [])):
         fresh = str(tmp_path / f"fresh_{os.path.basename(committed)}")
-        p = _run([sys.executable, driver, "--smoke", "--out", fresh])
+        p = _run([sys.executable, driver, *flags, "--out", fresh])
         assert p.returncode == 0, p.stderr
         p = _run([sys.executable, "tools/compare_bench.py",
                   os.path.join(REPO, committed), fresh,

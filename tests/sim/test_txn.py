@@ -157,19 +157,50 @@ def test_readonly_txn_commits_without_validation():
     assert res == log.snapshot_range(1, 6, txn.begin_ts)
 
 
-def test_txn_aba_revalidates():
-    """A footprint key overwritten back to its snapshot value revalidates:
-    value-level validation is ABA-tolerant by design (DESIGN.md §8)."""
-    env, scheme, ds = _mk("hash", "ebr")
+def test_scan_interval_aba_revalidates():
+    """A scanned interval restored to its snapshot contents revalidates:
+    interval validation is value-level and ABA-tolerant (DESIGN.md §8).
+    Uses the tree, whose governing-version granule is the exact leaf
+    pointer, so the unrelated write key stays conflict-free."""
+    env, scheme, ds = _mk("tree", "ebr")
     log = UpdateLog()
-    _upd(env, scheme, ds, log, 0, 1, 7)
+    for k in range(1, 9):
+        _upd(env, scheme, ds, log, 0, k, 100 + k)
     txn = Txn(1, ds, env, scheme, log=log)
-    assert txn.get(1) == 7
-    txn.put(2, 22)
-    _upd(env, scheme, ds, log, 2, 1, 8)   # away...
-    _upd(env, scheme, ds, log, 2, 1, 7)   # ...and back
-    assert txn.try_commit()
+    txn.range_query(1, 9)
+    txn.put(20, 22)                        # blind write far from the churn
+    _upd(env, scheme, ds, log, 2, 1, 8)    # away...
+    _upd(env, scheme, ds, log, 2, 1, 101)  # ...and back
+    assert txn.try_commit(), txn.abort_reason
     assert ScanValidator(log).check_txn(txn)
+
+
+@pytest.mark.parametrize("ds_kind", ["hash", "tree"])
+def test_point_read_aba_aborts_version_wise(ds_kind):
+    """Point reads are tracked version-wise (DESIGN.md §9): an away-and-back
+    overwrite of a point-read key replaces its governing version, so the
+    txn aborts even though the value matches the snapshot — no ABA
+    tolerance for point reads, unlike scanned intervals."""
+    env, scheme, ds = _mk(ds_kind, "ebr")
+    log = UpdateLog()
+    for k in range(1, 9):
+        _upd(env, scheme, ds, log, 0, k, 100 + k)
+    txn = Txn(1, ds, env, scheme, log=log)
+    assert txn.get(1) == 101
+    txn.put(8, 22)
+    _upd(env, scheme, ds, log, 2, 1, 8)    # away...
+    _upd(env, scheme, ds, log, 2, 1, 101)  # ...and back: same value
+    assert not txn.try_commit()
+    assert txn.state == "aborted"
+    # the hash's CAS granule is the bucket, so the write key may share the
+    # churned bucket (wcc fires first); the tree granule is the exact leaf
+    # pointer, so only the point read can have conflicted
+    if ds_kind == "tree":
+        assert txn.abort_reason == "footprint" and txn.conflict_keys == [1]
+    else:
+        assert txn.abort_reason in ("wcc", "footprint")
+    v = ScanValidator(log)
+    assert v.check_txn(txn)       # its snapshot reads were still consistent
 
 
 # ---------------------------------------------------------------------------
@@ -243,7 +274,8 @@ def test_write_phase_pin_survives_steam_compaction(ds_kind):
 
 
 # ---------------------------------------------------------------------------
-# Randomized acceptance: >= 1000 committed validated rw txns per ds x scheme
+# Randomized acceptance: >= 1000 committed validated *multi-interval* rw txns
+# per ds x scheme (2 disjoint scan intervals + a tracked point read each)
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("ds_kind", ["hash", "tree"])
 @pytest.mark.parametrize("scheme_name", ALL)
@@ -252,19 +284,22 @@ def test_thousand_randomized_rw_txns_validated(ds_kind, scheme_name):
     cfg = WorkloadConfig(
         ds=ds_kind, scheme=scheme_name, n_keys=32, num_procs=8, mode="mixed",
         op_mix=OpMix(0.10, 0.05, 0.05, scan_size=8, rwtxn_frac=0.80,
-                     txn_size=3),
-        ops_per_proc=175, zipf=0.99, seed=31, scan_chunk=3,
+                     txn_size=3, txn_ranges=2, txn_point_reads=1),
+        ops_per_proc=200, zipf=0.99, seed=31, scan_chunk=3, max_retries=24,
         sample_every=1_000_000, validate_scans=True, scheme_kwargs=kw,
     )
     r = run_workload(cfg)
     c = r["counters"]
     assert c["txn_commits"] >= 1000, \
         f"only {c['txn_commits']} txns committed; config too small"
-    assert r["txns_validated"] >= c["txn_commits"] + c["txn_aborts"] - 8 * 16
+    assert r["txns_validated"] >= c["txn_commits"] + c["txn_aborts"] - 8 * 24
     assert r["txn_violations"] == 0, r["violation_examples"]
     assert r["scan_violations"] == 0, (
         f"{scheme_name}/{ds_kind}: {r['scan_violations']} violations over "
         f"{r['scans_validated']} checked scans: {r['violation_examples']}")
+    # the abort taxonomy partitions the abort counter exactly
+    assert (c["txn_aborts_footprint"] + c["txn_aborts_wcc"]
+            + c["txn_aborts_capacity"]) == c["txn_aborts"]
 
 
 # ---------------------------------------------------------------------------
@@ -272,16 +307,19 @@ def test_thousand_randomized_rw_txns_validated(ds_kind, scheme_name):
 # ---------------------------------------------------------------------------
 def test_eemarq_rw_matrix_enumeration():
     full = eemarq_rw_matrix()
-    # 2 structures x 2 mixes x 2 scan sizes x 2 txn sizes x 2 zipfs x 5 schemes
-    assert len(full) == 2 * len(EEMARQ_RW_MIXES) * 2 * 2 * 2 * 5
+    # 2 structures x 2 mixes x 2 scan sizes x 2 txn sizes x 2 interval
+    # counts x 2 zipfs x 5 schemes
+    assert len(full) == 2 * len(EEMARQ_RW_MIXES) * 2 * 2 * 2 * 2 * 5
     assert {c.ds for c in full} == {"hash", "tree"}
     assert all(c.op_mix.rwtxn_frac > 0 for c in full)
     assert {c.op_mix.txn_size for c in full} == {2, 8}
+    assert {c.op_mix.txn_ranges for c in full} == {2, 4}
+    assert all(c.op_mix.txn_point_reads == 2 for c in full)
     assert {round(c.op_mix.rw_ratio, 2) for c in full} == {0.5, 0.75}
     sub = eemarq_rw_matrix(structures=("tree",), scan_sizes=(16,),
-                           txn_sizes=(4,), zipfs=(0.99,),
+                           txn_sizes=(4,), txn_ranges=(1,), zipfs=(0.99,),
                            schemes=("ebr", "dlrt"))
-    assert len(sub) == 1 * 2 * 1 * 1 * 1 * 2
+    assert len(sub) == 1 * 2 * 1 * 1 * 1 * 1 * 2
     assert all(c.mode == "mixed" for c in sub)
 
 

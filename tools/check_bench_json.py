@@ -7,9 +7,12 @@
 Fails (exit 1) if required top-level/row keys are missing, rows are empty,
 requested scheme/structure coverage is absent, or any row reports snapshot
 violations.  With ``--txn`` additionally validates the read-write-transaction
-fields (schema v2, DESIGN.md §8): ``txn_size`` >= 1, ``rw_ratio`` and
-``abort_rate`` in [0, 1], commit/abort counters consistent with the rate, and
-at least ``--min-txn-sizes`` distinct write-set sizes with committed txns.
+fields (schema v3, DESIGN.md §8-§9): ``txn_size``/``txn_ranges`` >= 1,
+``rw_ratio`` and ``abort_rate`` in [0, 1], commit/abort counters consistent
+with the rate, the abort-reason taxonomy (``aborts_footprint`` +
+``aborts_wcc`` + ``aborts_capacity``) partitioning ``txns_aborted`` exactly,
+and at least ``--min-txn-sizes`` distinct write-set sizes with committed
+txns.
 """
 from __future__ import annotations
 
@@ -21,11 +24,13 @@ from repro.core.sim.measure import validate_bench_payload
 
 
 TXN_FIELDS = ("txn_size", "rw_ratio", "txns_committed", "txns_aborted",
-              "abort_rate")
+              "abort_rate", "txn_ranges", "point_reads", "aborts_footprint",
+              "aborts_wcc", "aborts_capacity", "txn_giveups",
+              "backoff_slices")
 
 
 def check_txn_fields(rows, min_txn_sizes: int):
-    """Validate the schema-v2 read-write-txn row fields (DESIGN.md §8)."""
+    """Validate the schema-v3 read-write-txn row fields (DESIGN.md §8-§9)."""
     problems = []
     txn_rows = []
     for i, r in enumerate(rows):
@@ -42,6 +47,9 @@ def check_txn_fields(rows, min_txn_sizes: int):
             if r["txn_size"] < 1:
                 problems.append(f"row {i}: txns ran but txn_size="
                                 f"{r['txn_size']} < 1")
+            if r["txn_ranges"] < 1:
+                problems.append(f"row {i}: txns ran but txn_ranges="
+                                f"{r['txn_ranges']} < 1")
             if r["rw_ratio"] <= 0.0:
                 problems.append(f"row {i}: txns ran but rw_ratio="
                                 f"{r['rw_ratio']} <= 0")
@@ -49,6 +57,13 @@ def check_txn_fields(rows, min_txn_sizes: int):
             if abs(r["abort_rate"] - want) > 1e-4:
                 problems.append(f"row {i}: abort_rate {r['abort_rate']} != "
                                 f"aborted/attempts {want}")
+            reasons = (r["aborts_footprint"] + r["aborts_wcc"]
+                       + r["aborts_capacity"])
+            if reasons != r["txns_aborted"]:
+                problems.append(
+                    f"row {i}: abort reasons sum to {reasons} but "
+                    f"txns_aborted={r['txns_aborted']} (taxonomy must "
+                    f"partition the aborts)")
     if not txn_rows:
         problems.append("--txn: no row has any committed or aborted txns")
     sizes = {r["txn_size"] for r in txn_rows}

@@ -35,8 +35,9 @@ from typing import Any, Dict, List, Tuple
 
 from repro.core.sim.measure import validate_bench_payload
 
-KEY_FIELDS = ("ds", "scheme", "mix", "scan_size", "txn_size", "zipf",
-              "n_keys", "num_procs", "ops_per_proc", "seed")
+KEY_FIELDS = ("figure", "ds", "scheme", "mix", "scan_size", "txn_size",
+              "txn_ranges", "zipf", "n_keys", "num_procs", "ops_per_proc",
+              "seed")
 SPACE_FIELDS = ("peak_space_words", "end_space_words")
 
 

@@ -1,0 +1,248 @@
+#!/usr/bin/env python
+"""Render the BENCH_*.json trajectory as per-scheme curves (the CI
+``bench-plots`` step; PNGs are uploaded as workflow artifacts so every PR
+carries its perf pictures).
+
+  PYTHONPATH=src python tools/plot_bench.py \\
+      BENCH_range_query.json BENCH_txn_mix.json BENCH_gc_comparison.json \\
+      --outdir /tmp/bench_plots
+
+Per input file, grouped by (structure, mix, zipf) with one line per scheme:
+
+* ``space_vs_scan_size``  — peak space (words) vs range-scan size s
+  (range_query + txn_mix rows; the paper's Fig. 6 axis);
+* ``space_vs_txn_size``   — peak space vs txn write-set size w, split by
+  interval count r (txn_mix rows; the MV-RLU footprint axis);
+* ``abort_rate``          — abort rate vs scan size, plus the abort-reason
+  taxonomy (footprint/wcc/capacity) as stacked bars per scheme (txn_mix);
+* ``gc_figures``          — peak/end space per scheme for each gc_comparison
+  figure family (the paper's Figs 4-8 bar view).
+
+Degrades gracefully: exits 0 with a notice when matplotlib is missing
+(ENOPLOT) unless ``--require-matplotlib`` is passed (CI passes it, having
+installed matplotlib).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+SCHEME_ORDER = ("ebr", "steam", "dlrt", "slrt", "bbf")
+# one stable color per scheme across every panel
+SCHEME_COLORS = {
+    "ebr": "#4269d0", "steam": "#efb118", "dlrt": "#ff725c",
+    "slrt": "#6cc5b0", "bbf": "#9c6b4e",
+}
+REASONS = ("footprint", "wcc", "capacity")
+REASON_COLORS = {"footprint": "#4269d0", "wcc": "#efb118",
+                 "capacity": "#ff725c"}
+
+
+def _family(row: Dict[str, Any]) -> str:
+    return f"{row['ds']}/{row['mix']}/zipf={row['zipf']}"
+
+
+def _dominant_nkeys(rows: List[Dict[str, Any]]):
+    """Restrict to the most-populated n_keys tier: committed BENCH files
+    concatenate tiers with different key spaces, and averaging across them
+    would fake the x-axis trends the line plots claim to show."""
+    counts = defaultdict(int)
+    for r in rows:
+        counts[r["n_keys"]] += 1
+    if not counts:
+        return rows, None
+    nk = max(counts, key=counts.get)
+    return [r for r in rows if r["n_keys"] == nk], nk
+
+
+def _schemes(rows: List[Dict[str, Any]]) -> List[str]:
+    present = {r["scheme"] for r in rows}
+    return [s for s in SCHEME_ORDER if s in present] + sorted(
+        present - set(SCHEME_ORDER))
+
+
+def _lineplot(ax, rows, xfield, yfield):
+    """One line per scheme: yfield vs xfield (mean over duplicate x)."""
+    for scheme in _schemes(rows):
+        pts = defaultdict(list)
+        for r in rows:
+            if r["scheme"] == scheme:
+                pts[r[xfield]].append(r[yfield])
+        xs = sorted(pts)
+        ys = [sum(pts[x]) / len(pts[x]) for x in xs]
+        ax.plot(xs, ys, marker="o", ms=3.5, lw=1.5, label=scheme,
+                color=SCHEME_COLORS.get(scheme))
+    ax.set_xlabel(xfield)
+    ax.set_ylabel(yfield)
+    if len({r[xfield] for r in rows}) > 1:
+        ax.set_xscale("log", base=2)
+
+
+def plot_space_vs_scan_size(plt, rows, outdir, stem) -> List[str]:
+    rows = [r for r in rows if r.get("scans", 0) or r.get("txns_committed", 0)]
+    rows, nk = _dominant_nkeys(rows)
+    fams = sorted({_family(r) for r in rows})
+    if not fams:
+        return []
+    fig, axes = plt.subplots(1, len(fams), figsize=(4.2 * len(fams), 3.4),
+                             squeeze=False)
+    for ax, fam in zip(axes[0], fams):
+        sub = [r for r in rows if _family(r) == fam]
+        _lineplot(ax, sub, "scan_size", "peak_space_words")
+        ax.set_title(fam, fontsize=9)
+    axes[0][0].legend(fontsize=7)
+    fig.suptitle(f"{stem}: peak space vs scan size (n_keys={nk} tier)",
+                 fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(outdir, f"{stem}_space_vs_scan_size.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return [path]
+
+
+def plot_space_vs_txn_size(plt, rows, outdir, stem) -> List[str]:
+    rows = [r for r in rows
+            if r.get("txns_committed", 0) + r.get("txns_aborted", 0)]
+    if not rows:
+        return []
+    rows, nk = _dominant_nkeys(rows)
+    rvals = sorted({r.get("txn_ranges", 0) for r in rows})
+    dss = sorted({r["ds"] for r in rows})
+    fig, axes = plt.subplots(len(dss), len(rvals),
+                             figsize=(4.2 * len(rvals), 3.2 * len(dss)),
+                             squeeze=False)
+    for i, ds in enumerate(dss):
+        for j, rv in enumerate(rvals):
+            sub = [r for r in rows
+                   if r["ds"] == ds and r.get("txn_ranges", 0) == rv]
+            ax = axes[i][j]
+            if sub:
+                _lineplot(ax, sub, "txn_size", "peak_space_words")
+            ax.set_title(f"{ds}, r={rv} intervals", fontsize=9)
+    axes[0][0].legend(fontsize=7)
+    fig.suptitle(f"{stem}: peak space vs txn write-set size "
+                 f"(n_keys={nk} tier)", fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(outdir, f"{stem}_space_vs_txn_size.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return [path]
+
+
+def plot_abort_rates(plt, rows, outdir, stem) -> List[str]:
+    rows = [r for r in rows
+            if r.get("txns_committed", 0) + r.get("txns_aborted", 0)]
+    if not rows:
+        return []
+    fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(9.5, 3.6))
+    line_rows, nk = _dominant_nkeys(rows)
+    _lineplot(ax1, line_rows, "scan_size", "abort_rate")
+    ax1.set_title(f"abort rate vs scan size (n_keys={nk} tier)", fontsize=9)
+    ax1.legend(fontsize=7)
+    # abort-reason taxonomy, aggregated per scheme (stacked bars)
+    schemes = _schemes(rows)
+    bottoms = [0.0] * len(schemes)
+    for reason in REASONS:
+        vals = [sum(r.get(f"aborts_{reason}", 0)
+                    for r in rows if r["scheme"] == s) for s in schemes]
+        ax2.bar(schemes, vals, bottom=bottoms, label=reason,
+                color=REASON_COLORS[reason])
+        bottoms = [b + v for b, v in zip(bottoms, vals)]
+    ax2.set_title("aborts by reason (footprint/wcc/capacity)", fontsize=9)
+    ax2.set_ylabel("aborted commit attempts")
+    ax2.legend(fontsize=7)
+    fig.suptitle(f"{stem}: transaction aborts", fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(outdir, f"{stem}_abort_rate.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return [path]
+
+
+def plot_gc_figures(plt, rows, outdir, stem) -> List[str]:
+    figures = sorted({r["figure"] for r in rows})
+    if not figures:
+        return []
+    fig, axes = plt.subplots(1, len(figures),
+                             figsize=(3.4 * len(figures), 3.4), squeeze=False)
+    for ax, name in zip(axes[0], figures):
+        sub = [r for r in rows if r["figure"] == name]
+        schemes = _schemes(sub)
+        peak = [next(r["peak_space_words"] for r in sub
+                     if r["scheme"] == s) for s in schemes]
+        end = [next(r["end_space_words"] for r in sub
+                    if r["scheme"] == s) for s in schemes]
+        x = range(len(schemes))
+        ax.bar([i - 0.2 for i in x], peak, width=0.4, label="peak",
+               color=[SCHEME_COLORS.get(s) for s in schemes])
+        ax.bar([i + 0.2 for i in x], end, width=0.4, label="end",
+               color=[SCHEME_COLORS.get(s) for s in schemes], alpha=0.45)
+        ax.set_xticks(list(x))
+        ax.set_xticklabels(schemes, fontsize=7)
+        ax.set_title(name, fontsize=8)
+    axes[0][0].set_ylabel("space (words)")
+    axes[0][0].legend(fontsize=7)
+    fig.suptitle(f"{stem}: space per scheme (solid=peak, faded=end)",
+                 fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(outdir, f"{stem}_figures.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return [path]
+
+
+def render(plt, path: str, outdir: str) -> List[str]:
+    payload = json.load(open(path))
+    rows = payload.get("rows", [])
+    stem = os.path.splitext(os.path.basename(path))[0]
+    bench = payload.get("bench", stem)
+    written: List[str] = []
+    if bench == "gc_comparison":
+        written += plot_gc_figures(plt, rows, outdir, stem)
+    else:
+        written += plot_space_vs_scan_size(plt, rows, outdir, stem)
+        written += plot_space_vs_txn_size(plt, rows, outdir, stem)
+        written += plot_abort_rates(plt, rows, outdir, stem)
+    return written
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="+", help="BENCH_*.json files to render")
+    ap.add_argument("--outdir", default="bench_plots")
+    ap.add_argument("--require-matplotlib", action="store_true",
+                    help="fail (exit 3) when matplotlib is unavailable "
+                         "instead of skipping (CI passes this)")
+    args = ap.parse_args()
+
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        msg = "plot_bench: matplotlib unavailable, no plots rendered"
+        if args.require_matplotlib:
+            print(f"FAIL {msg}", file=sys.stderr)
+            return 3
+        print(f"SKIP {msg}")
+        return 0
+
+    os.makedirs(args.outdir, exist_ok=True)
+    written: List[str] = []
+    for path in args.benches:
+        written += render(plt, path, args.outdir)
+    for p in written:
+        print(f"wrote {p}")
+    if not written:
+        print("FAIL: no plots produced from "
+              f"{args.benches}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
