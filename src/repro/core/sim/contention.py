@@ -35,10 +35,38 @@ makes that regime first-class in the sim:
   pins churn quickly, so a stale announcement scan retains garbage for
   longer than it should — consulting the manager models the adaptive GC
   cadence both papers describe.
+* **the abort ⇒ reclaim ⇒ retry loop** (DESIGN.md §10) — a capacity abort
+  means reclamation fell behind the write rate, so merely backing off and
+  retrying would fail again against the same drained budget.  Instead the
+  aborting transaction builds a :class:`ReclaimRequest` (``reclaim_request``)
+  — the budget *deficit* to make up (enough tokens to refill the bucket) plus
+  the current **hot set**, the top-k keys by *decayed* conflict score
+  (``hot_set``; recent conflicts dominate, old ones fade with timestamp
+  progress) — and hands it to the scheme's
+  ``SchemeBase.reclaim_on_pressure`` hook, which synchronously reclaims
+  obsolete versions.  The versions actually freed are refunded to the token
+  bucket (``record_reclaim`` → ``refund``), so the retry's commit finds a
+  refilled budget: MV-RLU's synchronous "abort ⇒ reclaim ⇒ retry" cycle,
+  and the mechanism that turns capacity aborts from a throttle into the
+  space-*bounding* feedback loop of the source paper.
+
+Abort taxonomy ordering (``ABORT_REASONS``, checked in exactly this order by
+``Txn.try_commit``): ``wcc`` is the eager first-updater-wins check on the
+write set, ``footprint`` is full validation, and ``capacity`` gates the
+final apply — charged only for versions actually about to be installed, so
+doomed transactions never drain the budget.
+
+Backoff ladder semantics: ``backoff_slices(pid)`` is bounded exponential in
+the pid's consecutive-abort count (``base * 2^retries``, capped at
+``backoff_cap`` slices) with a deterministic per-(pid, retry) jitter; a
+commit resets the ladder.  Because the *backoff* (not the retry count) is
+bounded, every transaction keeps its full retry budget — the fairness
+property ``tests/sim/test_contention.py`` checks.
 """
 from __future__ import annotations
 
 from collections import Counter
+from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
 # Abort reasons, in check order (wcc is the eager first-updater-wins check
@@ -46,6 +74,26 @@ from typing import Dict, Iterable, List, Optional, Tuple
 # apply — charged only for versions actually about to be installed, so
 # doomed txns never drain the budget).
 ABORT_REASONS = ("wcc", "footprint", "capacity")
+
+
+@dataclass(frozen=True)
+class ReclaimRequest:
+    """What a capacity-aborting transaction asks its scheme to reclaim
+    (DESIGN.md §10).
+
+    ``deficit`` is the number of obsolete versions the scheme should try to
+    splice out — sized to *refill* the version budget (``capacity -
+    budget``), not merely to cover the aborted write set, so one reclaim
+    pays for a whole burst of retries.  ``hot_keys`` is the contention
+    manager's current decayed hot set, most-conflicted first: schemes with
+    targeted compaction (STEAM, SL-RT) compact the version lists governing
+    these keys before touching cold lists, because hot keys are where the
+    abort/retry storm is allocating versions fastest.
+    """
+
+    deficit: int
+    hot_keys: List[int] = field(default_factory=list)
+    now: float = 0.0
 
 
 class ContentionManager:
@@ -60,7 +108,8 @@ class ContentionManager:
 
     def __init__(self, num_procs: int, *, backoff_base: int = 1,
                  backoff_cap: int = 64, capacity: Optional[int] = None,
-                 refill_every: int = 4, pressure_window: int = 256):
+                 refill_every: int = 4, pressure_window: int = 256,
+                 hot_half_life: int = 128):
         if backoff_base < 1 or backoff_cap < backoff_base:
             raise ValueError("need 1 <= backoff_base <= backoff_cap")
         self.P = num_procs
@@ -82,6 +131,15 @@ class ContentionManager:
         # pressure: decays with timestamp progress since the last conflict
         self.pressure_window = max(1, pressure_window)
         self._last_conflict_ts = float("-inf")
+        # decayed per-key conflict heat: key -> (score, last-bump ts).  The
+        # score halves every hot_half_life timestamp ticks, so the hot set
+        # tracks where the storm is *now*, not its whole history.
+        self.hot_half_life = max(1, hot_half_life)
+        self._key_heat: Dict[int, Tuple[float, float]] = {}
+        # abort => reclaim => retry accounting (DESIGN.md §10)
+        self.reclaims_triggered = 0
+        self.versions_reclaimed = 0
+        self.reclaim_latency_slices = 0
 
     # -- conflict recording -------------------------------------------------
     def record_conflict(self, pid: int, reason: str,
@@ -97,6 +155,8 @@ class ContentionManager:
         self._last_conflict_ts = max(self._last_conflict_ts, now)
         for k in keys:
             self.key_conflicts[k] += 1
+            score, last = self._key_heat.get(k, (0.0, now))
+            self._key_heat[k] = (self._decay(score, last, now) + 1.0, now)
 
     def record_commit(self, pid: int) -> None:
         """A successful commit resets the pid's exponential-backoff ladder."""
@@ -139,6 +199,38 @@ class ContentionManager:
         self.budget -= n_versions
         return True
 
+    # -- abort => reclaim => retry (DESIGN.md §10) ---------------------------
+    def refund(self, n_versions: int) -> None:
+        """Return ``n_versions`` freed tokens to the budget (capped at
+        ``capacity``): reclamation made room in the bounded version log."""
+        if self.capacity is not None and n_versions > 0:
+            self.budget = min(self.capacity, self.budget + n_versions)
+
+    def deficit(self) -> int:
+        """Versions the bucket is short of full — the reclaim target.  A
+        capacity abort asks the scheme for this many (at least 1), so one
+        synchronous reclaim refills the whole budget rather than barely
+        covering the aborted write set."""
+        if self.capacity is None:
+            return 0
+        return max(1, self.capacity - self.budget)
+
+    def reclaim_request(self, now: float, top_k: int = 16) -> ReclaimRequest:
+        """Build the :class:`ReclaimRequest` a capacity-aborting txn hands to
+        ``SchemeBase.reclaim_on_pressure``: the budget deficit plus the
+        current decayed hot set (most-conflicted keys first)."""
+        return ReclaimRequest(deficit=self.deficit(),
+                              hot_keys=[k for k, _ in self.hot_set(now, top_k)],
+                              now=now)
+
+    def record_reclaim(self, versions: int, latency_slices: int) -> None:
+        """Account one synchronous reclaim pass: refund the freed versions to
+        the budget and accumulate the schema-v4 reclaim counters."""
+        self.reclaims_triggered += 1
+        self.versions_reclaimed += max(0, versions)
+        self.reclaim_latency_slices += max(0, latency_slices)
+        self.refund(versions)
+
     # -- signals for schemes and tests ---------------------------------------
     def pressure(self, now: float) -> float:
         """0..1 conflict-recency signal: 1.0 at the instant of a conflict,
@@ -149,10 +241,33 @@ class ContentionManager:
         return max(0.0, 1.0 - age / self.pressure_window)
 
     def hot_keys(self, n: int = 8) -> List[Tuple[int, int]]:
-        """The ``n`` most-conflicted keys as (key, conflicts)."""
+        """The ``n`` most-conflicted keys as (key, conflicts) — raw lifetime
+        counts; use :meth:`hot_set` for the decayed (recency-weighted) view
+        the reclamation loop consumes."""
         return self.key_conflicts.most_common(n)
 
+    def _decay(self, score: float, last: float, now: float) -> float:
+        """Halve ``score`` once per ``hot_half_life`` ticks elapsed."""
+        age = now - last
+        if age <= 0:
+            return score
+        return score * 0.5 ** (age / self.hot_half_life)
+
+    def hot_set(self, now: float, n: int = 16,
+                min_score: float = 0.05) -> List[Tuple[int, float]]:
+        """The hot set: up to ``n`` (key, decayed score) pairs, hottest
+        first.  Scores halve every ``hot_half_life`` timestamp ticks, so keys
+        that stopped conflicting cool off and drop out (below ``min_score``)
+        instead of pinning reclamation effort on stale history."""
+        scored = [(k, self._decay(s, last, now))
+                  for k, (s, last) in self._key_heat.items()]
+        scored = [(k, s) for k, s in scored if s >= min_score]
+        scored.sort(key=lambda kv: (-kv[1], kv[0]))
+        return scored[:n]
+
     def stats(self) -> Dict[str, float]:
+        """Flat counters for ``Measurement``/tests: conflict totals, the
+        abort taxonomy, backoff totals, and the reclaim-loop counters."""
         return {
             "conflicts": self.conflicts,
             "commits": self.commits,
@@ -160,6 +275,9 @@ class ContentionManager:
             "backoff_slices": self.backoff_slices_total,
             "hot_key_conflicts": (self.key_conflicts.most_common(1)[0][1]
                                   if self.key_conflicts else 0),
+            "reclaims_triggered": self.reclaims_triggered,
+            "versions_reclaimed_on_abort": self.versions_reclaimed,
+            "reclaim_latency_slices": self.reclaim_latency_slices,
             **{f"aborts_{r}": self.reason_counts.get(r, 0)
                for r in ABORT_REASONS},
         }

@@ -11,16 +11,27 @@ space units (Java-reachability words, DESIGN.md §5), same throughput proxy
 (which ``tools/compare_bench.py`` — the CI bench-trajectory gate — diffs
 against the committed repo-root files).
 
-``BENCH_*.json`` schema (``SCHEMA_VERSION`` = 3 — v2 added the read-write
-transaction row fields ``txn_size`` / ``rw_ratio`` / ``txns_committed`` /
-``txns_aborted`` / ``abort_rate``, DESIGN.md §8; v3 added the MV-RLU-style
-multi-interval/contention fields ``txn_ranges`` / ``point_reads`` /
-``aborts_footprint`` / ``aborts_wcc`` / ``aborts_capacity`` /
-``txn_giveups`` / ``backoff_slices``, DESIGN.md §9)::
+``BENCH_*.json`` schema (``SCHEMA_VERSION`` = 4).  Field-by-field changelog:
+
+* **v2** added the read-write transaction row fields ``txn_size`` /
+  ``rw_ratio`` / ``txns_committed`` / ``txns_aborted`` / ``abort_rate``
+  (DESIGN.md §8);
+* **v3** added the MV-RLU-style multi-interval/contention fields
+  ``txn_ranges`` / ``point_reads`` / ``aborts_footprint`` / ``aborts_wcc`` /
+  ``aborts_capacity`` / ``txn_giveups`` / ``backoff_slices`` (DESIGN.md §9);
+* **v4** added the abort ⇒ reclaim ⇒ retry fields (DESIGN.md §10):
+  ``reclaims_triggered`` (synchronous reclaim passes driven by capacity
+  aborts; always ≤ ``aborts_capacity``), ``versions_reclaimed_on_abort``
+  (versions those passes spliced out of reachability — each refunds one
+  budget token), ``reclaim_latency_slices`` (scheduler slices aborting
+  processes stalled paying for their reclaims), and
+  ``peak_space_post_reclaim`` (max space in words sampled immediately
+  *after* a reclaim pass — the bounded-space signal: how high space stays
+  even right after reclamation has run)::
 
     {
       "bench": "<driver name>",
-      "schema_version": 2,
+      "schema_version": 4,
       "units": {...},                 # human-readable unit strings
       "meta": {...},                  # driver-specific run parameters
       "rows": [<Measurement dict>, ...]
@@ -36,7 +47,7 @@ import os
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 UNITS = {
     "space": "words, Java-style reachability from the structure roots "
@@ -61,6 +72,16 @@ UNITS = {
                      "(DESIGN.md §9)",
     "backoff_slices": "scheduler slices spent in contention-manager backoff "
                       "between txn retries (bounded exponential)",
+    "reclaims": "reclaims_triggered counts synchronous reclaim passes "
+                "driven by capacity aborts (abort => reclaim => retry, "
+                "DESIGN.md §10; <= aborts_capacity); "
+                "versions_reclaimed_on_abort counts versions those passes "
+                "spliced out of reachability (each refunds one version-"
+                "budget token); reclaim_latency_slices counts scheduler "
+                "slices aborting processes stalled paying for them",
+    "peak_space_post_reclaim": "max space (words) sampled immediately after "
+                               "a reclaim pass — the bounded-space signal "
+                               "(0 when no reclaim ever ran)",
 }
 
 REQUIRED_TOP_KEYS = ("bench", "schema_version", "units", "meta", "rows")
@@ -78,6 +99,9 @@ REQUIRED_ROW_KEYS = (
     # multi-interval footprints + contention (schema v3, DESIGN.md §9)
     "txn_ranges", "point_reads", "aborts_footprint", "aborts_wcc",
     "aborts_capacity", "txn_giveups", "backoff_slices",
+    # abort => reclaim => retry (schema v4, DESIGN.md §10)
+    "reclaims_triggered", "versions_reclaimed_on_abort",
+    "reclaim_latency_slices", "peak_space_post_reclaim",
 )
 
 
@@ -131,6 +155,7 @@ class OpMix:
 
     @property
     def label(self) -> str:
+        """The mix's display name (EEMARQ-style percentage triple/quad)."""
         if self.name:
             return self.name
         parts = [self.update_frac, self.lookup_frac, self.scan_frac]
@@ -216,6 +241,10 @@ class Measurement:
     aborts_capacity: int = 0
     txn_giveups: int = 0
     backoff_slices: int = 0
+    reclaims_triggered: int = 0
+    versions_reclaimed_on_abort: int = 0
+    reclaim_latency_slices: int = 0
+    peak_space_post_reclaim: int = 0
     scheme_stats: Dict[str, Any] = field(default_factory=dict)
 
     @classmethod
@@ -278,10 +307,21 @@ class Measurement:
             txn_giveups=c.get("txn_giveups", 0),
             backoff_slices=int(
                 result.get("contention_stats", {}).get("backoff_slices", 0)),
+            reclaims_triggered=int(
+                result.get("contention_stats", {})
+                .get("reclaims_triggered", 0)),
+            versions_reclaimed_on_abort=int(
+                result.get("contention_stats", {})
+                .get("versions_reclaimed_on_abort", 0)),
+            reclaim_latency_slices=int(
+                result.get("contention_stats", {})
+                .get("reclaim_latency_slices", 0)),
+            peak_space_post_reclaim=c.get("peak_space_post_reclaim", 0),
             scheme_stats=dict(result.get("scheme_stats", {})),
         )
 
     def to_row(self) -> Dict[str, Any]:
+        """Flatten to the dict serialized as one BENCH json row."""
         return asdict(self)
 
 
@@ -351,6 +391,7 @@ def print_rows_by_figure(rows: Sequence[Measurement],
 # ---------------------------------------------------------------------------
 def bench_payload(bench: str, measurements: Sequence[Measurement],
                   meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Assemble the BENCH json payload dict (see the module docstring)."""
     return {
         "bench": bench,
         "schema_version": SCHEMA_VERSION,

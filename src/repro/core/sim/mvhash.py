@@ -104,6 +104,15 @@ class MVHashTable:
         """Atomic convenience form of ``range_scan`` (drained in one slice)."""
         return drain(self.range_scan(pid, lo, hi, t))
 
+    # -- targeted reclamation (DESIGN.md §10) ------------------------------------
+    def version_lists_for(self, k: int) -> List[Any]:
+        """The version lists that govern key ``k`` — here just the owning
+        bucket's list (the bucket is this structure's CAS granule).  This is
+        the targeted-compaction entry point the reclamation feedback loop
+        hands to ``SchemeBase.set_key_resolver`` so hot-set-aware schemes
+        can compact exactly where a capacity storm allocates versions."""
+        return [self._bucket(k).lst]
+
     # -- space accounting --------------------------------------------------------
     def root_vcas(self) -> List[VCas]:
         return self.buckets

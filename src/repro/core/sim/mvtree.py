@@ -173,6 +173,22 @@ class MVTree:
         """Atomic convenience form of ``range_scan`` (drained in one slice)."""
         return drain(self.range_scan(pid, lo, hi, t))
 
+    # -- targeted reclamation (DESIGN.md §10) -------------------------------------
+    def version_lists_for(self, k: int) -> List[Any]:
+        """The version lists along the *current* root-to-leaf descent path
+        for key ``k``, terminal pointer last.  Updates to ``k`` swing the
+        terminal child pointer, but splices (deletes) also version the
+        ancestors' pointers, so a hot key's garbage accumulates along its
+        whole path — the reclamation feedback loop compacts all of it
+        (``SchemeBase.set_key_resolver``, DESIGN.md §10)."""
+        out = [self.root_v.lst]
+        node = self.root_v.read()
+        while isinstance(node, Internal):
+            child = node.left_v if k < node.router else node.right_v
+            out.append(child.lst)
+            node = child.read()
+        return out
+
     # -- space accounting -------------------------------------------------------------
     def root_vcas(self) -> List[VCas]:
         return [self.root_v]

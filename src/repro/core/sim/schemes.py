@@ -45,6 +45,30 @@ algorithms would perform, so throughput proxies remain faithful; the
 fine-grained interleavings themselves are validated separately by the
 step-machine tests.
 
+Reclamation under pressure (DESIGN.md §10): every scheme also implements the
+``reclaim_on_pressure(hot_keys, deficit)`` hook — the synchronous half of
+the MV-RLU abort ⇒ reclaim ⇒ retry cycle.  When a transaction aborts with
+reason ``capacity`` (the contention manager's version budget ran dry), the
+scheme must immediately splice obsolete versions out of its lists so the
+budget can be refunded before the retry.  Per-scheme strategy:
+
+* **EBR** forces epoch turnover: scan announcements, advance if no pin lags,
+  sweep every bucket old enough to be safe — repeating until the deficit is
+  met or pinned epochs block further advances.
+* **STEAM+LF** refreshes its cached announcement scan and compacts version
+  lists, *hot-set first*: the lists governing the contention manager's
+  most-conflicted keys (resolved through ``set_key_resolver``) are where the
+  storm allocates fastest, so compacting them buys the most space per unit
+  of work.  Cold lists follow only while the deficit is unmet.
+* **SL-RT** drains its RangeTracker against the *current* announcement set
+  and compacts every implicated list; if the deficit survives that, it
+  compacts hot-set lists like STEAM.
+* **DL-RT** drains its RangeTracker against the current announcement set and
+  splices the returned nodes exactly (``PDL.remove``).
+* **BBF+** drains its RangeTracker and splices what the TreeDL deferral rule
+  permits — the rule is a correctness invariant of the emulation, so unlike
+  ``quiesce`` the pressure path never bypasses it.
+
 Space model (paper: Java reachability): a version node costs ``NODE_WORDS``
 words (5 for PDL — key/val/left/right/mark; 3 for SSL — ts/val/left),
 matching the paper's observation that DL-RT pays for back pointers.
@@ -75,6 +99,9 @@ class SchemeBase:
         self.gc_list_work = 0   # list work performed on behalf of GC (reporting)
         self.txn_pins = 0       # read-write txn snapshot pins taken
         self.contention = None  # optional ContentionManager (DESIGN.md §9)
+        self.key_lists = None   # optional key -> [version lists] resolver (§10)
+        self.reclaims = 0       # reclaim_on_pressure invocations
+        self.reclaimed_on_pressure = 0  # versions freed by those invocations
         self.lists: List[Any] = []
 
     # -- contention consultation (DESIGN.md §9) -----------------------------
@@ -95,21 +122,67 @@ class SchemeBase:
             return 0.0
         return self.contention.pressure(self.env.read_ts())
 
+    # -- the reclamation feedback loop (DESIGN.md §10) -----------------------
+    def set_key_resolver(self, fn) -> None:
+        """Attach the structure's targeted-compaction entry point: a callable
+        ``key -> [version lists]`` returning the lists that govern a key
+        (``MVHashTable.version_lists_for`` / ``MVTree.version_lists_for``).
+        Schemes that compact hot-set lists preferentially (STEAM, SL-RT) need
+        it; ``None`` (the default) degrades them to untargeted reclaim."""
+        self.key_lists = fn
+
+    def reclaim_on_pressure(self, hot_keys: List[int], deficit: int) -> int:
+        """Synchronously reclaim obsolete versions because the version budget
+        ran dry (a ``capacity`` abort; DESIGN.md §10).  ``hot_keys`` is the
+        contention manager's decayed hot set (most-conflicted first) and
+        ``deficit`` the number of versions needed to refill the budget.
+        Returns the number of versions actually spliced out of reachability —
+        the caller refunds exactly that many budget tokens, so the count must
+        be honest.  Reclaim can legitimately return less than ``deficit``
+        (or 0) when pins hold everything live; the retry then rides on the
+        passive timestamp-progress refill instead."""
+        self.reclaims += 1
+        freed = self._reclaim(list(hot_keys), max(0, deficit))
+        self.reclaimed_on_pressure += freed
+        return freed
+
+    def _reclaim(self, hot_keys: List[int], deficit: int) -> int:
+        """Per-scheme reclaim strategy; the base scheme holds no garbage."""
+        return 0
+
+    def _hot_lists(self, hot_keys: List[int]) -> List[Any]:
+        """Resolve ``hot_keys`` to their governing version lists, hottest
+        first, deduplicated (several keys may share a bucket/pointer)."""
+        if self.key_lists is None:
+            return []
+        seen, out = set(), []
+        for k in hot_keys:
+            for lst in self.key_lists(k):
+                if id(lst) not in seen:
+                    seen.add(id(lst))
+                    out.append(lst)
+        return out
+
     # -- list/node factories ----------------------------------------------
     def new_list(self):
+        """Create this scheme's version-list flavour (SSL or PDL)."""
         raise NotImplementedError
 
     def new_node(self, ts, val):
+        """Create one version node for ``new_list``'s list flavour."""
         raise NotImplementedError
 
     def register_list(self, lst) -> None:
+        """Track a list for quiescence sweeps and work/space accounting."""
         self.lists.append(lst)
 
     # -- operation lifecycle -----------------------------------------------
     def begin_update(self, pid: int) -> Any:
+        """Start one update op; returns an opaque ctx for ``end_update``."""
         return None
 
     def end_update(self, pid: int, ctx: Any) -> None:
+        """Finish the update op started with ``ctx``."""
         pass
 
     def begin_rtx(self, pid: int) -> float:
@@ -119,6 +192,7 @@ class SchemeBase:
         return ts
 
     def end_rtx(self, pid: int) -> None:
+        """Unannounce, releasing the rtx's snapshot pin."""
         self.env.unannounce(pid)
         self.work += 1
 
@@ -147,6 +221,8 @@ class SchemeBase:
 
     # -- the GC hook ---------------------------------------------------------
     def on_overwrite(self, pid: int, lst, old_node, low: float, high: float) -> None:
+        """Receive one overwritten version (``old_node`` of ``lst``, current
+        over ``[low, high)``) — the scheme's per-version retire hook."""
         raise NotImplementedError
 
     def quiesce(self) -> None:
@@ -159,7 +235,10 @@ class SchemeBase:
         return 0
 
     def stats(self) -> Dict[str, Any]:
-        return {"gc_work": self.work}
+        """Scheme-level counters for the benchmark rows (``scheme_stats``);
+        subclasses extend this dict with their own."""
+        return {"gc_work": self.work, "reclaims": self.reclaims,
+                "reclaimed_on_pressure": self.reclaimed_on_pressure}
 
     def _announced(self) -> List[float]:
         self.work += self.env.P
@@ -185,37 +264,45 @@ class EBRScheme(SchemeBase):
         self.advance_every = advance_every
         self._ops_since_advance = 0
         self.freed = 0
+        self.truncated = 0  # nodes actually dropped from reachability
 
     def new_list(self):
+        """EBR runs on SSL version lists."""
         return SSL()
 
     def new_node(self, ts, val):
+        """One SSL version node."""
         return SNode(ts, val)
 
     # every operation (update or rtx) participates in the epoch protocol
     def begin_update(self, pid: int):
+        """Pin the current epoch for the duration of the update."""
         self.ann_epoch[pid] = self.epoch
         self.work += 2
         return None
 
     def end_update(self, pid: int, ctx) -> None:
+        """Release the epoch pin; maybe advance the epoch (cadence)."""
         self.ann_epoch[pid] = None
         self.work += 1
         self._maybe_advance()
 
     def begin_rtx(self, pid: int) -> float:
+        """Pin the current epoch *and* announce the rtx timestamp."""
         self.ann_epoch[pid] = self.epoch
         ts = self.env.announce_ts(pid)  # rtx still needs its read timestamp
         self.work += 3
         return ts
 
     def end_rtx(self, pid: int) -> None:
+        """Release the epoch pin and the announcement."""
         self.ann_epoch[pid] = None
         self.env.unannounce(pid)
         self.work += 2
         self._maybe_advance()
 
     def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        """Bucket the overwritten version under the current epoch."""
         self.buckets[self.epoch].append((lst, old_node))
         self.work += 1
 
@@ -234,8 +321,11 @@ class EBRScheme(SchemeBase):
             self.epoch = cur + 1
             self._free_old()
 
-    def _free_old(self) -> None:
+    def _free_old(self) -> int:
+        """Sweep every epoch bucket old enough to be safe (<= epoch - 2);
+        returns the number of nodes dropped from reachability."""
         safe = self.epoch - 2
+        dropped = 0
         for e in sorted(e for e in self.buckets if e <= safe):
             by_list: Dict[int, Tuple[SSL, SNode]] = {}
             for lst, node in self.buckets.pop(e):
@@ -247,32 +337,66 @@ class EBRScheme(SchemeBase):
                     by_list[key] = (lst, node)
                 self.work += 1
             for lst, node in by_list.values():
-                self._truncate(lst, node)
+                dropped += self._truncate(lst, node)
+        self.truncated += dropped
+        return dropped
 
-    def _truncate(self, lst: SSL, node: SNode) -> None:
+    def _truncate(self, lst: SSL, node: SNode) -> int:
         """Drop the list suffix ending at ``node`` (the newest reclaimable
         version of this list; the reclaimable set is always a suffix because
-        overwrite epochs are nondecreasing along a list)."""
+        overwrite epochs are nondecreasing along a list).  Returns the number
+        of nodes the cut removed from reachability."""
         x = lst.head
         self.work += 1
         while x is not lst.sentinel and x.left is not node:
             x = x.left
             self.work += 1
-        if x is not lst.sentinel:
-            x.left = lst.sentinel
+        if x is lst.sentinel:
+            return 0
+        dropped = 0
+        y = x.left  # == node
+        while y is not lst.sentinel:
+            dropped += 1
+            y = y.left
             self.work += 1
+        x.left = lst.sentinel
+        self.work += 1
+        return dropped
+
+    def _reclaim(self, hot_keys, deficit) -> int:
+        """Capacity-abort reclaim (DESIGN.md §10): force epoch turnover —
+        scan announcement epochs, advance when no pin lags behind, sweep the
+        now-safe buckets — until the deficit is met or a pinned epoch blocks
+        further advances.  EBR has no per-key targeting (it only ever
+        truncates tails), so the hot set is unused."""
+        freed = 0
+        for _ in range(4):
+            self.work += self.env.P  # scan announcement epochs
+            cur = self.epoch
+            if all(e is None or e >= cur for e in self.ann_epoch):
+                self.epoch = cur + 1
+            freed += self._free_old()
+            if freed >= deficit or self.epoch == cur:
+                break  # met the target, or an old pin blocks any progress
+        self._ops_since_advance = 0
+        return freed
 
     def quiesce(self) -> None:
-        # advance epochs with no active ops until everything frees
+        """Advance epochs with no active ops until everything frees."""
         for _ in range(4):
             self.epoch += 1
             self._free_old()
 
     def aux_space_words(self) -> int:
+        """One word per version still parked in an epoch bucket."""
         return sum(len(b) for b in self.buckets.values())
 
     def stats(self):
-        return {"gc_work": self.work, "epoch": self.epoch, "freed": self.freed}
+        """Base counters plus the epoch clock and free totals."""
+        s = super().stats()
+        s.update({"epoch": self.epoch, "freed": self.freed,
+                  "truncated": self.truncated})
+        return s
 
 
 # ---------------------------------------------------------------------------
@@ -296,9 +420,11 @@ class SteamLFScheme(SchemeBase):
         self.spliced = 0
 
     def new_list(self):
+        """STEAM runs on SSL version lists."""
         return SSL()
 
     def new_node(self, ts, val):
+        """One SSL version node."""
         return SNode(ts, val)
 
     def _scan(self):
@@ -316,36 +442,72 @@ class SteamLFScheme(SchemeBase):
         return self._cached
 
     def on_overwrite(self, pid, lst, old_node, low, high) -> None:
-        scan = self._scan()
+        """Compact the overwritten list against the cached announce scan."""
+        self._compact_one(lst, self._scan())
+
+    def _compact_one(self, lst, scan) -> int:
+        """Compact one list against ``scan``; returns nodes spliced."""
         h = lst.peek_head()
         w0 = lst.work
-        self.spliced += lst.compact(scan.A, scan.t, h)
+        n = lst.compact(scan.A, scan.t, h)
         self.gc_list_work += lst.work - w0
         self.compactions += 1
+        self.spliced += n
+        return n
+
+    def _reclaim(self, hot_keys, deficit) -> int:
+        """Capacity-abort reclaim (DESIGN.md §10): refresh the announcement
+        scan unconditionally (the cached one is what let garbage linger),
+        then compact **hot-set lists first** — the version lists governing
+        the most-conflicted keys, resolved via ``set_key_resolver`` — and
+        spill over to the remaining lists only while the deficit is unmet.
+        Hot lists are where the abort/retry storm allocates versions
+        fastest, so this ordering maximizes versions freed per unit of
+        reclaim latency the aborting transaction pays."""
+        self._cached = self.env.scan_announce()
+        self.work += self.env.P + 2
+        self._since_scan = 0
+        scan = self._cached
+        freed = 0
+        hot = self._hot_lists(hot_keys)
+        seen = {id(lst) for lst in hot}
+        for lst in hot:
+            if freed >= deficit:
+                return freed
+            freed += self._compact_one(lst, scan)
+        for lst in self.lists:
+            if freed >= deficit:
+                break
+            if id(lst) not in seen:
+                freed += self._compact_one(lst, scan)
+        return freed
 
     def quiesce(self) -> None:
+        """Final full compaction pass against a fresh announce scan."""
         scan = self.env.scan_announce()
         for lst in self.lists:
             self.spliced += lst.compact(scan.A, scan.t, lst.peek_head())
 
     def stats(self):
-        return {
-            "gc_work": self.work,
-            "compactions": self.compactions,
-            "spliced": self.spliced,
-        }
+        """Base counters plus compaction totals."""
+        s = super().stats()
+        s.update({"compactions": self.compactions, "spliced": self.spliced})
+        return s
 
 
 # ---------------------------------------------------------------------------
 # RangeTracker-based schemes
 # ---------------------------------------------------------------------------
 class _RTScheme(SchemeBase):
+    """Shared RangeTracker plumbing for DL-RT, SL-RT and BBF+."""
+
     def __init__(self, env: MVEnv, batch_size: Optional[int] = None):
         super().__init__(env)
         self.rt = RangeTracker(env.P, batch_size=batch_size)
         self.reclaimed = 0
 
     def aux_space_words(self) -> int:
+        """Three words (payload, low, high) per tracked version."""
         return 3 * self.rt.size()  # payload, low, high
 
     def _rt_add(self, pid, payload, low, high) -> List[Any]:
@@ -354,16 +516,23 @@ class _RTScheme(SchemeBase):
         self.work += self.rt.work - w0
         return out
 
+    def _rt_drain(self) -> List[Any]:
+        """Force-flush the tracker against the *current* announcement set
+        (the reclamation-loop prune, DESIGN.md §10) with work accounting."""
+        w0 = self.rt.work
+        out = self.rt.drain(self._announced_nowork)
+        self.work += self.rt.work - w0
+        return out
+
     def _announced_nowork(self) -> List[float]:
         return [a for a in self.env.announce if a is not None]
 
     def stats(self):
-        return {
-            "gc_work": self.work,
-            "reclaimed": self.reclaimed,
-            "rt_size": self.rt.size(),
-            "rt_flushes": self.rt.flushes,
-        }
+        """Base counters plus RangeTracker totals."""
+        s = super().stats()
+        s.update({"reclaimed": self.reclaimed, "rt_size": self.rt.size(),
+                  "rt_flushes": self.rt.flushes})
+        return s
 
 
 class DLRTScheme(_RTScheme):
@@ -374,29 +543,50 @@ class DLRTScheme(_RTScheme):
     node_words = PDL_NODE_WORDS
 
     def new_list(self):
+        """DL-RT runs on doubly-linked PDL version lists."""
         return PDL()
 
     def new_node(self, ts, val):
+        """One PDL version node."""
         return Node(ts, val)
 
     def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        """Track the version; splice whatever the tracker returns."""
         for plst, pnode in self._rt_add(pid, (lst, old_node), low, high):
             w0 = plst.work
             plst.remove(pnode)
             self.gc_list_work += plst.work - w0
             self.reclaimed += 1
 
+    def _reclaim(self, hot_keys, deficit) -> int:
+        """Capacity-abort reclaim (DESIGN.md §10): prune the RangeTracker
+        against the current announcement set and splice every returned node
+        exactly (``PDL.remove`` needs only the node pointer).  DL-RT removal
+        is already exact-node, so there is nothing extra to target with the
+        hot set — the deferred tracker backlog *is* the reclaimable space."""
+        freed = 0
+        for plst, pnode in self._rt_drain():
+            w0 = plst.work
+            plst.remove(pnode)
+            self.gc_list_work += plst.work - w0
+            self.reclaimed += 1
+            freed += 1
+        return freed
+
     def quiesce(self) -> None:
+        """Drain the tracker and splice everything it returns."""
         for plst, pnode in self.rt.drain(self._announced_nowork):
             plst.remove(pnode)
             self.reclaimed += 1
 
     def avg_chain(self) -> float:
+        """Mean remove-chain length c (Proposition 17's expectation ~1)."""
         tot = sum(l.remove_chain_total for l in self.lists)
         cnt = sum(l.removes_completed for l in self.lists)
         return tot / cnt if cnt else 1.0
 
     def stats(self):
+        """RT counters plus the observed remove-chain constant."""
         s = super().stats()
         s["avg_remove_chain_c"] = round(self.avg_chain(), 4)
         return s
@@ -412,12 +602,15 @@ class SLRTScheme(_RTScheme):
     node_words = SSL_NODE_WORDS
 
     def new_list(self):
+        """SL-RT runs on SSL version lists."""
         return SSL()
 
     def new_node(self, ts, val):
+        """One SSL version node."""
         return SNode(ts, val)
 
     def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        """Track the version; compact the lists a flush implicates."""
         returned = self._rt_add(pid, (lst, old_node), low, high)
         self._compact_lists(returned)
 
@@ -432,12 +625,36 @@ class SLRTScheme(_RTScheme):
         scan = self.env.scan_announce()
         self.work += self.env.P + 2
         for plst in unique.values():
-            h = plst.peek_head()
-            w0 = plst.work
-            self.reclaimed += plst.compact(scan.A, scan.t, h)
-            self.gc_list_work += plst.work - w0
+            self._compact_list(plst, scan)
+
+    def _compact_list(self, plst, scan) -> int:
+        """Compact one list against ``scan``; returns nodes spliced."""
+        h = plst.peek_head()
+        w0 = plst.work
+        n = plst.compact(scan.A, scan.t, h)
+        self.reclaimed += n
+        self.gc_list_work += plst.work - w0
+        return n
+
+    def _reclaim(self, hot_keys, deficit) -> int:
+        """Capacity-abort reclaim (DESIGN.md §10): prune the RangeTracker
+        against the current announcement set and compact every implicated
+        list; if the deficit survives the prune, keep compacting along the
+        hot set (the lists governing the most-conflicted keys), where the
+        storm's version churn concentrates."""
+        r0 = self.reclaimed
+        self._compact_lists(self._rt_drain())
+        if self.reclaimed - r0 < deficit and self.key_lists is not None:
+            scan = self.env.scan_announce()
+            self.work += self.env.P + 2
+            for plst in self._hot_lists(hot_keys):
+                if self.reclaimed - r0 >= deficit:
+                    break
+                self._compact_list(plst, scan)
+        return self.reclaimed - r0
 
     def quiesce(self) -> None:
+        """Drain the tracker and compact everything it implicates."""
         self._compact_lists(self.rt.drain(self._announced_nowork))
 
 
@@ -462,9 +679,11 @@ class BBFScheme(_RTScheme):
         self.spliced_ranks: Dict[int, set] = defaultdict(set)
 
     def new_list(self):
+        """BBF+ runs on doubly-linked PDL version lists."""
         return PDL()
 
     def new_node(self, ts, val):
+        """One PDL version node."""
         return Node(ts, val)
 
     @staticmethod
@@ -494,8 +713,22 @@ class BBFScheme(_RTScheme):
         return True
 
     def on_overwrite(self, pid, lst, old_node, low, high) -> None:
+        """Track the version; splice what the TreeDL rule permits."""
         for plst, pnode in self._rt_add(pid, (lst, old_node), low, high):
             self._try_splice(plst, pnode)
+
+    def _reclaim(self, hot_keys, deficit) -> int:
+        """Capacity-abort reclaim (DESIGN.md §10): prune the RangeTracker
+        against the current announcement set and feed the returned nodes
+        through ``_try_splice``.  Unlike ``quiesce``, the TreeDL deferral
+        rule is **never** bypassed — the system is not quiescent, so a
+        deferred internal node must keep waiting for its subtree; BBF+
+        therefore reclaims least per pass, exactly its paper-predicted
+        2(L-R) space disadvantage showing up in the feedback loop too."""
+        r0 = self.reclaimed
+        for plst, pnode in self._rt_drain():
+            self._try_splice(plst, pnode)
+        return self.reclaimed - r0
 
     def _try_splice(self, lst: PDL, node: Node) -> None:
         lid = id(lst)
@@ -520,6 +753,8 @@ class BBFScheme(_RTScheme):
                     self.pending[lid][rank] = (plst, pnode)
 
     def quiesce(self) -> None:
+        """Drain the tracker, then splice everything still pending — the
+        deferral rule may be bypassed only here, at true quiescence."""
         for plst, pnode in self.rt.drain(self._announced_nowork):
             self._try_splice(plst, pnode)
         # final pass: splice everything still pending (system quiescent)
@@ -532,6 +767,7 @@ class BBFScheme(_RTScheme):
             self.pending[lid] = {}
 
     def aux_space_words(self) -> int:
+        """RT words plus two per TreeDL-deferred pending node."""
         return super().aux_space_words() + 2 * sum(
             len(p) for p in self.pending.values()
         )
@@ -547,4 +783,5 @@ SCHEMES: Dict[str, Callable[..., SchemeBase]] = {
 
 
 def make_scheme(name: str, env: MVEnv, **kw) -> SchemeBase:
+    """Instantiate a scheme by its registry name (``SCHEMES`` keys)."""
     return SCHEMES[name](env, **kw)

@@ -45,7 +45,16 @@ still needs stays live while the txn itself allocates new versions.
      otherwise commit must cover its write set from the budget (the MV-RLU
      bounded-log model: reclamation not keeping up ⇒ capacity aborts).
      Checked last so only versions actually about to be installed are
-     charged — doomed txns never drain the budget.
+     charged — doomed txns never drain the budget.  A capacity abort then
+     closes the loop (DESIGN.md §10): after the pin is released, the txn
+     builds the manager's :class:`~repro.core.sim.contention.ReclaimRequest`
+     (budget deficit + decayed hot set) and drives
+     ``scheme.reclaim_on_pressure`` — a synchronous reclamation pass whose
+     freed versions are refunded to the budget, and whose list work is
+     converted into a reclaim *stall* (``reclaim_stall_slices``) the driver
+     serves before the backoff ladder permits the retry.  This is MV-RLU's
+     abort ⇒ reclaim ⇒ retry cycle: the retry re-runs against a refilled
+     budget instead of burning its whole retry ladder on a drained one.
 
   Only then are all buffered writes applied — each stamped ``tc`` — and
   recorded in the shared ``UpdateLog``.  On abort the reason lands in
@@ -65,6 +74,13 @@ cost in work units like every other traversal.
 from __future__ import annotations
 
 from typing import Any, Dict, Generator, List, Optional, Tuple
+
+# Conversion rate from reclaim work units (shared-memory accesses the
+# synchronous reclamation pass performs) to the scheduler slices the aborting
+# process stalls before its retry; capped so one huge sweep cannot stall a
+# process longer than a maxed-out backoff (DESIGN.md §10).
+RECLAIM_WORK_PER_SLICE = 32
+RECLAIM_STALL_CAP = 64
 
 
 class Txn:
@@ -88,7 +104,8 @@ class Txn:
     __slots__ = ("pid", "ds", "env", "scheme", "log", "cm",
                  "begin_ts", "commit_ts", "writes", "read_footprint",
                  "read_versions", "scan_footprint", "state",
-                 "abort_reason", "conflict_keys")
+                 "abort_reason", "conflict_keys",
+                 "reclaim_stall_slices", "reclaimed_versions")
 
     def __init__(self, pid: int, ds, env, scheme, log=None, cm=None):
         self.pid = pid
@@ -106,6 +123,8 @@ class Txn:
         self.state = "active"                     # active | committed | aborted
         self.abort_reason: Optional[str] = None   # capacity | wcc | footprint
         self.conflict_keys: List[int] = []
+        self.reclaim_stall_slices = 0             # set by a capacity abort
+        self.reclaimed_versions = 0               # ...along with the reclaim
 
     # -- read phase ---------------------------------------------------------
     def get(self, k: int) -> Optional[Any]:
@@ -154,10 +173,12 @@ class Txn:
 
     # -- write phase (buffered) ----------------------------------------------
     def put(self, k: int, v: Any) -> None:
+        """Buffer an insert/update of ``k``; applied only if commit wins."""
         assert self.state == "active" and v is not None
         self.writes[k] = v
 
     def delete(self, k: int) -> None:
+        """Buffer a delete of ``k``; applied only if commit wins."""
         assert self.state == "active"
         self.writes[k] = None
 
@@ -185,7 +206,11 @@ class Txn:
         # not drain it (contention.ABORT_REASONS documents the order)
         if self.cm is not None and not self.cm.try_consume(len(self.writes),
                                                            tc):
-            return self._fail("capacity", [])
+            self._fail("capacity", [])
+            # abort => reclaim: the pin is released, so the scheme may now
+            # reclaim this txn's own snapshot too (DESIGN.md §10)
+            self._reclaim_after_capacity_abort(tc)
+            return False
         for k in sorted(self.writes):
             v = self.writes[k]
             if v is None:
@@ -210,6 +235,25 @@ class Txn:
         self.conflict_keys = keys
         self.abort()
         return False
+
+    def _reclaim_after_capacity_abort(self, now: float) -> None:
+        """The reclaim half of abort ⇒ reclaim ⇒ retry (DESIGN.md §10):
+        build the contention manager's :class:`~repro.core.sim.contention.
+        ReclaimRequest` (budget deficit + decayed hot set), drive the
+        scheme's synchronous ``reclaim_on_pressure`` pass, refund the freed
+        versions to the budget, and convert the pass's list work into the
+        stall slices (``reclaim_stall_slices``) the workload driver serves
+        before this process's backoff — reclamation latency is paid by the
+        process that hit the wall, exactly like MV-RLU's synchronous log
+        reclamation."""
+        req = self.cm.reclaim_request(now)
+        w0 = self.scheme.work + self.scheme.gc_list_work
+        freed = self.scheme.reclaim_on_pressure(req.hot_keys, req.deficit)
+        spent = self.scheme.work + self.scheme.gc_list_work - w0
+        self.reclaim_stall_slices = min(RECLAIM_STALL_CAP,
+                                        1 + spent // RECLAIM_WORK_PER_SLICE)
+        self.reclaimed_versions = freed
+        self.cm.record_reclaim(freed, self.reclaim_stall_slices)
 
     def _wcc_conflicts(self) -> List[int]:
         """Eager first-updater-wins check on the write set: a write key whose

@@ -360,7 +360,12 @@ def _rwtxn_slices(pid, ds, env, scheme, rng, mix: OpMix, key_range, chunk,
     ``wcc`` / ``footprint``), recorded in the contention manager's per-key
     stats, and followed by a bounded-exponential backoff whose length the
     manager chooses — so retry storms thin out instead of convoying, while
-    every retry's full multi-interval re-scan stretches pin lifetimes."""
+    every retry's full multi-interval re-scan stretches pin lifetimes.  A
+    ``capacity`` abort additionally runs the abort ⇒ reclaim ⇒ retry loop
+    (DESIGN.md §10): the scheme synchronously reclaims obsolete versions,
+    the freed versions refund the budget, and this process stalls for the
+    reclaim's latency slices before its backoff — so the retry commits
+    against a refilled budget instead of burning the whole ladder."""
     size = min(mix.scan_size, max(1, key_range // max(1, mix.txn_ranges) - 1))
     for attempt in range(max_retries):
         txn = Txn(pid, ds, env, scheme, log=log, cm=cm)
@@ -400,6 +405,18 @@ def _rwtxn_slices(pid, ds, env, scheme, rng, mix: OpMix, key_range, chunk,
         counters[f"txn_aborts_{txn.abort_reason}"] += 1
         cm.record_conflict(pid, txn.abort_reason, txn.conflict_keys,
                            env.read_ts())
+        if txn.reclaim_stall_slices:
+            # abort => reclaim => retry (DESIGN.md §10): the capacity abort
+            # already drove the scheme's synchronous reclaim inside
+            # try_commit (the contention manager accounts the reclaim
+            # counters); serve its latency here — the aborting process
+            # stalls for the reclaim's work before backoff even starts —
+            # and sample space *post-reclaim* (the bounded-space signal).
+            post = measure_space(ds, scheme)["words"]
+            if post > counters["peak_space_post_reclaim"]:
+                counters["peak_space_post_reclaim"] = post
+            for _ in range(txn.reclaim_stall_slices):
+                yield
         if attempt + 1 < max_retries:
             # backoff only precedes an actual retry — the final abort falls
             # straight through to the give-up, so backoff_slices measures
@@ -480,6 +497,10 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
         scheme.set_contention(cm)
 
     ds = MVHashTable(env, scheme, cfg.n_keys) if cfg.ds == "hash" else MVTree(env, scheme)
+    # targeted-compaction entry point for the reclamation feedback loop
+    # (DESIGN.md §10): hot-set-aware schemes compact the lists governing
+    # the contention manager's most-conflicted keys first
+    scheme.set_key_resolver(ds.version_lists_for)
     # prefill to ~n_keys live keys
     prefill = rng.sample(range(1, key_range + 1), cfg.n_keys)
     for k in prefill:
@@ -495,7 +516,12 @@ def run_workload(cfg: WorkloadConfig) -> Dict[str, Any]:
                                 "txn_scan_keys": 0,
                                 "txn_aborts_footprint": 0,
                                 "txn_aborts_wcc": 0,
-                                "txn_aborts_capacity": 0}
+                                "txn_aborts_capacity": 0,
+                                # max-tracked gauge: space sampled right
+                                # after each reclaim pass (DESIGN.md §10);
+                                # the reclaim *counts* live in the
+                                # contention manager's stats
+                                "peak_space_post_reclaim": 0}
 
     scripts: List[Generator] = []
     if cfg.mode == "split":

@@ -7,12 +7,17 @@
 Fails (exit 1) if required top-level/row keys are missing, rows are empty,
 requested scheme/structure coverage is absent, or any row reports snapshot
 violations.  With ``--txn`` additionally validates the read-write-transaction
-fields (schema v3, DESIGN.md §8-§9): ``txn_size``/``txn_ranges`` >= 1,
+fields (schema v4, DESIGN.md §8-§10): ``txn_size``/``txn_ranges`` >= 1,
 ``rw_ratio`` and ``abort_rate`` in [0, 1], commit/abort counters consistent
 with the rate, the abort-reason taxonomy (``aborts_footprint`` +
 ``aborts_wcc`` + ``aborts_capacity``) partitioning ``txns_aborted`` exactly,
-and at least ``--min-txn-sizes`` distinct write-set sizes with committed
-txns.
+at least ``--min-txn-sizes`` distinct write-set sizes with committed txns,
+and the v4 abort ⇒ reclaim ⇒ retry fields: all four non-negative,
+``reclaims_triggered`` <= ``aborts_capacity`` (only capacity aborts trigger
+reclaims), ``reclaim_latency_slices`` >= ``reclaims_triggered`` (every
+reclaim pass stalls at least one slice), and
+``versions_reclaimed_on_abort``/``peak_space_post_reclaim`` zero when no
+reclaim ever ran.
 """
 from __future__ import annotations
 
@@ -26,11 +31,16 @@ from repro.core.sim.measure import validate_bench_payload
 TXN_FIELDS = ("txn_size", "rw_ratio", "txns_committed", "txns_aborted",
               "abort_rate", "txn_ranges", "point_reads", "aborts_footprint",
               "aborts_wcc", "aborts_capacity", "txn_giveups",
-              "backoff_slices")
+              "backoff_slices", "reclaims_triggered",
+              "versions_reclaimed_on_abort", "reclaim_latency_slices",
+              "peak_space_post_reclaim")
+
+RECLAIM_FIELDS = ("reclaims_triggered", "versions_reclaimed_on_abort",
+                  "reclaim_latency_slices", "peak_space_post_reclaim")
 
 
 def check_txn_fields(rows, min_txn_sizes: int):
-    """Validate the schema-v3 read-write-txn row fields (DESIGN.md §8-§9)."""
+    """Validate the schema-v4 read-write-txn row fields (DESIGN.md §8-§10)."""
     problems = []
     txn_rows = []
     for i, r in enumerate(rows):
@@ -64,6 +74,29 @@ def check_txn_fields(rows, min_txn_sizes: int):
                     f"row {i}: abort reasons sum to {reasons} but "
                     f"txns_aborted={r['txns_aborted']} (taxonomy must "
                     f"partition the aborts)")
+        # schema v4: abort => reclaim => retry fields (DESIGN.md §10)
+        for f in RECLAIM_FIELDS:
+            if r[f] < 0:
+                problems.append(f"row {i}: {f}={r[f]} < 0")
+        if r["reclaims_triggered"] > r["aborts_capacity"]:
+            problems.append(
+                f"row {i}: reclaims_triggered={r['reclaims_triggered']} > "
+                f"aborts_capacity={r['aborts_capacity']} (only capacity "
+                f"aborts trigger reclaims)")
+        if r["reclaim_latency_slices"] < r["reclaims_triggered"]:
+            problems.append(
+                f"row {i}: reclaim_latency_slices="
+                f"{r['reclaim_latency_slices']} < reclaims_triggered="
+                f"{r['reclaims_triggered']} (every reclaim pass stalls "
+                f"at least one slice)")
+        if r["reclaims_triggered"] == 0 and (
+                r["versions_reclaimed_on_abort"] or
+                r["peak_space_post_reclaim"]):
+            problems.append(
+                f"row {i}: reclaim outputs nonzero "
+                f"(versions={r['versions_reclaimed_on_abort']}, "
+                f"peak_post={r['peak_space_post_reclaim']}) with "
+                f"reclaims_triggered=0")
     if not txn_rows:
         problems.append("--txn: no row has any committed or aborted txns")
     sizes = {r["txn_size"] for r in txn_rows}

@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Docs-coverage check: public API symbols must carry docstrings.
+
+  PYTHONPATH=src python tools/check_docstrings.py            # default modules
+  PYTHONPATH=src python tools/check_docstrings.py repro.core.sim.txn ...
+
+Imports each module and fails (exit 1) if
+
+  * the module itself lacks a docstring, or
+  * any public (non-underscore) module-level class or function defined *in*
+    that module lacks one, or
+  * any public method/property a public class defines lacks one.
+
+Docstring inheritance counts: an override with no docstring of its own is
+fine when a base class documents the same method (``inspect.getdoc`` walks
+the MRO), so scheme subclasses may rely on ``SchemeBase``'s contract text.
+
+The default module list is the read-write-transaction core — the modules
+DESIGN.md §10 and the README "Internals" section document — so the reference
+docs and the source can't drift apart silently.  Run by the CI
+``docs-coverage`` step and by ``tests/sim/test_reclaim.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import sys
+
+DEFAULT_MODULES = (
+    "repro.core.sim.contention",
+    "repro.core.sim.txn",
+    "repro.core.sim.schemes",
+    "repro.core.sim.measure",
+)
+
+
+def check_module(modname: str) -> list:
+    """Return a list of "module.symbol" strings that lack docstrings."""
+    mod = importlib.import_module(modname)
+    missing = []
+    if not (mod.__doc__ or "").strip():
+        missing.append(f"{modname} (module docstring)")
+    for name, obj in vars(mod).items():
+        if name.startswith("_"):
+            continue
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        if getattr(obj, "__module__", None) != modname:
+            continue  # re-exported from elsewhere; charged to its home module
+        if not (inspect.getdoc(obj) or "").strip():
+            missing.append(f"{modname}.{name}")
+        if inspect.isclass(obj):
+            missing.extend(_check_class(modname, obj))
+    return missing
+
+
+def _check_class(modname: str, cls) -> list:
+    missing = []
+    for mname, member in vars(cls).items():
+        if mname.startswith("_"):
+            continue
+        is_callable = inspect.isfunction(member) or isinstance(
+            member, (staticmethod, classmethod, property))
+        if not is_callable:
+            continue  # class attributes / dataclass fields need no docstring
+        # resolve through the class so getdoc can walk the MRO for
+        # inherited docstrings
+        resolved = getattr(cls, mname, member)
+        if not (inspect.getdoc(resolved) or "").strip():
+            missing.append(f"{modname}.{cls.__name__}.{mname}")
+    return missing
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("modules", nargs="*", default=list(DEFAULT_MODULES),
+                    help=f"modules to check (default: {DEFAULT_MODULES})")
+    args = ap.parse_args()
+    modules = args.modules or list(DEFAULT_MODULES)
+
+    problems = []
+    for modname in modules:
+        try:
+            problems.extend(check_module(modname))
+        except ImportError as e:
+            problems.append(f"{modname}: import failed ({e})")
+
+    if problems:
+        print(f"FAIL: {len(problems)} public symbols lack docstrings:")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"OK: every public symbol in {len(modules)} module(s) is "
+          f"documented ({', '.join(modules)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

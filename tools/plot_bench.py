@@ -15,6 +15,10 @@ Per input file, grouped by (structure, mix, zipf) with one line per scheme:
   interval count r (txn_mix rows; the MV-RLU footprint axis);
 * ``abort_rate``          — abort rate vs scan size, plus the abort-reason
   taxonomy (footprint/wcc/capacity) as stacked bars per scheme (txn_mix);
+* ``space_vs_pressure``   — the abort ⇒ reclaim ⇒ retry view (schema v4,
+  DESIGN.md §10): peak space and post-reclaim peak space vs capacity-abort
+  pressure per scheme (the Fig. 9-style space-under-pressure curves), plus
+  reclaim totals (versions reclaimed on abort / reclaim passes) per scheme;
 * ``gc_figures``          — peak/end space per scheme for each gc_comparison
   figure family (the paper's Figs 4-8 bar view).
 
@@ -163,6 +167,62 @@ def plot_abort_rates(plt, rows, outdir, stem) -> List[str]:
     return [path]
 
 
+def plot_space_vs_pressure(plt, rows, outdir, stem) -> List[str]:
+    """Schema-v4 panel (DESIGN.md §10): does reclamation bound space under
+    capacity pressure?  Left: per scheme, peak space (solid) and post-reclaim
+    peak space (dashed) vs capacity-abort pressure — the share of commit
+    attempts that died on the version budget.  Right: versions reclaimed on
+    abort (bars) with reclaim passes annotated."""
+    rows = [r for r in rows if r.get("reclaims_triggered", 0)
+            or r.get("aborts_capacity", 0)]
+    if not rows:
+        return []
+    fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(9.5, 3.6))
+    for scheme in _schemes(rows):
+        pts = defaultdict(lambda: ([], []))
+        for r in rows:
+            if r["scheme"] != scheme:
+                continue
+            attempts = r.get("txns_committed", 0) + r.get("txns_aborted", 0)
+            pressure = r.get("aborts_capacity", 0) / max(1, attempts)
+            peaks, posts = pts[round(pressure, 3)]
+            peaks.append(r["peak_space_words"])
+            posts.append(r.get("peak_space_post_reclaim", 0))
+        xs = sorted(pts)
+        peak_ys = [sum(pts[x][0]) / len(pts[x][0]) for x in xs]
+        post_ys = [sum(pts[x][1]) / len(pts[x][1]) for x in xs]
+        color = SCHEME_COLORS.get(scheme)
+        ax1.plot(xs, peak_ys, marker="o", ms=3.5, lw=1.5, label=scheme,
+                 color=color)
+        if any(post_ys):
+            ax1.plot(xs, post_ys, marker="x", ms=3.5, lw=1.0, ls="--",
+                     color=color, alpha=0.7)
+    ax1.set_xlabel("capacity-abort pressure (aborts_capacity / attempts)")
+    ax1.set_ylabel("space (words)")
+    ax1.set_title("peak (solid) vs post-reclaim peak (dashed)", fontsize=9)
+    ax1.legend(fontsize=7)
+    schemes = _schemes(rows)
+    reclaimed = [sum(r.get("versions_reclaimed_on_abort", 0)
+                     for r in rows if r["scheme"] == s) for s in schemes]
+    passes = [sum(r.get("reclaims_triggered", 0)
+                  for r in rows if r["scheme"] == s) for s in schemes]
+    bars = ax2.bar(schemes, reclaimed,
+                   color=[SCHEME_COLORS.get(s) for s in schemes])
+    for bar, n in zip(bars, passes):
+        ax2.annotate(f"{n} passes", (bar.get_x() + bar.get_width() / 2,
+                                     bar.get_height()),
+                     ha="center", va="bottom", fontsize=6)
+    ax2.set_title("versions reclaimed on abort", fontsize=9)
+    ax2.set_ylabel("versions")
+    fig.suptitle(f"{stem}: space under capacity pressure "
+                 "(abort ⇒ reclaim ⇒ retry)", fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(outdir, f"{stem}_space_vs_pressure.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return [path]
+
+
 def plot_gc_figures(plt, rows, outdir, stem) -> List[str]:
     figures = sorted({r["figure"] for r in rows})
     if not figures:
@@ -207,6 +267,7 @@ def render(plt, path: str, outdir: str) -> List[str]:
         written += plot_space_vs_scan_size(plt, rows, outdir, stem)
         written += plot_space_vs_txn_size(plt, rows, outdir, stem)
         written += plot_abort_rates(plt, rows, outdir, stem)
+        written += plot_space_vs_pressure(plt, rows, outdir, stem)
     return written
 
 
