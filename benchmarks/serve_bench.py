@@ -1,0 +1,271 @@
+"""Pressure-driven reclamation bench for the paged-KV serving stack
+(DESIGN.md §11).
+
+Drives ``repro.serve.engine.PagedKVEngine`` — continuous decode over a fixed
+batch of sequences, each restarting (``reset``) when it reaches a random
+target length, so completed sequences keep feeding stale page-table versions
+into the descriptor slabs.  The page pool and descriptor slabs are sized so
+the ``storm`` tier runs out: failed appends and watermark crossings become
+**pressure events** that drive the synchronous hot-sequence-first reclaim
+loop, and every row records how much that loop actually got back
+(``pressure_events`` / ``reclaims_triggered`` / ``pages_reclaimed`` /
+``peak_pages`` / ``peak_pages_post_reclaim``).
+
+Snapshot-scoring readers pin mid-storm: every ``pin_every`` steps a reader
+lane pins the current timestamp and records a checksum of its visible
+(page-table, lengths) view; while the pin is held — across forced reclaims —
+the view is re-resolved every step and must be byte-identical
+(``scans_validated`` / ``scan_violations``; the driver exits nonzero on any
+violation).  This is the serving-side analogue of the sim drivers' replay
+validation: reclamation may never free a page a pinned snapshot can reach.
+
+Rows are ``ServeMeasurement`` (schema v4 + serve fields; space measured in
+**pages**: ``peak_space_words`` = ``peak_pages``, ``end_space_words`` = end
+live pages, ``peak_space_post_reclaim`` = ``peak_pages_post_reclaim``).
+
+  python benchmarks/serve_bench.py                  # standard tier
+  python benchmarks/serve_bench.py --smoke          # tiny CI matrix (seconds)
+  python benchmarks/serve_bench.py --tiers smoke,standard,storm
+  python benchmarks/serve_bench.py --out PATH
+
+The committed repo-root ``BENCH_serve.json`` is generated with
+``--tiers smoke,standard,storm`` so the CI ``bench-trajectory`` step can
+compare a fresh ``--smoke`` run cell-for-cell against the committed smoke
+rows (``tools/compare_bench.py``) while the trajectory keeps the storm tier
+for plotting (``tools/plot_bench.py``) and the reclaim-accounting gate
+(``tools/check_bench_json.py --serve``).
+"""
+from __future__ import annotations
+
+import os
+import random
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.sim.measure import (ServeMeasurement, parse_out_argv,
+                                    parse_tier_argv, print_rows_by_figure,
+                                    tier_meta, write_bench_json)
+from repro.serve.engine import PagedKVEngine
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_serve.json")
+
+POLICIES = ("ebr", "steam", "dlrt", "slrt")
+
+TABLE_COLS = [
+    "scheme", "decode_steps", "tokens_appended", "sequences_completed",
+    "snapshot_pins", "pressure_events", "reclaims_triggered",
+    "pages_reclaimed", "peak_pages", "peak_pages_post_reclaim",
+    "end_space_words", "give_ups", "scans_validated", "scan_violations",
+    "wall_s",
+]
+
+# Tier geometry.  ``storm`` undersizes the page pool relative to the
+# batch's worst-case demand (num_seqs * max_pages_per_seq > num_pages) and
+# keeps the per-sequence descriptor slabs shallow, so both exhaustion paths
+# (page bitmap and version slab) actually fire; target lengths are staggered
+# so retries stay feasible after a reclaim.
+TIERS = {
+    "smoke": dict(num_seqs=4, num_pages=16, page_size=4, max_pages_per_seq=3,
+                  versions_per_seq=6, steps=24, min_len=4, max_len=10,
+                  pin_every=6, pin_hold=3, seed=0),
+    "standard": dict(num_seqs=6, num_pages=32, page_size=4,
+                     max_pages_per_seq=4, versions_per_seq=8, steps=96,
+                     min_len=6, max_len=14, pin_every=8, pin_hold=4, seed=0),
+    "storm": dict(num_seqs=8, num_pages=24, page_size=4, max_pages_per_seq=3,
+                  versions_per_seq=6, steps=160, min_len=4, max_len=12,
+                  pin_every=5, pin_hold=3, seed=0),
+}
+
+KV_HEADS, HEAD_DIM, READER_LANES = 1, 4, 4
+
+
+def view_checksum(st, tables: np.ndarray, lengths: np.ndarray,
+                  page_size: int) -> tuple:
+    """Content fingerprint of a resolved snapshot view: the exact K values
+    of every visible token (not just the page ids — a wrongly recycled page
+    changes the values even if the table row is unchanged)."""
+    k = np.asarray(st.k_pages)[:, :, 0, 0]
+    sums = []
+    for s in range(tables.shape[0]):
+        n = int(lengths[s])
+        vals = tuple(
+            float(k[int(tables[s, j // page_size]), j % page_size])
+            for j in range(n))
+        sums.append((n, vals))
+    return tuple(sums)
+
+
+def run_cell(tier: str, policy: str) -> ServeMeasurement:
+    p = TIERS[tier]
+    B, ps = p["num_seqs"], p["page_size"]
+    eng = PagedKVEngine(
+        B, p["num_pages"], ps, p["max_pages_per_seq"], KV_HEADS, HEAD_DIM,
+        versions_per_seq=p["versions_per_seq"], reader_lanes=READER_LANES,
+        gc_policy=policy, dtype=jnp.float32)
+    rng = random.Random(p["seed"])
+    targets = [rng.randrange(p["min_len"], p["max_len"] + 1)
+               for _ in range(B)]
+    cur_len = [0] * B
+    seq_ids = jnp.arange(B, dtype=jnp.int32)
+    all_mask = jnp.ones((B,), bool)
+
+    tokens = completed = pins = validated = violations = 0
+    recycled_seen: set = set()
+    # lane -> (pinned ts, reference checksum, steps left to hold)
+    live_pins: Dict[int, list] = {}
+    next_lane = 0
+
+    def drain_freed() -> int:
+        """Drain the recycling loop the engine promises, immediately after
+        the call that freed the pages: at that point every drained handle
+        must name a page the free bitmap actually holds (a *later* append
+        may legitimately re-allocate it)."""
+        bad = 0
+        free_now = np.asarray(eng.st.free)
+        for h in eng.freed_pages():
+            if not bool(free_now[h]):
+                bad += 1
+            recycled_seen.add(h)
+        return bad
+
+    t0 = time.time()
+    for step in range(p["steps"]):
+        # one token per sequence, per-(step, seq) distinct payload values so
+        # a recycled-too-early page shows up as a checksum mismatch
+        base = np.arange(B, dtype=np.float32) + B * (step + 1)
+        kv = jnp.asarray(
+            np.broadcast_to(base[:, None, None], (B, KV_HEADS, HEAD_DIM)))
+        failed = np.asarray(eng.step(seq_ids, kv, kv, all_mask))
+        violations += drain_freed()
+        for s in range(B):
+            if not failed[s]:
+                tokens += 1
+                cur_len[s] += 1
+
+        # completed sequences recycle their slot (the storm's dominant
+        # page-release path: the pre-reset versions go stale together)
+        done = np.array([cur_len[s] >= targets[s] for s in range(B)])
+        if done.any():
+            eng.reset(seq_ids, jnp.asarray(done))
+            violations += drain_freed()
+            for s in np.flatnonzero(done):
+                completed += 1
+                cur_len[int(s)] = 0
+                targets[int(s)] = rng.randrange(p["min_len"],
+                                                p["max_len"] + 1)
+
+        # snapshot-scoring readers: pin mid-storm, hold across reclaims
+        if step % p["pin_every"] == 0 and len(live_pins) < READER_LANES:
+            lane = next_lane % READER_LANES
+            next_lane += 1
+            while lane in live_pins:
+                lane = (lane + 1) % READER_LANES
+            ts = eng.pin(lane)
+            tbl, ln = eng.view_at(ts)
+            ref = view_checksum(eng.st, np.asarray(tbl), np.asarray(ln), ps)
+            live_pins[lane] = [ts, ref, p["pin_hold"]]
+            pins += 1
+        for lane in list(live_pins):
+            ts, ref, hold = live_pins[lane]
+            tbl, ln = eng.view_at(ts)
+            now = view_checksum(eng.st, np.asarray(tbl), np.asarray(ln), ps)
+            validated += 1
+            if now != ref:
+                violations += 1
+            live_pins[lane][2] = hold - 1
+            if live_pins[lane][2] <= 0:
+                eng.unpin(lane)
+                del live_pins[lane]
+
+    for lane in list(live_pins):
+        eng.unpin(lane)
+    wall = time.time() - t0
+
+    space = eng.space()
+    steps_n = p["steps"]
+    # work unit: one token append or one snapshot re-resolution
+    work = tokens + validated
+    return ServeMeasurement(
+        bench="serve", figure=f"paged_kv/{tier}", ds="paged_kv",
+        scheme=policy, mix=tier, scan_size=0, zipf=0.0,
+        n_keys=p["num_pages"], num_procs=B, ops_per_proc=steps_n,
+        seed=p["seed"], updates=tokens, lookups=0, scans=pins,
+        scan_keys=validated, total_work=work,
+        ops_per_mwork=round((tokens + pins) / max(1, work) * 1e6, 3),
+        updates_per_mwork=round(tokens / max(1, work) * 1e6, 3),
+        scan_keys_per_mwork=round(validated / max(1, work) * 1e6, 3),
+        peak_space_words=eng.peak_pages,
+        peak_versions=space["max_slot_occupancy"],
+        avg_space_words=0,
+        end_space_words=space["live_pages"],
+        end_versions_per_list=round(space["live_versions"] / B, 4),
+        scans_validated=validated, scan_violations=violations,
+        wall_s=round(wall, 2),
+        reclaims_triggered=eng.reclaims_triggered,
+        peak_space_post_reclaim=eng.peak_pages_post_reclaim,
+        pressure_events=eng.pressure_events,
+        pages_reclaimed=eng.pages_reclaimed,
+        peak_pages=eng.peak_pages,
+        peak_pages_post_reclaim=eng.peak_pages_post_reclaim,
+        page_pool=p["num_pages"], page_size=ps,
+        decode_steps=steps_n, tokens_appended=tokens,
+        sequences_completed=completed, forks=0, give_ups=eng.give_ups,
+        snapshot_pins=pins,
+        overflow_count=space["overflows"],
+        dropped_retires=space["dropped_retires"],
+        scheme_stats={"pages_recycled_distinct": len(recycled_seen)},
+    )
+
+
+def run_tier(tier: str) -> List[ServeMeasurement]:
+    rows = []
+    for policy in POLICIES:
+        m = run_cell(tier, policy)
+        rows.append(m)
+        if m.scan_violations:
+            print(f"!! snapshot violations in {tier}/{policy}: "
+                  f"{m.scan_violations}", file=sys.stderr)
+    return rows
+
+
+def main(argv: List[str]) -> int:
+    tiers, err = parse_tier_argv(argv, TIERS)
+    if err is None:
+        out, err = parse_out_argv(argv, DEFAULT_OUT)
+    if err:
+        print(err, file=sys.stderr)
+        return 2
+
+    t0 = time.time()
+    rows: List[ServeMeasurement] = []
+    for tier in tiers:
+        rows.extend(run_tier(tier))
+    print_rows_by_figure(rows, TABLE_COLS, width=16)
+    payload = write_bench_json(out, "serve", rows,
+                               meta=tier_meta(tiers, TIERS))
+    violations = sum(m.scan_violations for m in rows)
+    print(f"\nwrote {out} ({len(payload['rows'])} rows, "
+          f"{sum(m.tokens_appended for m in rows)} tokens, "
+          f"{sum(m.pressure_events for m in rows)} pressure events, "
+          f"{sum(m.reclaims_triggered for m in rows)} reclaims freed "
+          f"{sum(m.pages_reclaimed for m in rows)} pages, "
+          f"{sum(m.scans_validated for m in rows)} snapshot checks, "
+          f"{violations} violations, {time.time() - t0:.1f}s)")
+    if violations:
+        print("FAIL: pinned-snapshot stability violations detected",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -246,6 +246,123 @@ def _sweep_slots(
 
 
 # ---------------------------------------------------------------------------
+# Pressure path (DESIGN.md §11): capacity gate -> hot slots -> reclaim
+# ---------------------------------------------------------------------------
+class PressureReport(NamedTuple):
+    """Capacity-gate output: all scalars are traced values (masked reductions,
+    no host control flow), so the gate composes under jit/shard_map."""
+
+    live: jax.Array            # i32[] total live versions
+    max_occupancy: jax.Array   # i32[] fullest slab's live-version count
+    slab_frac: jax.Array       # f32[] max_occupancy / versions_per_slot
+    ring_frac: jax.Array       # f32[] retire-ring occupancy fraction
+    under_pressure: jax.Array  # bool[] either watermark crossed
+    deficit: jax.Array         # i32[] versions to free to clear the watermarks
+
+
+def capacity_gate(
+    state: MVState,
+    slab_watermark: float = 0.75,
+    ring_watermark: float = 0.5,
+) -> PressureReport:
+    """Evaluate the slab- and ring-occupancy watermarks (turso's LWM rule:
+    reclamation is *triggered by events* crossing a watermark, never by a
+    timer alone).  ``deficit`` is the number of versions that must be freed
+    to bring every slab under ``slab_watermark`` and the ring under
+    ``ring_watermark`` — the quantity `reclaim_on_pressure` chases, mirroring
+    the sim's ``ReclaimRequest.deficit``."""
+    S, V = state.store.ts.shape
+    occ = (state.store.ts != EMPTY).sum(axis=1)
+    slab_hi = max(1, int(slab_watermark * V))
+    ring_hi = max(1, int(ring_watermark * state.ring.capacity))
+    ring_size = rt.ring_size(state.ring)
+    slab_over = jnp.maximum(occ - slab_hi, 0)
+    deficit = slab_over.sum() + jnp.maximum(ring_size - ring_hi, 0)
+    return PressureReport(
+        live=occ.sum(),
+        max_occupancy=occ.max(),
+        slab_frac=occ.max().astype(jnp.float32) / V,
+        ring_frac=ring_size.astype(jnp.float32) / state.ring.capacity,
+        under_pressure=(occ.max() > slab_hi) | (ring_size > ring_hi),
+        deficit=deficit,
+    )
+
+
+def hot_slots(state: MVState, k: int) -> jax.Array:
+    """Top-k slots by live-version occupancy — the deployable analogue of the
+    sim's ``hot_keys`` resolution (the slots holding the most stale versions
+    are where compaction pays first).  Returns i32[k], -1-padded for slots
+    with <= 1 live version (nothing reclaimable: the current version stays)."""
+    occ = (state.store.ts != EMPTY).sum(axis=1)
+    vals, idx = jax.lax.top_k(occ, min(k, occ.shape[0]))
+    return jnp.where(vals > 1, idx.astype(jnp.int32), -1)
+
+
+def reclaim_on_pressure(
+    state: MVState,
+    hot: jax.Array,      # i32[K] hot slot ids (-1 = inert lane), cf. hot_slots()
+    deficit: jax.Array,  # i32[]  versions to free (capacity_gate().deficit)
+    policy: str = "slrt",
+) -> Tuple[MVState, jax.Array, jax.Array]:
+    """Synchronous pressure response: run the policy's sweep over the hot
+    slots first, spilling to the cold slabs only while the deficit is unmet —
+    the jit-friendly port of the sim's ``SchemeBase.reclaim_on_pressure``
+    (hot-first, then cold until ``freed >= deficit``), with the cold spill
+    specialized through ``lax.cond``.
+
+    Per policy (mirroring the sim's ``_reclaim`` overrides):
+
+    * ``ebr``   — forced epoch turnover: free everything that closed before
+                  the oldest pin; hot slots are irrelevant (EBR cannot target
+                  a list — the paper's pathology, preserved deliberately).
+    * ``steam`` — compact the hot slots' slabs, then cond-spill to a full
+                  needed-sweep while the deficit is unmet.
+    * ``dlrt``  — force-flush the retire ring (the tracker backlog *is* the
+                  reclaimable set; exact entries only, like PDL.remove).
+    * ``slrt``  — forced ring flush + implicated-slot sweep, then the hot
+                  slots, then the cond cold spill (SSL compact's preemptive
+                  splicing under pressure; the default).
+    * ``sweep`` — the baseline: one full sweep, hot set ignored.
+
+    Returns (state', freed_payloads, n_freed) — freed_payloads has EMPTY
+    holes and may repeat handles (recycling must be idempotent); n_freed is
+    the exact live-version delta."""
+    assert policy in POLICIES, policy
+    S, V = state.store.ts.shape
+    live0 = live_versions(state)
+    deficit = jnp.asarray(deficit, jnp.int32)
+
+    if policy == "ebr":
+        state, freed = gc_step(state, policy="ebr")
+        return state, freed, live0 - live_versions(state)
+    if policy == "sweep":
+        state, freed = _sweep_all_needed(state)
+        return state, freed, live0 - live_versions(state)
+    if policy == "dlrt":
+        state, freed = gc_step(state, policy="dlrt", force=True)
+        return state, freed, live0 - live_versions(state)
+
+    # steam / slrt: hot-first, cold spill only while the deficit is unmet
+    if policy == "slrt":
+        state, freed_rt = gc_step(state, policy="slrt", force=True)
+    else:
+        freed_rt = jnp.full((0,), EMPTY, jnp.int32)
+    state, freed_hot = _sweep_slots(state, jnp.maximum(hot, 0), hot >= 0)
+    hot_met = (live0 - live_versions(state)) >= deficit
+
+    def _cold(st: MVState):
+        return _sweep_all_needed(st)
+
+    def _skip(st: MVState):
+        return st, jnp.full((S * V,), EMPTY, jnp.int32)
+
+    state, freed_cold = jax.lax.cond(hot_met, _skip, _cold, state)
+    freed = jnp.concatenate(
+        [freed_rt.reshape(-1), freed_hot.reshape(-1), freed_cold.reshape(-1)])
+    return state, freed, live0 - live_versions(state)
+
+
+# ---------------------------------------------------------------------------
 # Monitoring
 # ---------------------------------------------------------------------------
 def live_versions(state: MVState) -> jax.Array:

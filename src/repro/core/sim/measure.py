@@ -82,6 +82,17 @@ UNITS = {
     "peak_space_post_reclaim": "max space (words) sampled immediately after "
                                "a reclaim pass — the bounded-space signal "
                                "(0 when no reclaim ever ran)",
+    "pages": "KV-cache pages in the paged pool (BENCH_serve rows measure "
+             "space in pages: peak_space_words/end_space_words are "
+             "peak/end live-page counts; DESIGN.md §11)",
+    "serve_pressure": "pressure_events counts triggers (a failed append or "
+                      "a post-step watermark crossing); reclaims_triggered "
+                      "counts the synchronous reclaim passes they drove "
+                      "(<= pressure_events); pages_reclaimed counts pages "
+                      "returned to the free bitmap by those passes; "
+                      "peak_pages_post_reclaim is the max live-page count "
+                      "sampled immediately after a reclaim pass (0 when no "
+                      "reclaim ever ran; DESIGN.md §11)",
 }
 
 REQUIRED_TOP_KEYS = ("bench", "schema_version", "units", "meta", "rows")
@@ -323,6 +334,37 @@ class Measurement:
     def to_row(self) -> Dict[str, Any]:
         """Flatten to the dict serialized as one BENCH json row."""
         return asdict(self)
+
+
+@dataclass
+class ServeMeasurement(Measurement):
+    """One ``BENCH_serve.json`` cell: a paged-KV serving run under one GC
+    policy and one pressure tier (DESIGN.md §11).
+
+    Reuses the base row contract so ``write_bench_json`` /
+    ``tools/compare_bench.py`` work unchanged: ``scheme`` is the vstore GC
+    policy, ``ds`` is ``paged_kv``, space is measured in **pages** —
+    ``peak_space_words`` / ``end_space_words`` carry peak/end live-page
+    counts, ``peak_space_post_reclaim`` carries ``peak_pages_post_reclaim``
+    — and ``scans_validated`` / ``scan_violations`` count pinned-snapshot
+    stability checks.  ``reclaims_triggered`` (inherited) counts synchronous
+    reclaim passes; the serve-only fields below add the pressure-loop
+    accounting (``units["serve_pressure"]``)."""
+
+    pressure_events: int = 0
+    pages_reclaimed: int = 0
+    peak_pages: int = 0
+    peak_pages_post_reclaim: int = 0
+    page_pool: int = 0
+    page_size: int = 0
+    decode_steps: int = 0
+    tokens_appended: int = 0
+    sequences_completed: int = 0
+    forks: int = 0
+    give_ups: int = 0
+    snapshot_pins: int = 0
+    overflow_count: int = 0
+    dropped_retires: int = 0
 
 
 # ---------------------------------------------------------------------------

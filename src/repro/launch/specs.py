@@ -277,7 +277,7 @@ def build_serve_cell(arch: str, mesh: Mesh, shape: str,
     )
 
     def step(state):
-        new_state, toks, freed = eng.decode_one(state, cfg, run)
+        new_state, toks, freed, stats = eng.decode_one(state, cfg, run)
         return new_state, toks
 
     return step, (state_shapes,), (sshard,), (sshard, NamedSharding(mesh, P(bspec, None)))

@@ -48,8 +48,16 @@ class PagedKV(NamedTuple):
 def make_paged_kv(num_seqs: int, num_pages: int, page_size: int,
                   max_pages_per_seq: int, kv_heads: int, head_dim: int,
                   versions_per_seq: int = 8, reader_lanes: int = 8,
-                  dtype=jnp.bfloat16) -> PagedKV:
+                  ring_capacity: int = 0, dtype=jnp.bfloat16) -> PagedKV:
     max_ver = num_seqs * versions_per_seq
+    # Reclamation is pressure-driven (no per-append cadence GC), so the
+    # retire ring must absorb every close between two pressure flushes —
+    # up to one per slab entry plus the in-flight step.  An undersized ring
+    # drops retire records (`dropped_retires`), which the DLRT policy can
+    # never recover (its reclaim walks only the ring); size it to the slab
+    # by default and let callers shrink it deliberately.
+    if ring_capacity <= 0:
+        ring_capacity = max(16, 2 * max_ver)
     return PagedKV(
         k_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
         v_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
@@ -58,7 +66,7 @@ def make_paged_kv(num_seqs: int, num_pages: int, page_size: int,
         table_free=jnp.ones((max_ver,), bool),
         lengths=jnp.zeros((max_ver,), jnp.int32),
         mv=vstore.make_state(num_seqs, versions_per_seq, reader_lanes,
-                             ring_capacity=max(16, num_seqs * 2)),
+                             ring_capacity=ring_capacity),
     )
 
 
@@ -83,15 +91,22 @@ def append_tokens(
     gc_policy: str = "slrt",
 ) -> Tuple[PagedKV, jax.Array]:
     """One decode step: write each sequence's token into its current page,
-    allocating a fresh page (and a new page-table version) at page
-    boundaries.  Returns (state', overflow[B]).
+    allocating a fresh page at page boundaries, and commit a **new page-table
+    version for every appended token** (COW).  Returns (state', failed[B]).
 
-    COW discipline: page-table versions are immutable; only the *partial last
-    page* is written in place, which is safe because every snapshot's visible
-    length caps what readers consume from it."""
+    Versioning every append (not just page boundaries) is what makes the rtx
+    contract hold: the visible *length* lives on the table version, so a
+    pinned snapshot's length can never grow underneath it.  Only the partial
+    last page's slot at ``off`` is written in place — safe because every live
+    table version's length is <= ``off``, so no reader can see the cell until
+    a later version publishes it.  A lane fails (returned mask True) when the
+    page pool, the table-slot pool, or the descriptor slab cannot take the
+    append — the caller reclaims under pressure and retries
+    (`reclaim_on_pressure`), the paper's abort => reclaim => retry loop."""
     PS = st.page_size
     MP = st.max_pages
     B = seq_ids.shape[0]
+    MAX_VER = st.tables.shape[0]
 
     cur_tbl, has = vstore.current_read(st.mv, seq_ids)        # i32[B]
     cur_tbl_safe = jnp.where(has, cur_tbl, 0)
@@ -114,40 +129,203 @@ def append_tokens(
     v_pages = st.v_pages.at[dest_page, off].set(
         v_new.astype(st.v_pages.dtype), mode="drop")
 
-    # page-boundary lanes commit a NEW page-table version (COW)
-    tf, tslots, got_tbl = _alloc(st.table_free, needs_page & ok)
-    commit = needs_page & ok & got_tbl
-    old_rows = st.tables[cur_tbl_safe]                        # [B, MP]
-    new_rows = old_rows.at[jnp.arange(B), jnp.minimum(page_idx, MP - 1)].set(
-        jnp.where(commit, page_of, old_rows[jnp.arange(B),
-                                            jnp.minimum(page_idx, MP - 1)]))
-    tdest = jnp.where(commit, tslots, st.tables.shape[0])
+    # every ok lane commits a NEW page-table version (COW row copy; fresh
+    # sequences start from an all-NO_PAGE row, not slot 0's content)
+    tf, tslots, got_tbl = _alloc(st.table_free, ok)
+    commit = ok & got_tbl
+    old_rows = jnp.where(has[:, None], st.tables[cur_tbl_safe], NO_PAGE)
+    pcol = jnp.minimum(page_idx, MP - 1)
+    new_rows = old_rows.at[jnp.arange(B), pcol].set(
+        jnp.where(needs_page & commit, page_of, old_rows[jnp.arange(B), pcol]))
+    tdest = jnp.where(commit, tslots, MAX_VER)
     tables = st.tables.at[tdest].set(new_rows, mode="drop")
-    table_free = tf
 
-    # lengths: every ok lane advances by 1; table versions own their length
-    new_len = lengths + ok.astype(jnp.int32)
-    ver_ref = jnp.where(commit, tslots, cur_tbl_safe)
-    lengths_arr = st.lengths.at[jnp.where(ok, ver_ref, st.lengths.shape[0])].set(
-        new_len, mode="drop")
+    # the new table version owns the advanced length
+    lengths_arr = st.lengths.at[tdest].set(lengths + 1, mode="drop")
 
-    # descriptor write: new version (payload = table slot) for commit lanes;
-    # in-place length bump lanes keep their current descriptor version
+    # descriptor write: one new version (payload = table slot) per commit
+    # lane.  No cadence GC here: the serving path reclaims only under
+    # pressure (`reclaim_on_pressure`, the turso LWM rule) — paying a full
+    # collection pass per decoded token is exactly the practical cost the
+    # paper's schemes avoid.  Steam is the exception by design: its sweep
+    # rides inside `write_step` itself (compact-on-write), so `freed` below
+    # is nonempty for steam even without a pressure event.
     mv, freed, ovf = vstore.write_step(
-        st.mv, seq_ids, ver_ref, commit, policy=gc_policy)
-    mv, freed2 = vstore.gc_step(mv, policy=gc_policy)
-    freed_all = jnp.concatenate([freed.reshape(-1), freed2.reshape(-1)])
+        st.mv, seq_ids, tslots, commit, policy=gc_policy)
+    freed_all = freed.reshape(-1)
+
+    # a lane whose descriptor append overflowed must hand its table slot back
+    # (otherwise retries leak unreferenced-but-allocated slots)
+    table_free = tf.at[
+        jnp.where(commit & ovf, tslots, MAX_VER)
+    ].set(True, mode="drop")
 
     # recycle table slots whose descriptor versions were collected, then
     # recycle pages unreachable from any live table version
     table_free = table_free.at[
-        jnp.where(freed_all != EMPTY, freed_all, table_free.shape[0])
+        jnp.where(freed_all != EMPTY, freed_all, MAX_VER)
     ].set(True, mode="drop")
     free_pages = _sweep_unreferenced(tables, table_free, new_free)
 
     st2 = PagedKV(k_pages, v_pages, free_pages, tables, table_free,
                   lengths_arr, mv)
-    return st2, mask & ~ok
+    return st2, mask & ~(commit & ~ovf)
+
+
+def reset_sequence(
+    st: PagedKV,
+    seq_ids: jax.Array,    # i32[B] sequence slots being recycled
+    mask: jax.Array,       # bool[B]
+    gc_policy: str = "slrt",
+) -> Tuple[PagedKV, jax.Array]:
+    """Sequence completion: commit a new *empty* page-table version (zero
+    pages, zero length) so the slot can serve the next request.  Returns
+    (state', failed[B]).  The old pages are **not** freed here — they stay
+    pinned by the stale table versions until the GC policy collects them
+    (and by any snapshot still reading the finished sequence); this is the
+    dominant page-release path of a continuous-decode storm, and exactly why
+    pool pressure must drive descriptor compaction."""
+    MAX_VER = st.tables.shape[0]
+    B = seq_ids.shape[0]
+    tf, tslots, got = _alloc(st.table_free, mask)
+    ok = mask & got
+    tdest = jnp.where(ok, tslots, MAX_VER)
+    tables = st.tables.at[tdest].set(
+        jnp.full((B, st.max_pages), NO_PAGE, jnp.int32), mode="drop")
+    lengths_arr = st.lengths.at[tdest].set(0, mode="drop")
+    mv, freed, ovf = vstore.write_step(
+        st.mv, seq_ids, tslots, ok, policy=gc_policy)
+    table_free = tf.at[jnp.where(ok & ovf, tslots, MAX_VER)].set(
+        True, mode="drop")
+    table_free = table_free.at[
+        jnp.where(freed != EMPTY, freed, MAX_VER)
+    ].set(True, mode="drop")
+    free_pages = _sweep_unreferenced(tables, table_free, st.free)
+    st2 = PagedKV(st.k_pages, st.v_pages, free_pages, tables, table_free,
+                  lengths_arr, mv)
+    return st2, mask & ~(ok & ~ovf)
+
+
+def fork_sequence(
+    st: PagedKV,
+    src_ids: jax.Array,    # i32[B] parent sequences
+    dst_ids: jax.Array,    # i32[B] child sequence slots
+    mask: jax.Array,       # bool[B]
+    gc_policy: str = "slrt",
+) -> Tuple[PagedKV, jax.Array]:
+    """COW fork: the child's first page-table version *shares every page*
+    with the parent's current version, except a *partial last page*, which is
+    copied — both sides append in place at the tail, so a shared partial page
+    would let the child clobber the parent's next token (and vice versa).
+    Full pages stay shared: they are immutable once published.  Returns
+    (state', failed[B]).  Shared pages stay live until no reachable table
+    version of *either* sequence references them — the reachability sweep
+    needs no refcounts for this, exactly the property the paper's GC
+    exploits."""
+    MAX_VER = st.tables.shape[0]
+    PS = st.page_size
+    MP = st.max_pages
+    B = src_ids.shape[0]
+    src_tbl, has = vstore.current_read(st.mv, src_ids)
+    src_safe = jnp.where(has, src_tbl, 0)
+    src_len = jnp.where(has, st.lengths[src_safe], 0)
+    off = src_len % PS
+    pcol = jnp.minimum(src_len // PS, MP - 1)
+    needs_copy = mask & has & (off > 0)
+
+    free2, cpages, got_page = _alloc(st.free, needs_copy)
+    ok0 = mask & has & (~needs_copy | got_page)
+    tf, tslots, got = _alloc(st.table_free, ok0)
+    ok = ok0 & got
+
+    rows = jnp.where(ok[:, None], st.tables[src_safe], NO_PAGE)
+    do_copy = needs_copy & ok
+    rows = rows.at[jnp.arange(B), pcol].set(
+        jnp.where(do_copy, cpages, rows[jnp.arange(B), pcol]))
+    src_page = st.tables[src_safe, pcol]
+    src_page_safe = jnp.maximum(src_page, 0)
+    cdest = jnp.where(do_copy, cpages, st.k_pages.shape[0])
+    k_pages = st.k_pages.at[cdest].set(st.k_pages[src_page_safe], mode="drop")
+    v_pages = st.v_pages.at[cdest].set(st.v_pages[src_page_safe], mode="drop")
+
+    tdest = jnp.where(ok, tslots, MAX_VER)
+    tables = st.tables.at[tdest].set(rows, mode="drop")
+    lengths_arr = st.lengths.at[tdest].set(src_len, mode="drop")
+
+    mv, freed, ovf = vstore.write_step(
+        st.mv, dst_ids, tslots, ok, policy=gc_policy)
+    table_free = tf.at[jnp.where(ok & ovf, tslots, MAX_VER)].set(
+        True, mode="drop")
+    table_free = table_free.at[
+        jnp.where(freed != EMPTY, freed, MAX_VER)
+    ].set(True, mode="drop")
+    free_pages = _sweep_unreferenced(tables, table_free, free2)
+    st2 = PagedKV(k_pages, v_pages, free_pages, tables, table_free,
+                  lengths_arr, mv)
+    return st2, mask & ~(ok & ~ovf)
+
+
+# ---------------------------------------------------------------------------
+# Pressure path (DESIGN.md §11): pool watermark -> hot sequences -> reclaim
+# ---------------------------------------------------------------------------
+class PagePressure(NamedTuple):
+    """Page-pool gate output (all traced scalars, like `vstore.PressureReport`)."""
+
+    free_pages: jax.Array      # i32[] free-bitmap popcount
+    free_frac: jax.Array       # f32[] fraction of the pool still free
+    under_pressure: jax.Array  # bool[] popcount under the watermark
+    deficit: jax.Array         # i32[] pages to free to clear the watermark
+
+
+def page_pressure(st: PagedKV, watermark: float = 0.25) -> PagePressure:
+    """Free-bitmap popcount under the watermark = pool pressure.  The deficit
+    is measured in pages; `reclaim_on_pressure` chases it by freeing stale
+    descriptor versions (each stale table version pins >= 0 pages)."""
+    n = st.free.shape[0]
+    lo = max(1, int(watermark * n))
+    free = st.free.sum()
+    return PagePressure(
+        free_pages=free,
+        free_frac=free.astype(jnp.float32) / n,
+        under_pressure=free < lo,
+        deficit=jnp.maximum(lo - free, 0),
+    )
+
+
+def hot_sequences(st: PagedKV, k: int) -> jax.Array:
+    """Sequences holding the most live descriptor versions — the hot set for
+    pressure-driven compaction (most stale table versions = most pinned-but-
+    dead pages).  Delegates to `vstore.hot_slots` (slot = sequence)."""
+    return vstore.hot_slots(st.mv, k)
+
+
+def reclaim_on_pressure(
+    st: PagedKV,
+    hot_seqs: jax.Array,   # i32[K] hot sequence ids (-1 = inert lane)
+    deficit: jax.Array,    # i32[] pages wanted (page_pressure().deficit)
+    gc_policy: str = "slrt",
+) -> Tuple[PagedKV, jax.Array]:
+    """Synchronous page reclamation: hot-sequence-first descriptor compaction
+    (`vstore.reclaim_on_pressure`), recycle the table slots whose descriptor
+    versions were collected, then the reachability sweep recycles every page
+    no live table version references.  Returns (state', pages_freed).
+
+    The version deficit is the page deficit: every freed descriptor version
+    releases exactly one table version which un-pins up to MP pages, so
+    chasing ``deficit`` versions is a conservative target for ``deficit``
+    pages."""
+    MAX_VER = st.tables.shape[0]
+    mv, freed, _ = vstore.reclaim_on_pressure(
+        st.mv, hot_seqs, deficit, policy=gc_policy)
+    table_free = st.table_free.at[
+        jnp.where(freed != EMPTY, freed, MAX_VER)
+    ].set(True, mode="drop")
+    free_pages = _sweep_unreferenced(st.tables, table_free, st.free)
+    pages_freed = free_pages.sum() - st.free.sum()
+    return (
+        st._replace(mv=mv, table_free=table_free, free=free_pages),
+        pages_freed,
+    )
 
 
 def _sweep_unreferenced(tables, table_free, page_free) -> jax.Array:

@@ -25,15 +25,17 @@ allocator.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.mvgc import vstore
 from repro.core.mvgc.pool import EMPTY
 from repro.models import transformer as tf
+from repro.mvkv import paged
 
 
 class ServeState(NamedTuple):
@@ -51,7 +53,7 @@ def make_serve_state(cfg: ModelConfig, run: RunConfig, params, batch: int,
         num_slots=batch,
         versions_per_slot=run.versions_per_slot,
         num_reader_lanes=run.reader_lanes,
-        ring_capacity=max(16, batch * 2),
+        ring_capacity=run.ring_capacity or max(16, batch * 2),
     )
     return ServeState(
         params=params,
@@ -80,9 +82,17 @@ def prefill_step(state: ServeState, cfg: ModelConfig, run: RunConfig,
 
 def decode_one(state: ServeState, cfg: ModelConfig, run: RunConfig,
                enc_out: Optional[jax.Array] = None
-               ) -> Tuple[ServeState, jax.Array, jax.Array]:
+               ) -> Tuple[ServeState, jax.Array, jax.Array, Dict[str, jax.Array]]:
     """One greedy decode step for the whole batch.  Returns
-    (state', new_tokens[B,1], freed_descriptor_payloads)."""
+    (state', new_tokens[B,1], freed_descriptor_payloads, stats).
+
+    GC runs trigger-on-event (DESIGN.md §11): after the descriptor write the
+    capacity gate decides — under pressure (a watermark crossed, or any lane's
+    append overflowed its slab) the step reclaims *synchronously* via
+    `vstore.reclaim_on_pressure` and retries the overflowed lanes in-graph;
+    otherwise the policy's normal cadence pass runs.  ``stats`` surfaces the
+    pressure accounting (reclaims, deficit, retry outcome, and the previously
+    buried ``overflow_count``/``dropped_retires`` monitors) as i32 scalars."""
     logits, cache = tf.decode_step(state.params, cfg, state.last_tokens,
                                    state.cache, state.cache_len,
                                    enc_out=enc_out)
@@ -90,12 +100,46 @@ def decode_one(state: ServeState, cfg: ModelConfig, run: RunConfig,
     B = new_len.shape[0]
     ids = jnp.arange(B, dtype=jnp.int32)
     # the update: a new descriptor version (visible length) per sequence
-    mv, freed_w, _ = vstore.write_step(
+    mv, freed_w, ovf = vstore.write_step(
         state.mv, ids, new_len, jnp.ones((B,), bool), policy=run.gc_policy)
-    mv, freed_g = vstore.gc_step(mv, policy=run.gc_policy)
-    freed = jnp.concatenate([freed_w.reshape(-1), freed_g.reshape(-1)])
+    gate = vstore.capacity_gate(mv)
+    trigger = gate.under_pressure | ovf.any()
+
+    def _pressure(m: vstore.MVState):
+        hs = vstore.hot_slots(m, min(8, B))
+        m2, _, n = vstore.reclaim_on_pressure(
+            m, hs, gate.deficit, policy=run.gc_policy)
+        return m2, jnp.int32(1), n
+
+    def _cadence(m: vstore.MVState):
+        m2, freed_g = vstore.gc_step(m, policy=run.gc_policy)
+        return m2, jnp.int32(0), (freed_g != EMPTY).sum().astype(jnp.int32)
+
+    mv, reclaimed, n_freed = jax.lax.cond(trigger, _pressure, _cadence, mv)
+
+    # retry the overflowed lanes now that the reclaim made room
+    def _retry(args):
+        m, o = args
+        m2, _, o2 = vstore.write_step(
+            m, ids, new_len, o, policy=run.gc_policy)
+        return m2, o2
+
+    mv, ovf_left = jax.lax.cond(
+        ovf.any(), _retry, lambda args: args, (mv, ovf))
+
+    stats = {
+        "overflow_lanes": ovf.sum().astype(jnp.int32),
+        "retry_failed": ovf_left.sum().astype(jnp.int32),
+        "reclaims_triggered": reclaimed,
+        "versions_reclaimed": n_freed,
+        "deficit": gate.deficit,
+        "live_versions": vstore.live_versions(mv).astype(jnp.int32),
+        "overflow_count": mv.overflow_count,
+        "dropped_retires": mv.dropped_retires,
+    }
     nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    return ServeState(state.params, cache, new_len, mv, nxt), nxt, freed
+    return (ServeState(state.params, cache, new_len, mv, nxt), nxt,
+            freed_w.reshape(-1), stats)
 
 
 # ---------------------------------------------------------------------------
@@ -148,12 +192,14 @@ class MVServeEngine:
             functools.partial(decode_one, cfg=cfg, run=run))
         self._prefill = jax.jit(
             functools.partial(prefill_step, cfg=cfg, run=run))
+        self.last_stats: Dict[str, int] = {}
 
     def prefill(self, tokens: jax.Array) -> None:
         self.state = self._prefill(self.state, tokens=tokens)
 
     def step(self) -> jax.Array:
-        self.state, toks, _ = self._decode(self.state)
+        self.state, toks, _, stats = self._decode(self.state)
+        self.last_stats = {k: int(v) for k, v in stats.items()}
         return toks
 
     def pin(self, lane: int) -> int:
@@ -169,3 +215,163 @@ class MVServeEngine:
 
     def space(self) -> Dict[str, int]:
         return vstore.space_report(self.state.mv)
+
+
+class PagedKVEngine:
+    """Paged-KV serving loop with synchronous pressure reclamation — the
+    `freed_pages()` contract the module docstring promises, made concrete.
+
+    ``step`` appends one token per masked sequence.  A failed append (page
+    pool, table pool, or descriptor slab exhausted) is a **pressure event**:
+    the engine reclaims synchronously — hot-sequence-first descriptor
+    compaction, then the reachability sweep that recycles pages — and retries
+    the failed lanes, up to ``max_reclaim_rounds`` before giving up (turso's
+    trigger-on-event rule; the sim's abort => reclaim => retry loop).  A
+    post-step watermark crossing triggers the same pass without a failure.
+    Counters (``pressure_events``, ``reclaims_triggered``,
+    ``pages_reclaimed``, ``peak_pages``, ``peak_pages_post_reclaim``,
+    ``give_ups``) feed BENCH_serve rows directly."""
+
+    def __init__(self, num_seqs: int, num_pages: int, page_size: int,
+                 max_pages_per_seq: int, kv_heads: int, head_dim: int, *,
+                 versions_per_seq: int = 8, reader_lanes: int = 8,
+                 ring_capacity: int = 0, gc_policy: str = "slrt",
+                 page_watermark: float = 0.25, hot_k: int = 8,
+                 max_reclaim_rounds: int = 3, dtype=jnp.float32):
+        self.st = paged.make_paged_kv(
+            num_seqs, num_pages, page_size, max_pages_per_seq, kv_heads,
+            head_dim, versions_per_seq=versions_per_seq,
+            reader_lanes=reader_lanes, ring_capacity=ring_capacity,
+            dtype=dtype)
+        self.gc_policy = gc_policy
+        self.max_reclaim_rounds = max_reclaim_rounds
+        self._append = jax.jit(
+            functools.partial(paged.append_tokens, gc_policy=gc_policy))
+        self._fork = jax.jit(
+            functools.partial(paged.fork_sequence, gc_policy=gc_policy))
+        self._reset = jax.jit(
+            functools.partial(paged.reset_sequence, gc_policy=gc_policy))
+        self._reclaim = jax.jit(
+            functools.partial(paged.reclaim_on_pressure, gc_policy=gc_policy))
+        self._gate = jax.jit(
+            functools.partial(paged.page_pressure, watermark=page_watermark))
+        self._hot = jax.jit(functools.partial(paged.hot_sequences, k=hot_k))
+        self._freed_pages: List[int] = []
+        self.pressure_events = 0
+        self.reclaims_triggered = 0
+        self.pages_reclaimed = 0
+        self.give_ups = 0
+        self.peak_pages = 0
+        self.peak_pages_post_reclaim = 0
+
+    def _note_peak(self) -> None:
+        self.peak_pages = max(self.peak_pages,
+                              int(paged.live_pages(self.st)))
+
+    def _reclaim_once(self, extra_deficit: int = 0) -> None:
+        gate = self._gate(self.st)
+        deficit = max(int(gate.deficit), extra_deficit, 1)
+        self.st, pages = self._reclaim(self.st, self._hot(self.st),
+                                       jnp.int32(deficit))
+        self.reclaims_triggered += 1
+        self.pages_reclaimed += int(pages)
+        self.peak_pages_post_reclaim = max(self.peak_pages_post_reclaim,
+                                           int(paged.live_pages(self.st)))
+
+    def step(self, seq_ids: jax.Array, k_new: jax.Array, v_new: jax.Array,
+             mask: jax.Array) -> jax.Array:
+        """Append one token per masked sequence; reclaim-and-retry on
+        pressure.  Returns failed[B] (True = gave up after reclaims)."""
+        free_before = np.asarray(self.st.free)
+        st, failed = self._append(self.st, seq_ids, k_new, v_new, mask)
+        self.st = st
+        self._note_peak()
+        rounds = 0
+        while bool(failed.any()) and rounds < self.max_reclaim_rounds:
+            self.pressure_events += 1
+            self._reclaim_once(extra_deficit=int(failed.sum()))
+            self.st, failed = self._append(self.st, seq_ids, k_new, v_new,
+                                           failed)
+            self._note_peak()
+            rounds += 1
+        # LWM rule: a watermark crossing is itself a trigger event
+        if bool(self._gate(self.st).under_pressure):
+            self.pressure_events += 1
+            self._reclaim_once()
+        if bool(failed.any()):
+            self.give_ups += int(failed.sum())
+        newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
+        self._freed_pages.extend(int(p) for p in newly)
+        return failed
+
+    def fork(self, src_ids: jax.Array, dst_ids: jax.Array,
+             mask: jax.Array) -> jax.Array:
+        """COW fork with the same reclaim-and-retry discipline as `step`."""
+        free_before = np.asarray(self.st.free)
+        st, failed = self._fork(self.st, src_ids, dst_ids, mask)
+        self.st = st
+        self._note_peak()
+        rounds = 0
+        while bool(failed.any()) and rounds < self.max_reclaim_rounds:
+            self.pressure_events += 1
+            self._reclaim_once(extra_deficit=int(failed.sum()))
+            self.st, failed = self._fork(self.st, src_ids, dst_ids, failed)
+            self._note_peak()
+            rounds += 1
+        if bool(failed.any()):
+            self.give_ups += int(failed.sum())
+        newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
+        self._freed_pages.extend(int(p) for p in newly)
+        return failed
+
+    def reset(self, seq_ids: jax.Array, mask: jax.Array) -> jax.Array:
+        """Recycle finished sequences' slots (empty table version); same
+        reclaim-and-retry discipline as `step`."""
+        free_before = np.asarray(self.st.free)
+        st, failed = self._reset(self.st, seq_ids, mask)
+        self.st = st
+        rounds = 0
+        while bool(failed.any()) and rounds < self.max_reclaim_rounds:
+            self.pressure_events += 1
+            self._reclaim_once(extra_deficit=int(failed.sum()))
+            self.st, failed = self._reset(self.st, seq_ids, failed)
+            rounds += 1
+        if bool(failed.any()):
+            self.give_ups += int(failed.sum())
+        newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
+        self._freed_pages.extend(int(p) for p in newly)
+        return failed
+
+    def freed_pages(self) -> List[int]:
+        """Drain the handles of pages recycled since the last call — exactly
+        the loop the module docstring promises: a page appears here once its
+        last referencing page-table version was collected, and the allocator
+        (the free bitmap) may hand it to any sequence's next append."""
+        out, self._freed_pages = self._freed_pages, []
+        return out
+
+    def pin(self, lane: int) -> int:
+        self.st, ts = paged.begin_snapshot(self.st, jnp.int32(lane))
+        return int(ts)
+
+    def unpin(self, lane: int) -> None:
+        self.st = paged.end_snapshot(self.st, jnp.int32(lane))
+
+    def view_at(self, t: int, seq_ids: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+        if seq_ids is None:
+            seq_ids = jnp.arange(self.st.mv.store.ts.shape[0],
+                                 dtype=jnp.int32)
+        return paged.snapshot_view(self.st, seq_ids, jnp.int32(t))
+
+    def space(self) -> Dict[str, int]:
+        rep = vstore.space_report(self.st.mv)
+        rep["live_pages"] = int(paged.live_pages(self.st))
+        rep["free_pages"] = int(self.st.free.sum())
+        rep["peak_pages"] = self.peak_pages
+        rep["peak_pages_post_reclaim"] = self.peak_pages_post_reclaim
+        rep["pages_reclaimed"] = self.pages_reclaimed
+        rep["pressure_events"] = self.pressure_events
+        rep["reclaims_triggered"] = self.reclaims_triggered
+        rep["give_ups"] = self.give_ups
+        return rep

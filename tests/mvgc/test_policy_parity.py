@@ -1,0 +1,305 @@
+"""Differential parity: sim schemes vs. deployable vstore policies.
+
+Replays one identical operation trace (writes, pins, unpins, pressure
+events) through a sim scheme (`repro.core.sim.schemes`) and its vstore
+policy counterpart (`repro.core.mvgc.vstore`) and asserts that the **sets of
+freed version identities match at every pressure event** — the correctness
+anchor for the pressure-machinery port (DESIGN.md §11): if the deployable
+layer frees a version the sim retains (or vice versa) at a sync point, the
+port broke the paper's `needed()` contract.
+
+Alignment conventions (both layers are deterministic, so parity is exact):
+
+* **shared clock** — the sim advances `env.global_ts` once per write; the
+  vstore ticks `now` once per `write_step`; pins announce the current time
+  on both sides, so version intervals coincide timestamp-for-timestamp.
+* **GC only at pressure events** — sim cadences are set astronomically high
+  (EBR ``advance_every``, the RangeTracker ``batch_size``) and the driver
+  never calls `vstore.gc_step`, so *all* reclamation flows through
+  ``reclaim_on_pressure`` on both sides.  Steam is the one exception: it
+  compacts on the write path by design in both layers (sim ``on_overwrite``
+  vs. vstore's sweep-before-append), with a one-write timing skew — which is
+  why parity is asserted at pressure-event sync points, where both sides
+  complete a full pass, not after every write.
+* **deficit = infinity** — every pressure event asks for more than exists,
+  so hot-first/cold-spill orderings cannot change *what* is freed, only the
+  order; both sides converge on the full ¬needed set.
+* **EBR discipline** — the trace generator inserts a pressure event
+  immediately before each pin (with no intervening writes) and allows one
+  pin at a time.  This neutralizes EBR's epoch granularity (a version that
+  closed *at* the pin timestamp is reclaimable by the interval rule but sits
+  in a current-epoch bucket) without weakening the other three policies'
+  traces.  Under that discipline EBR parity is exact: nothing frees during
+  a pin on either side, and everything closed frees at the next unpinned
+  pressure event.
+
+Identity is the version's payload handle: the driver issues a unique
+integer per write, so "freed sets match" == "surviving payload sets match".
+"""
+import random
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.mvgc import vstore
+from repro.core.mvgc.pool import EMPTY
+from repro.core.sim.schemes import (
+    DLRTScheme, EBRScheme, SLRTScheme, SteamLFScheme)
+from repro.core.sim.ssl_list import MVEnv
+
+POLICIES = ("ebr", "steam", "dlrt", "slrt")
+HUGE = 10 ** 9
+
+
+# ---------------------------------------------------------------------------
+# sim-side replay
+# ---------------------------------------------------------------------------
+class SimReplay:
+    """Drives one sim scheme with per-slot version lists (slot k <-> one
+    list), matching the vstore's slot-indexed slabs."""
+
+    def __init__(self, policy: str, n_slots: int, n_lanes: int):
+        self.env = MVEnv(n_lanes + 1)     # lanes pin; the last pid writes
+        self.wpid = n_lanes
+        if policy == "ebr":
+            self.scheme = EBRScheme(self.env, advance_every=HUGE)
+        elif policy == "steam":
+            self.scheme = SteamLFScheme(self.env, scan_every=1)
+        elif policy == "dlrt":
+            self.scheme = DLRTScheme(self.env, batch_size=HUGE)
+        elif policy == "slrt":
+            self.scheme = SLRTScheme(self.env, batch_size=HUGE)
+        else:
+            raise ValueError(policy)
+        self.lists = [self.scheme.new_list() for _ in range(n_slots)]
+        for lst in self.lists:
+            self.scheme.register_list(lst)
+        self.scheme.set_key_resolver(lambda k: [self.lists[k]])
+        self.n_slots = n_slots
+        self.issued = set()
+
+    def write(self, slot: int, payload: int) -> None:
+        ts = self.env.advance_ts()
+        lst = self.lists[slot]
+        ctx = self.scheme.begin_update(self.wpid)
+        old = lst.head if lst.head is not lst.sentinel else None
+        node = self.scheme.new_node(ts, payload)
+        assert lst.try_append(lst.head, node)
+        if old is not None:
+            self.scheme.on_overwrite(self.wpid, lst, old, old.ts, ts)
+        self.scheme.end_update(self.wpid, ctx)
+        self.issued.add(payload)
+
+    def pin(self, lane: int) -> int:
+        return self.scheme.begin_rtx(lane)
+
+    def unpin(self, lane: int) -> None:
+        self.scheme.end_rtx(lane)
+
+    def pressure(self) -> int:
+        return self.scheme.reclaim_on_pressure(
+            list(range(self.n_slots)), HUGE)
+
+    def remaining(self) -> set:
+        out = set()
+        for lst in self.lists:
+            out.update(n.val for n in lst.reachable_nodes())
+        return out & self.issued
+
+
+# ---------------------------------------------------------------------------
+# vstore-side replay
+# ---------------------------------------------------------------------------
+class VstoreReplay:
+    def __init__(self, policy: str, n_slots: int, n_lanes: int, V: int = 48):
+        self.policy = policy
+        self.state = vstore.make_state(
+            n_slots, V, n_lanes, ring_capacity=256)
+        self.n_slots = n_slots
+        self.issued = set()
+
+    def write(self, slot: int, payload: int) -> None:
+        self.state, _, ovf = vstore.write_step(
+            self.state,
+            jnp.array([slot], jnp.int32),
+            jnp.array([payload], jnp.int32),
+            jnp.array([True]),
+            policy=self.policy,
+        )
+        assert not bool(ovf.any()), "slab overflow would skew parity"
+        self.issued.add(payload)
+
+    def pin(self, lane: int) -> int:
+        self.state, ts = vstore.begin_snapshot(
+            self.state, jnp.array([lane], jnp.int32), jnp.array([True]))
+        return int(ts[0])
+
+    def unpin(self, lane: int) -> None:
+        self.state = vstore.end_snapshot(
+            self.state, jnp.array([lane], jnp.int32), jnp.array([True]))
+
+    def pressure(self) -> int:
+        hot = jnp.arange(self.n_slots, dtype=jnp.int32)
+        self.state, _, n = vstore.reclaim_on_pressure(
+            self.state, hot, jnp.int32(HUGE), policy=self.policy)
+        return int(n)
+
+    def remaining(self) -> set:
+        ts = np.asarray(self.state.store.ts)
+        pay = np.asarray(self.state.store.payload)
+        return set(pay[ts != EMPTY].tolist()) & self.issued
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+def gen_trace(seed: int, policy: str, n_slots: int, n_lanes: int,
+              n_events: int):
+    """Deterministic random trace.  EBR additionally gets the drain-before-
+    pin discipline (module docstring) and a single pin lane."""
+    rng = random.Random(seed)
+    max_pins = 1 if policy == "ebr" else n_lanes
+    ops, pinned = [], []
+    for _ in range(n_events):
+        r = rng.random()
+        free_lanes = [l for l in range(n_lanes) if l not in pinned]
+        if r < 0.55 or (r < 0.70 and (not free_lanes or
+                                      len(pinned) >= max_pins)):
+            ops.append(("write", rng.randrange(n_slots)))
+        elif r < 0.70:
+            lane = rng.choice(free_lanes)
+            pinned.append(lane)
+            ops.append(("pin", lane))
+        elif r < 0.85 and pinned:
+            lane = pinned.pop(rng.randrange(len(pinned)))
+            ops.append(("unpin", lane))
+        else:
+            ops.append(("pressure",))
+    ops.append(("pressure",))          # mid-state sync point
+    for lane in pinned:                # full-cleanup check at the end
+        ops.append(("unpin", lane))
+    ops.append(("pressure",))
+    if policy == "ebr":
+        out = []
+        for op in ops:
+            if op[0] == "pin":
+                out.append(("pressure",))
+            out.append(op)
+        ops = out
+    return ops
+
+
+def replay_and_compare(policy: str, seed: int, n_slots=5, n_lanes=3,
+                       n_events=60):
+    sim = SimReplay(policy, n_slots, n_lanes)
+    dep = VstoreReplay(policy, n_slots, n_lanes)
+    trace = gen_trace(seed, policy, n_slots, n_lanes, n_events)
+    payload = 0
+    sync_points = 0
+    for i, op in enumerate(trace):
+        if op[0] == "write":
+            payload += 1
+            sim.write(op[1], payload)
+            dep.write(op[1], payload)
+        elif op[0] == "pin":
+            ts_s = sim.pin(op[1])
+            ts_d = dep.pin(op[1])
+            assert ts_s == ts_d, (
+                f"event {i}: pin timestamps diverged (sim {ts_s}, "
+                f"vstore {ts_d}) — the shared clock broke")
+        elif op[0] == "unpin":
+            sim.unpin(op[1])
+            dep.unpin(op[1])
+        else:  # pressure
+            sim.pressure()
+            dep.pressure()
+            sync_points += 1
+            s_rem, d_rem = sim.remaining(), dep.remaining()
+            assert s_rem == d_rem, (
+                f"{policy} seed {seed} event {i} (sync {sync_points}): "
+                f"freed sets diverged — sim kept {sorted(s_rem - d_rem)} "
+                f"that vstore freed; vstore kept {sorted(d_rem - s_rem)} "
+                f"that sim freed")
+    assert sync_points >= 3, "trace produced too few pressure sync points"
+    # final state: no pins, fully drained — only current versions survive
+    cur = {s for s in range(n_slots)}
+    final = dep.remaining()
+    written_slots = len({op[1] for op in trace if op[0] == "write"})
+    assert len(final) == written_slots <= len(cur), (
+        "post-drain survivors must be exactly one current version per "
+        f"written slot: {sorted(final)}")
+    return payload, sync_points
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_policy_parity(policy, seed):
+    """Identical traces through sim scheme and vstore policy free identical
+    version sets at every pressure event."""
+    replay_and_compare(policy, seed)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_parity_write_burst_single_slot(policy):
+    """Degenerate trace: all writes hammer one slot (the paper's single
+    hot vCAS object), pin mid-burst."""
+    sim = SimReplay(policy, 1, 2)
+    dep = VstoreReplay(policy, 1, 2)
+    for p in range(1, 9):
+        sim.write(0, p)
+        dep.write(0, p)
+    sim.pressure(), dep.pressure()
+    assert sim.remaining() == dep.remaining() == {8}
+    sim.pin(0), dep.pin(0)
+    for p in range(9, 15):
+        sim.write(0, p)
+        dep.write(0, p)
+    sim.pressure(), dep.pressure()
+    assert sim.remaining() == dep.remaining()
+    # the pinned snapshot's version (payload 8, current at the pin) plus the
+    # running current version must both survive on both sides
+    assert {8, 14} <= sim.remaining()
+    sim.unpin(0), dep.unpin(0)
+    sim.pressure(), dep.pressure()
+    assert sim.remaining() == dep.remaining() == {14}
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_parity_interleaved_pins(policy):
+    """Two staggered pins (one for EBR) with writes between every event."""
+    n_lanes = 1 if policy == "ebr" else 2
+    sim = SimReplay(policy, 3, n_lanes)
+    dep = VstoreReplay(policy, 3, n_lanes)
+    p = 0
+
+    def w(slot):
+        nonlocal p
+        p += 1
+        sim.write(slot, p)
+        dep.write(slot, p)
+
+    def sync():
+        sim.pressure(), dep.pressure()
+        assert sim.remaining() == dep.remaining()
+
+    for s in (0, 1, 2, 0, 1):
+        w(s)
+    sync()                       # EBR discipline: drain right before pin
+    sim.pin(0), dep.pin(0)
+    for s in (0, 0, 1, 2):
+        w(s)
+    sync()
+    if n_lanes > 1:
+        sim.pin(1), dep.pin(1)
+        for s in (1, 1, 0):
+            w(s)
+        sync()
+        sim.unpin(1), dep.unpin(1)
+    sim.unpin(0), dep.unpin(0)
+    for s in (2, 2):
+        w(s)
+    sync()

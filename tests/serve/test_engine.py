@@ -116,3 +116,39 @@ def test_snapshot_score_runs():
     logits = eng.snapshot_score(e.state, cfg, toks, jnp.int32(t))
     assert logits.shape == (4, 1, cfg.vocab_size)
     assert bool(jnp.isfinite(logits).all())
+
+
+def test_undersized_ring_surfaces_dropped_retires():
+    """Regression for the buried-monitor bug: an undersized retire ring
+    silently drops retire records (DL-RT can never reclaim those versions).
+    The engine step stats must surface ``dropped_retires`` (and
+    ``overflow_count``) so an operator can see the misconfiguration, and a
+    default-sized ring must report zero drops on the same workload."""
+    cfg = reduced_config("minitron-4b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompt = jnp.array(rng.integers(0, cfg.vocab_size, (4, 8)), jnp.int32)
+
+    def run_steps(ring_capacity):
+        run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                        gc_policy="slrt", versions_per_slot=16,
+                        reader_lanes=4, ring_capacity=ring_capacity)
+        e = eng.MVServeEngine(cfg, run, params, batch=4, max_len=64)
+        e.prefill(prompt)
+        for _ in range(6):
+            e.step()
+        return e.last_stats
+
+    # ring of 2 < batch of 4: every decode step pushes 4 retires, so at
+    # least 2 drop per step — the stats must show it
+    stats = run_steps(ring_capacity=2)
+    assert "dropped_retires" in stats and "overflow_count" in stats
+    assert stats["dropped_retires"] > 0, (
+        f"undersized ring dropped nothing? stats={stats}")
+    # and the space report agrees with the step stats
+    # (same counter, two surfaces)
+    assert stats["dropped_retires"] >= 2
+
+    # properly sized ring: zero drops on the identical workload
+    stats_ok = run_steps(ring_capacity=0)   # 0 = default sizing
+    assert stats_ok["dropped_retires"] == 0, stats_ok

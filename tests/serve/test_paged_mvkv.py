@@ -1,10 +1,13 @@
 """Paged MVKV tests: COW page-table versioning, snapshot isolation at page
-granularity, page recycling via the reachability sweep, and the kernel
-integration (snapshot_view -> paged_decode)."""
+granularity, page recycling via the reachability sweep, the kernel
+integration (snapshot_view -> paged_decode), and property tests over random
+decode/fork/pin/unpin/pressure interleavings (reachability soundness +
+pinned-snapshot stability across forced reclaims)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as hst
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -76,12 +79,21 @@ def test_kernel_integration_snapshot_decode():
 
 
 def test_pages_recycle_after_gc():
-    """Old page-table versions collected by SL-RT release their pages."""
+    """Old page-table versions collected under pressure release their pages.
+
+    The serving path runs no per-append cadence GC (reclamation is
+    pressure-driven), so stale versions pile up until the reclaim pass —
+    which must then drop live pages back to exactly the current tables'
+    footprint."""
     st = mk(num_pages=32, V=16)
     for i in range(16):          # 4 page boundaries per sequence
         st = step(st, i)
-    # no pins: after GC, only the current table version per seq is live,
-    # so live pages == pages referenced by the two current tables
+    st, freed = paged.reclaim_on_pressure(
+        st, paged.hot_sequences(st, 2), jnp.int32(10 ** 9),
+        gc_policy="slrt")
+    assert int(freed) == 0, "append-only history shares all its pages"
+    # no pins: after the reclaim, only the current table version per seq is
+    # live, so live pages == pages referenced by the two current tables
     ids = jnp.arange(2, dtype=jnp.int32)
     tables, lengths = paged.snapshot_view(st, ids, st.mv.now)
     referenced = int((tables >= 0).sum())
@@ -104,10 +116,163 @@ def test_pinned_snapshot_blocks_page_recycling():
         if p >= 0:
             assert not bool(st.free[int(p)]), f"pinned page {p} was recycled!"
     st = paged.end_snapshot(st, jnp.int32(1))
-    st = step(st, 99)            # GC runs inside
-    # after unpin + another step the old pages may free; at minimum the
+    st, _ = paged.reclaim_on_pressure(
+        st, paged.hot_sequences(st, 2), jnp.int32(10 ** 9),
+        gc_policy="slrt")
+    # after unpin + a forced reclaim the old pages may free; at minimum the
     # current tables' pages stay live
     tables, _ = paged.snapshot_view(st, ids, st.mv.now)
     for p in np.asarray(tables).reshape(-1):
         if p >= 0:
             assert not bool(st.free[int(p)])
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random decode/fork/pin/unpin/pressure interleavings
+# ---------------------------------------------------------------------------
+from repro.core.mvgc.pool import EMPTY  # noqa: E402
+from repro.serve.engine import PagedKVEngine  # noqa: E402
+
+PROP_B, PROP_PS, PROP_MP = 3, 2, 3
+
+
+def _mk_engine(policy: str) -> PagedKVEngine:
+    return PagedKVEngine(PROP_B, 12, PROP_PS, PROP_MP, 1, 4,
+                         versions_per_seq=5, reader_lanes=2,
+                         gc_policy=policy, dtype=jnp.float32)
+
+
+def _check_reachability(eng: PagedKVEngine) -> None:
+    """Soundness of the sweep: no page (or table slot) referenced by a table
+    version that a live descriptor version can still reach may sit in the
+    free pool — freeing one would hand a reader's page to another writer."""
+    st = eng.st
+    ts = np.asarray(st.mv.store.ts).reshape(-1)
+    pay = np.asarray(st.mv.store.payload).reshape(-1)
+    tables = np.asarray(st.tables)
+    table_free = np.asarray(st.table_free)
+    page_free = np.asarray(st.free)
+    for tbl_slot in pay[ts != EMPTY]:
+        assert not table_free[tbl_slot], (
+            f"table slot {tbl_slot} is referenced by a live descriptor "
+            f"version but sits in the free pool")
+        for p in tables[tbl_slot]:
+            if p >= 0:
+                assert not page_free[p], (
+                    f"page {p} is reachable via table version {tbl_slot} "
+                    f"but sits in the free bitmap")
+
+
+def _view_sig(eng: PagedKVEngine, t: int) -> tuple:
+    """Exact content signature of the snapshot view at t: per sequence, the
+    visible length and every visible K value (catches both a mutated table
+    row and a recycled-then-overwritten page)."""
+    tbl, ln = eng.view_at(t)
+    tbl, ln = np.asarray(tbl), np.asarray(ln)
+    k = np.asarray(eng.st.k_pages)[:, :, 0, 0]
+    out = []
+    for s in range(tbl.shape[0]):
+        n = int(ln[s])
+        out.append((n, tuple(
+            float(k[int(tbl[s, j // PROP_PS]), j % PROP_PS])
+            for j in range(n))))
+    return tuple(out)
+
+
+def _force_reclaim(eng: PagedKVEngine) -> None:
+    eng.st, _ = paged.reclaim_on_pressure(
+        eng.st, paged.hot_sequences(eng.st, PROP_B), jnp.int32(10 ** 9),
+        gc_policy=eng.gc_policy)
+
+
+@settings(max_examples=4, deadline=None)
+@given(data=hst.data(), policy=hst.sampled_from(["ebr", "steam", "slrt"]))
+def test_random_interleaving_reachability_and_pins(data, policy):
+    """Random decode/fork/reset/pin/unpin/pressure interleavings preserve
+    (a) reachability soundness after *every* operation, (b) byte-exact
+    pinned-snapshot views — including across forced reclaims — and (c) the
+    freed_pages() contract (drained handles are free at drain time)."""
+    eng = _mk_engine(policy)
+    seq_ids = jnp.arange(PROP_B, dtype=jnp.int32)
+    pins = {}          # lane -> (ts, reference signature)
+    token = 0.0
+    steps = data.draw(hst.integers(12, 24))
+    for _ in range(steps):
+        op = data.draw(hst.sampled_from(
+            ["step", "step", "step", "fork", "reset", "pin", "unpin",
+             "pressure"]))
+        if op == "step":
+            token += 1.0
+            base = np.arange(PROP_B, dtype=np.float32) + PROP_B * token
+            kv = jnp.asarray(np.broadcast_to(
+                base[:, None, None], (PROP_B, 1, 4)))
+            m = jnp.asarray(np.array(
+                [data.draw(hst.booleans()) for _ in range(PROP_B)]))
+            eng.step(seq_ids, kv, kv, m)
+        elif op == "fork":
+            src = data.draw(hst.integers(0, PROP_B - 1))
+            dst = data.draw(hst.integers(0, PROP_B - 1))
+            if src != dst:
+                eng.fork(jnp.array([src], jnp.int32),
+                         jnp.array([dst], jnp.int32), jnp.array([True]))
+        elif op == "reset":
+            s = data.draw(hst.integers(0, PROP_B - 1))
+            m = np.zeros(PROP_B, bool)
+            m[s] = True
+            eng.reset(seq_ids, jnp.asarray(m))
+        elif op == "pin":
+            lane = data.draw(hst.integers(0, 1))
+            if lane not in pins:
+                t = eng.pin(lane)
+                pins[lane] = (t, _view_sig(eng, t))
+        elif op == "unpin":
+            if pins:
+                lane = sorted(pins)[0]
+                eng.unpin(lane)
+                del pins[lane]
+        else:
+            _force_reclaim(eng)
+        # (c) freed handles name genuinely-free pages at drain time
+        free_now = np.asarray(eng.st.free)
+        for h in eng.freed_pages():
+            assert free_now[h], f"freed_pages() handed out live page {h}"
+        # (a) sweep soundness after every single operation
+        _check_reachability(eng)
+        # (b) pinned views resolve byte-identically, reclaims included
+        for lane, (t, ref) in pins.items():
+            assert _view_sig(eng, t) == ref, (
+                f"pinned snapshot at t={t} drifted after {op} "
+                f"(policy {policy})")
+    for lane in list(pins):
+        eng.unpin(lane)
+
+
+@settings(max_examples=3, deadline=None)
+@given(data=hst.data())
+def test_pinned_view_survives_forced_reclaim_storm(data):
+    """A pin taken mid-decode stays byte-stable through a storm of resets
+    and back-to-back forced reclaims (the harshest recycling pressure),
+    then releases its pages after unpin + one more reclaim."""
+    eng = _mk_engine("slrt")
+    seq_ids = jnp.arange(PROP_B, dtype=jnp.int32)
+    all_m = jnp.ones((PROP_B,), bool)
+    for i in range(1, 5):
+        kv = jnp.full((PROP_B, 1, 4), float(i), jnp.float32)
+        eng.step(seq_ids, kv, kv, all_m)
+    lane = data.draw(hst.integers(0, 1))
+    t = eng.pin(lane)
+    ref = _view_sig(eng, t)
+    live_at_pin = int(paged.live_pages(eng.st))
+    for i in range(5, 5 + data.draw(hst.integers(3, 8))):
+        kv = jnp.full((PROP_B, 1, 4), float(i), jnp.float32)
+        eng.step(seq_ids, kv, kv, all_m)
+        eng.reset(seq_ids, all_m)
+        _force_reclaim(eng)
+        _check_reachability(eng)
+        assert _view_sig(eng, t) == ref, "pinned view drifted mid-storm"
+    eng.unpin(lane)
+    _force_reclaim(eng)
+    _check_reachability(eng)
+    # with the pin gone the pre-pin pages are collectable: live pages must
+    # drop strictly below the pinned plateau (everything reset + reclaimed)
+    assert int(paged.live_pages(eng.st)) < live_at_pin

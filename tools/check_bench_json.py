@@ -38,6 +38,73 @@ TXN_FIELDS = ("txn_size", "rw_ratio", "txns_committed", "txns_aborted",
 RECLAIM_FIELDS = ("reclaims_triggered", "versions_reclaimed_on_abort",
                   "reclaim_latency_slices", "peak_space_post_reclaim")
 
+SERVE_FIELDS = ("pressure_events", "pages_reclaimed", "peak_pages",
+                "peak_pages_post_reclaim", "page_pool", "page_size",
+                "decode_steps", "tokens_appended", "sequences_completed",
+                "give_ups", "snapshot_pins", "overflow_count",
+                "dropped_retires", "reclaims_triggered")
+
+
+def check_serve_fields(rows, require_pressure: bool):
+    """Validate BENCH_serve reclaim accounting (DESIGN.md §11): every
+    reclaim pass was driven by a pressure event, the post-reclaim peak can
+    never exceed the overall peak, and a cell that never reclaimed must
+    report zero reclaim output.  With ``require_pressure``, the tier with
+    the most reclaims must show the pressure loop actually working —
+    reclaims > 0, pages freed > 0, post-reclaim peak < peak — in a
+    majority of its policy cells."""
+    problems = []
+    for i, r in enumerate(rows):
+        missing = [k for k in SERVE_FIELDS if k not in r]
+        if missing:
+            problems.append(f"row {i} missing serve fields: {missing}")
+            continue
+        for f in SERVE_FIELDS:
+            if r[f] < 0:
+                problems.append(f"row {i}: {f}={r[f]} < 0")
+        if r["reclaims_triggered"] > r["pressure_events"]:
+            problems.append(
+                f"row {i}: reclaims_triggered={r['reclaims_triggered']} > "
+                f"pressure_events={r['pressure_events']} (every reclaim "
+                f"pass must be driven by a pressure event — the LWM rule)")
+        if r["peak_pages_post_reclaim"] > r["peak_pages"]:
+            problems.append(
+                f"row {i}: peak_pages_post_reclaim="
+                f"{r['peak_pages_post_reclaim']} > peak_pages="
+                f"{r['peak_pages']}")
+        if r["peak_pages"] > r["page_pool"]:
+            problems.append(f"row {i}: peak_pages={r['peak_pages']} > "
+                            f"page_pool={r['page_pool']}")
+        if r["reclaims_triggered"] == 0 and (
+                r["pages_reclaimed"] or r["peak_pages_post_reclaim"]):
+            problems.append(
+                f"row {i}: reclaim outputs nonzero (pages="
+                f"{r['pages_reclaimed']}, peak_post="
+                f"{r['peak_pages_post_reclaim']}) with reclaims_triggered=0")
+        if r["peak_space_words"] != r["peak_pages"]:
+            problems.append(
+                f"row {i}: peak_space_words={r['peak_space_words']} != "
+                f"peak_pages={r['peak_pages']} (serve rows measure space "
+                f"in pages)")
+    if require_pressure and not problems:
+        serve_rows = [r for r in rows if "pressure_events" in r]
+        by_fig = {}
+        for r in serve_rows:
+            by_fig.setdefault(r.get("figure"), []).append(r)
+        fig, cells = max(
+            by_fig.items(),
+            key=lambda kv: sum(c["reclaims_triggered"] for c in kv[1]))
+        good = [c for c in cells
+                if c["reclaims_triggered"] > 0 and c["pages_reclaimed"] > 0
+                and c["peak_pages_post_reclaim"] < c["peak_pages"]]
+        if len(good) * 2 <= len(cells):
+            problems.append(
+                f"--require-pressure: only {len(good)}/{len(cells)} cells "
+                f"of {fig} show working pressure reclamation (need a "
+                f"majority with reclaims > 0, pages freed > 0, "
+                f"post-reclaim peak < peak)")
+    return problems
+
 
 def check_txn_fields(rows, min_txn_sizes: int):
     """Validate the schema-v4 read-write-txn row fields (DESIGN.md §8-§10)."""
@@ -119,6 +186,13 @@ def main() -> int:
                     help="validate read-write-txn fields (txn benches)")
     ap.add_argument("--min-txn-sizes", type=int, default=1,
                     help="with --txn: minimum distinct txn write-set sizes")
+    ap.add_argument("--serve", action="store_true",
+                    help="validate serve-bench reclaim accounting "
+                         "(BENCH_serve rows)")
+    ap.add_argument("--require-pressure", action="store_true",
+                    help="with --serve: the most-reclaiming tier must show "
+                         "working pressure reclamation in a majority of "
+                         "policy cells")
     args = ap.parse_args()
 
     payload = json.load(open(args.path))
@@ -145,6 +219,8 @@ def main() -> int:
         problems.append(f"{len(bad)} rows report snapshot violations")
     if args.txn:
         problems.extend(check_txn_fields(rows, args.min_txn_sizes))
+    if args.serve:
+        problems.extend(check_serve_fields(rows, args.require_pressure))
 
     if problems:
         print(f"FAIL {args.path}:")

@@ -39,6 +39,10 @@ KEY_FIELDS = ("figure", "ds", "scheme", "mix", "scan_size", "txn_size",
               "txn_ranges", "zipf", "n_keys", "num_procs", "ops_per_proc",
               "seed")
 SPACE_FIELDS = ("peak_space_words", "end_space_words")
+# serve rows (BENCH_serve) additionally carry page-pool accounting; compared
+# with the same tolerance when both sides have them (absent on sim rows)
+SERVE_SPACE_FIELDS = ("peak_pages", "peak_pages_post_reclaim",
+                      "pages_reclaimed")
 
 
 def row_key(row: Dict[str, Any]) -> Tuple:
@@ -119,7 +123,9 @@ def main() -> int:
         matched += 1
         if waived(fr, waivers):
             continue
-        for sf in SPACE_FIELDS:
+        extra = tuple(sf for sf in SERVE_SPACE_FIELDS
+                      if sf in fr and sf in cr)
+        for sf in SPACE_FIELDS + extra:
             a, b = fr.get(sf, 0), cr.get(sf, 0)
             denom = max(abs(b), 1)
             if abs(a - b) / denom > args.tolerance:

@@ -20,7 +20,10 @@ Per input file, grouped by (structure, mix, zipf) with one line per scheme:
   pressure per scheme (the Fig. 9-style space-under-pressure curves), plus
   reclaim totals (versions reclaimed on abort / reclaim passes) per scheme;
 * ``gc_figures``          — peak/end space per scheme for each gc_comparison
-  figure family (the paper's Figs 4-8 bar view).
+  figure family (the paper's Figs 4-8 bar view);
+* ``pages_vs_pressure``   — BENCH_serve rows (DESIGN.md §11): per tier,
+  peak vs post-reclaim live pages per GC policy against the pool size,
+  plus total pages reclaimed with pressure events annotated.
 
 Degrades gracefully: exits 0 with a notice when matplotlib is missing
 (ENOPLOT) unless ``--require-matplotlib`` is passed (CI passes it, having
@@ -223,6 +226,63 @@ def plot_space_vs_pressure(plt, rows, outdir, stem) -> List[str]:
     return [path]
 
 
+def plot_serve_pressure(plt, rows, outdir, stem) -> List[str]:
+    """BENCH_serve panel (DESIGN.md §11): pages vs pressure in the paged-KV
+    serving stack.  Left: per tier, grouped bars per policy — peak live
+    pages (solid) vs post-reclaim peak (faded), against the pool size
+    (dotted line): the bounded-space claim in page units.  Right: pages
+    reclaimed per policy (bars) vs pressure events (annotated), the
+    trigger-to-yield view of the reclaim loop."""
+    rows = [r for r in rows if "pressure_events" in r]
+    if not rows:
+        return []
+    tiers = sorted({r["mix"] for r in rows})
+    fig, axes = plt.subplots(1, len(tiers) + 1,
+                             figsize=(4.0 * (len(tiers) + 1), 3.6),
+                             squeeze=False)
+    for ax, tier in zip(axes[0], tiers):
+        sub = [r for r in rows if r["mix"] == tier]
+        schemes = _schemes(sub)
+        peak = [next(r["peak_pages"] for r in sub if r["scheme"] == s)
+                for s in schemes]
+        post = [next(r["peak_pages_post_reclaim"] for r in sub
+                     if r["scheme"] == s) for s in schemes]
+        x = range(len(schemes))
+        ax.bar([i - 0.2 for i in x], peak, width=0.4, label="peak",
+               color=[SCHEME_COLORS.get(s) for s in schemes])
+        ax.bar([i + 0.2 for i in x], post, width=0.4, label="post-reclaim",
+               color=[SCHEME_COLORS.get(s) for s in schemes], alpha=0.45)
+        pool = max(r["page_pool"] for r in sub)
+        ax.axhline(pool, ls=":", lw=1.0, color="#555555")
+        ax.annotate(f"pool={pool}", (0, pool), fontsize=6, va="bottom")
+        ax.set_xticks(list(x))
+        ax.set_xticklabels(schemes, fontsize=7)
+        ax.set_title(f"{tier}: peak vs post-reclaim pages", fontsize=8)
+        ax.set_ylabel("pages")
+    ax2 = axes[0][-1]
+    schemes = _schemes(rows)
+    freed = [sum(r["pages_reclaimed"] for r in rows if r["scheme"] == s)
+             for s in schemes]
+    events = [sum(r["pressure_events"] for r in rows if r["scheme"] == s)
+              for s in schemes]
+    bars = ax2.bar(schemes, freed,
+                   color=[SCHEME_COLORS.get(s) for s in schemes])
+    for bar, n in zip(bars, events):
+        ax2.annotate(f"{n} events", (bar.get_x() + bar.get_width() / 2,
+                                     bar.get_height()),
+                     ha="center", va="bottom", fontsize=6)
+    ax2.set_title("pages reclaimed (pressure events annotated)", fontsize=8)
+    ax2.set_ylabel("pages")
+    axes[0][0].legend(fontsize=7)
+    fig.suptitle(f"{stem}: paged-KV pages vs pressure "
+                 "(exhaust ⇒ reclaim ⇒ retry)", fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(outdir, f"{stem}_pages_vs_pressure.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return [path]
+
+
 def plot_gc_figures(plt, rows, outdir, stem) -> List[str]:
     figures = sorted({r["figure"] for r in rows})
     if not figures:
@@ -263,6 +323,8 @@ def render(plt, path: str, outdir: str) -> List[str]:
     written: List[str] = []
     if bench == "gc_comparison":
         written += plot_gc_figures(plt, rows, outdir, stem)
+    elif bench == "serve":
+        written += plot_serve_pressure(plt, rows, outdir, stem)
     else:
         written += plot_space_vs_scan_size(plt, rows, outdir, stem)
         written += plot_space_vs_txn_size(plt, rows, outdir, stem)
