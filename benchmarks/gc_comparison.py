@@ -20,11 +20,12 @@ comparable.
 from __future__ import annotations
 
 import os
+import sys
 import time
 from dataclasses import replace
 from typing import Dict, List
 
-from repro.core.sim.measure import Measurement, write_bench_json
+from repro.core.sim.measure import BenchDriver, Measurement
 from repro.core.sim.workload import PAPER_MIXED, WorkloadConfig, run_workload
 
 SCHEMES = ["ebr", "steam", "dlrt", "slrt", "bbf"]
@@ -75,39 +76,49 @@ FIGURES = {
 }
 
 
-def print_table(name: str, rows: List[Dict]) -> None:
-    print(f"\n== {name} ==")
-    print("  ".join(f"{c:>22s}" for c in TABLE_COLS))
-    for r in rows:
-        print("  ".join(f"{str(r[c]):>22s}" for c in TABLE_COLS))
+# ``fast`` scales the figure workloads down for the per-PR trajectory (the
+# committed BENCH file holds fast rows); ``full`` runs the paper-scale
+# matrix (the weekly bench-standard job)
+TIERS = {
+    "fast": dict(ops_divisor=3, keys_divisor=2, figures=list(FIGURES)),
+    "full": dict(ops_divisor=1, keys_divisor=1, figures=list(FIGURES)),
+}
+
+
+def run_tier(tier: str) -> List[Measurement]:
+    params = TIERS[tier]
+    rows: List[Measurement] = []
+    for name, kw in FIGURES.items():
+        kw = dict(kw)
+        kw["ops_per_proc"] = max(60, kw["ops_per_proc"] // params["ops_divisor"])
+        kw["n_keys"] = max(256, kw["n_keys"] // params["keys_divisor"])
+        rows.extend(run_figure(name, **kw))
+    return rows
+
+
+DRIVER = BenchDriver(
+    bench="gc_comparison", tiers=TIERS, run_tier=run_tier,
+    default_out=DEFAULT_OUT, table_cols=TABLE_COLS, default_tier="fast",
+    col_width=22,
+)
 
 
 def main(fast: bool = True, out: str = DEFAULT_OUT) -> Dict[str, List[Dict]]:
+    """In-process entry (benchmarks/run.py): run one tier, return the
+    per-figure row tables."""
+    from repro.core.sim.measure import tier_meta, write_bench_json
+
+    tier = "fast" if fast else "full"
+    rows = DRIVER.run([tier])
     tables: Dict[str, List[Dict]] = {}
-    measurements: List[Measurement] = []
-    for name, kw in FIGURES.items():
-        if fast:
-            kw = dict(kw)
-            kw["ops_per_proc"] = max(60, kw["ops_per_proc"] // 3)
-            kw["n_keys"] = max(256, kw["n_keys"] // 2)
-        rows = run_figure(name, **kw)
-        measurements.extend(rows)
-        tables[name] = [m.to_row() for m in rows]
-        print_table(name, tables[name])
+    for m in rows:
+        tables.setdefault(m.figure, []).append(m.to_row())
     if out:
-        payload = write_bench_json(out, "gc_comparison", measurements,
-                                   meta={"fast": fast, "figures": list(FIGURES)})
-        print(f"\nwrote {out} ({len(payload['rows'])} rows)")
+        payload = write_bench_json(out, "gc_comparison", rows,
+                                   meta=tier_meta([tier], TIERS))
+        print(f"wrote {out} ({len(payload['rows'])} rows)")
     return tables
 
 
 if __name__ == "__main__":
-    import sys
-
-    from repro.core.sim.measure import parse_out_argv
-
-    out, err = parse_out_argv(sys.argv[1:], DEFAULT_OUT)
-    if err:
-        print(err, file=sys.stderr)
-        raise SystemExit(2)
-    main(fast="--full" not in sys.argv, out=out)
+    raise SystemExit(DRIVER.main(sys.argv[1:]))

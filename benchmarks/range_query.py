@@ -30,12 +30,9 @@ from __future__ import annotations
 import os
 import sys
 import time
-from typing import List
+from typing import List, Optional
 
-from repro.core.sim.measure import (EEMARQ_MIXES, Measurement,
-                                    parse_out_argv, parse_tier_argv,
-                                    print_rows_by_figure, tier_meta,
-                                    write_bench_json)
+from repro.core.sim.measure import BenchDriver, EEMARQ_MIXES, Measurement
 from repro.core.sim.workload import eemarq_matrix, run_workload
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -86,30 +83,26 @@ def run_matrix(tier: str = "standard") -> List[Measurement]:
     return rows
 
 
-def main(argv: List[str]) -> int:
-    tiers, err = parse_tier_argv(argv, TIERS)
-    if err is None:
-        out, err = parse_out_argv(argv, DEFAULT_OUT)
-    if err:
-        print(err, file=sys.stderr)
-        return 2
+def _summarize(rows: List[Measurement]) -> Optional[str]:
+    return (f"{sum(m.scans_validated for m in rows)} scans validated, "
+            f"{sum(m.scan_violations for m in rows)} violations")
 
-    t0 = time.time()
-    rows: List[Measurement] = []
-    for tier in tiers:
-        rows.extend(run_matrix(tier))
-    print_rows_by_figure(rows, TABLE_COLS, width=20)
-    payload = write_bench_json(out, "range_query", rows,
-                               meta=tier_meta(tiers, TIERS))
+
+def _post_check(rows: List[Measurement]) -> List[str]:
     violations = sum(m.scan_violations for m in rows)
-    validated = sum(m.scans_validated for m in rows)
-    print(f"\nwrote {out} ({len(payload['rows'])} rows, "
-          f"{validated} scans validated, {violations} violations, "
-          f"{time.time() - t0:.1f}s)")
-    if violations:
-        print("FAIL: snapshot-consistency violations detected", file=sys.stderr)
-        return 1
-    return 0
+    return ([f"snapshot-consistency violations detected ({violations})"]
+            if violations else [])
+
+
+DRIVER = BenchDriver(
+    bench="range_query", tiers=TIERS, run_tier=run_matrix,
+    default_out=DEFAULT_OUT, table_cols=TABLE_COLS, col_width=20,
+    summarize=_summarize, post_check=_post_check,
+)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    return DRIVER.main(argv)
 
 
 if __name__ == "__main__":

@@ -24,8 +24,12 @@ def main() -> None:
                              f"peak_space={r['peak_space_words']}w"))
 
     space_bounds.main()
-    for r in kernel_bench.main():
-        csv_rows.append((r["name"], r["us_per_call"], r["derived"]))
+    kernel_rows = kernel_bench.DRIVER.run(
+        ["standard" if full else "smoke"])
+    for m in kernel_rows:
+        csv_rows.append((
+            f"{m.figure}/{m.shape}", m.us_fused,
+            f"speedup={m.speedup}x gb_s={m.gb_s}/{m.target_gb_s} target"))
 
     if "--roofline" in sys.argv:
         try:

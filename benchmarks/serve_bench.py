@@ -49,9 +49,7 @@ import jax.numpy as jnp
 
 jax.config.update("jax_platform_name", "cpu")
 
-from repro.core.sim.measure import (ServeMeasurement, parse_out_argv,
-                                    parse_tier_argv, print_rows_by_figure,
-                                    tier_meta, write_bench_json)
+from repro.core.sim.measure import BenchDriver, ServeMeasurement
 from repro.serve.engine import PagedKVEngine
 
 DEFAULT_OUT = os.path.join(
@@ -237,34 +235,30 @@ def run_tier(tier: str) -> List[ServeMeasurement]:
     return rows
 
 
-def main(argv: List[str]) -> int:
-    tiers, err = parse_tier_argv(argv, TIERS)
-    if err is None:
-        out, err = parse_out_argv(argv, DEFAULT_OUT)
-    if err:
-        print(err, file=sys.stderr)
-        return 2
+def _summarize(rows: List[ServeMeasurement]) -> str:
+    return (f"{sum(m.tokens_appended for m in rows)} tokens, "
+            f"{sum(m.pressure_events for m in rows)} pressure events, "
+            f"{sum(m.reclaims_triggered for m in rows)} reclaims freed "
+            f"{sum(m.pages_reclaimed for m in rows)} pages, "
+            f"{sum(m.scans_validated for m in rows)} snapshot checks, "
+            f"{sum(m.scan_violations for m in rows)} violations")
 
-    t0 = time.time()
-    rows: List[ServeMeasurement] = []
-    for tier in tiers:
-        rows.extend(run_tier(tier))
-    print_rows_by_figure(rows, TABLE_COLS, width=16)
-    payload = write_bench_json(out, "serve", rows,
-                               meta=tier_meta(tiers, TIERS))
+
+def _post_check(rows: List[ServeMeasurement]) -> List[str]:
     violations = sum(m.scan_violations for m in rows)
-    print(f"\nwrote {out} ({len(payload['rows'])} rows, "
-          f"{sum(m.tokens_appended for m in rows)} tokens, "
-          f"{sum(m.pressure_events for m in rows)} pressure events, "
-          f"{sum(m.reclaims_triggered for m in rows)} reclaims freed "
-          f"{sum(m.pages_reclaimed for m in rows)} pages, "
-          f"{sum(m.scans_validated for m in rows)} snapshot checks, "
-          f"{violations} violations, {time.time() - t0:.1f}s)")
-    if violations:
-        print("FAIL: pinned-snapshot stability violations detected",
-              file=sys.stderr)
-        return 1
-    return 0
+    return ([f"pinned-snapshot stability violations detected ({violations})"]
+            if violations else [])
+
+
+DRIVER = BenchDriver(
+    bench="serve", schema="serve", tiers=TIERS, run_tier=run_tier,
+    default_out=DEFAULT_OUT, table_cols=TABLE_COLS, col_width=16,
+    summarize=_summarize, post_check=_post_check,
+)
+
+
+def main(argv=None) -> int:
+    return DRIVER.main(argv)
 
 
 if __name__ == "__main__":

@@ -50,9 +50,7 @@ import time
 from typing import List
 
 from repro.core.sim.measure import (EEMARQ_HC_ZIPF, EEMARQ_RW_MIXES,
-                                    Measurement, parse_out_argv,
-                                    parse_tier_argv, print_rows_by_figure,
-                                    tier_meta, write_bench_json)
+                                    BenchDriver, Measurement)
 from repro.core.sim.workload import eemarq_rw_matrix, run_workload
 
 DEFAULT_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -124,39 +122,32 @@ def run_tier(tier: str) -> List[Measurement]:
     return rows
 
 
-def main(argv: List[str]) -> int:
-    tiers, err = parse_tier_argv(argv, TIERS)
-    if err is None:
-        out, err = parse_out_argv(argv, DEFAULT_OUT)
-    if err:
-        print(err, file=sys.stderr)
-        return 2
-
-    t0 = time.time()
-    rows: List[Measurement] = []
-    for tier in tiers:
-        rows.extend(run_tier(tier))
-    print_rows_by_figure(rows, TABLE_COLS, width=16)
-    payload = write_bench_json(out, "txn_mix", rows,
-                               meta=tier_meta(tiers, TIERS))
-    violations = sum(m.scan_violations for m in rows)
-    committed = sum(m.txns_committed for m in rows)
-    aborted = sum(m.txns_aborted for m in rows)
-    validated = sum(m.scans_validated for m in rows)
+def _summarize(rows: List[Measurement]) -> str:
     by_reason = {r: sum(getattr(m, f"aborts_{r}") for m in rows)
                  for r in ("footprint", "wcc", "capacity")}
-    reclaims = sum(m.reclaims_triggered for m in rows)
-    freed = sum(m.versions_reclaimed_on_abort for m in rows)
-    print(f"\nwrote {out} ({len(payload['rows'])} rows, "
-          f"{committed} txns committed / {aborted} aborted {by_reason}, "
-          f"{reclaims} reclaims freed {freed} versions, "
-          f"{validated} scans validated, {violations} violations, "
-          f"{time.time() - t0:.1f}s)")
-    if violations:
-        print("FAIL: snapshot/txn-consistency violations detected",
-              file=sys.stderr)
-        return 1
-    return 0
+    return (f"{sum(m.txns_committed for m in rows)} txns committed / "
+            f"{sum(m.txns_aborted for m in rows)} aborted {by_reason}, "
+            f"{sum(m.reclaims_triggered for m in rows)} reclaims freed "
+            f"{sum(m.versions_reclaimed_on_abort for m in rows)} versions, "
+            f"{sum(m.scans_validated for m in rows)} scans validated, "
+            f"{sum(m.scan_violations for m in rows)} violations")
+
+
+def _post_check(rows: List[Measurement]) -> List[str]:
+    violations = sum(m.scan_violations for m in rows)
+    return ([f"snapshot/txn-consistency violations detected ({violations})"]
+            if violations else [])
+
+
+DRIVER = BenchDriver(
+    bench="txn_mix", schema="txn", tiers=TIERS, run_tier=run_tier,
+    default_out=DEFAULT_OUT, table_cols=TABLE_COLS, col_width=16,
+    summarize=_summarize, post_check=_post_check,
+)
+
+
+def main(argv=None) -> int:
+    return DRIVER.main(argv)
 
 
 if __name__ == "__main__":

@@ -159,6 +159,10 @@ class RunConfig:
     versions_per_slot: int = 8
     reader_lanes: int = 16
     page_size: int = 64
+    # dispatch GC sweeps / snapshot reads to the fused Pallas kernels
+    # (kernel_interpret=True validates them on CPU; set False on TPU)
+    use_kernel: bool = False
+    kernel_interpret: bool = True
     # retire-ring capacity for the RT policies; 0 = sized from the batch.
     # Undersizing it drops retire records (surfaced as ``dropped_retires``
     # in the engine step stats) — DL-RT can never reclaim a dropped version.

@@ -30,8 +30,10 @@ import jax.numpy as jnp
 
 from repro.core.mvgc import announce as ann
 from repro.core.mvgc import pool, rangetracker as rt
-from repro.core.mvgc.needed import needed_mask, needed_intervals
+from repro.core.mvgc.needed import needed_intervals
 from repro.core.mvgc.pool import EMPTY, TS_MAX, VersionStore
+from repro.kernels.compact import ops as compact_ops
+from repro.kernels.version_search import ops as search_ops
 
 POLICIES = ("ebr", "steam", "dlrt", "slrt", "sweep")
 
@@ -71,6 +73,8 @@ def write_step(
     payloads: jax.Array,   # i32[K] new payload handles
     mask: jax.Array,       # bool[K]
     policy: str = "slrt",
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[MVState, jax.Array, jax.Array]:
     """One bulk-synchronous update step: tick the clock, append versions,
     retire the overwritten ones into the ring (RT policies), and return the
@@ -87,7 +91,8 @@ def write_step(
     if policy == "steam":
         # Steam compacts the list *when appending to it* (paper §2): sweep the
         # written slots before the append so reclaimed entries make room.
-        state, freed = _sweep_slots(state, slot_ids, mask)
+        state, freed = _sweep_slots(state, slot_ids, mask,
+                                    use_kernel=use_kernel, interpret=interpret)
     now = state.now + 1
     store = state.store
     S, V = store.ts.shape
@@ -134,10 +139,44 @@ def end_snapshot(state: MVState, lanes: jax.Array, mask: jax.Array) -> MVState:
 
 
 def snapshot_read(
-    state: MVState, slot_ids: jax.Array, t: jax.Array
+    state: MVState,
+    slot_ids: jax.Array,
+    t: jax.Array,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array]:
-    """rtx read: latest payload at-or-before t per slot (search(t))."""
+    """rtx read: latest payload at-or-before t per slot (search(t)).
+
+    ``use_kernel`` dispatches to the Pallas version_search kernel (interpret
+    mode validates it on CPU); the default is the lax masked-argmax path."""
+    if use_kernel:
+        t_b = jnp.broadcast_to(jnp.asarray(t, jnp.int32), slot_ids.shape)
+        return search_ops.search(
+            state.store.ts, state.store.payload, slot_ids, t_b,
+            use_kernel=True, interpret=interpret,
+        )
     return pool.read_at(state.store, slot_ids, t)
+
+
+def snapshot_gather(
+    state: MVState,
+    slot_ids: jax.Array,  # i32[B]
+    t: jax.Array,         # i32[] or i32[B] pinned timestamp(s)
+    values: jax.Array,    # i32[T, M] payload-indexed value rows
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused rtx read: resolve search(t) per slot AND gather the value rows
+    the resolved payloads index — one launch on the kernel path, one fused
+    jit program on the lax path.  Returns ``(rows[B, M], payload[B],
+    found[B])``; rows for not-found slots are EMPTY-filled.  This is the
+    reader-lane primitive `mvkv.paged.snapshot_view` builds on (payload =
+    page-table version index, values = page tables)."""
+    t_b = jnp.broadcast_to(jnp.asarray(t, jnp.int32), slot_ids.shape)
+    return search_ops.search_gather(
+        state.store.ts, state.store.payload, values, slot_ids, t_b,
+        use_kernel=use_kernel, interpret=interpret,
+    )
 
 
 def current_read(state: MVState, slot_ids: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -152,6 +191,8 @@ def gc_step(
     policy: str = "slrt",
     force: bool = False,
     flush_fraction: float = 0.5,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[MVState, jax.Array]:
     """Run the policy's collection pass.  Returns (state', freed_payloads).
 
@@ -167,18 +208,16 @@ def gc_step(
         return state._replace(store=pool.free_entries(state.store, kill)), freed
 
     if policy == "sweep":
-        A = ann.scan(state.board)
-        needed = needed_mask(state.store, A, state.now)
-        kill = ~needed & (state.store.ts != EMPTY)
-        freed = jnp.where(kill, state.store.payload, EMPTY).reshape(-1)
-        return state._replace(store=pool.free_entries(state.store, kill)), freed
+        return _sweep_all_needed(state, use_kernel=use_kernel,
+                                 interpret=interpret)
 
     if policy == "steam":
         # steam does its work on the write path; the periodic GC step is a
         # no-op (dusty corners live until the next append).  force=True is
         # the engine's shutdown/pressure escape hatch: one full sweep.
         if force:
-            return _sweep_all_needed(state)
+            return _sweep_all_needed(state, use_kernel=use_kernel,
+                                     interpret=interpret)
         return state, jnp.full((state.ring.capacity,), EMPTY, jnp.int32)
 
     # dlrt / slrt
@@ -200,7 +239,9 @@ def gc_step(
             # preemptive compaction of implicated slots (SSL compact): may
             # free entries never returned by the tracker.  freed handles can
             # repeat; payload recycling must be idempotent (bitmap set).
-            st, freed2 = _sweep_slots(st, touched, occ)
+            st, freed2 = _sweep_slots(st, touched, occ,
+                                      use_kernel=use_kernel,
+                                      interpret=interpret)
             freed = jnp.concatenate([freed, freed2])
         else:
             freed = jnp.concatenate([freed, jnp.full((B * V,), EMPTY, jnp.int32)])
@@ -212,35 +253,56 @@ def gc_step(
     return jax.lax.cond(do_flush, _flush, _skip, state)
 
 
-def _sweep_all_needed(state: MVState) -> Tuple[MVState, jax.Array]:
+def _sweep_all_needed(
+    state: MVState, use_kernel: bool = False, interpret: bool = True
+) -> Tuple[MVState, jax.Array]:
+    """Full-store needed-sweep: the fused compact primitive over every slab
+    (mask all-true).  The Pallas kernel and the lax path share the same
+    contract (one pass: splice + freed handles + count)."""
+    S, V = state.store.ts.shape
     A = ann.scan(state.board)
-    needed = needed_mask(state.store, A, state.now)
-    kill = ~needed & (state.store.ts != EMPTY)
-    freed = jnp.where(kill, state.store.payload, EMPTY).reshape(-1)
-    return state._replace(store=pool.free_entries(state.store, kill)), freed
+    new_ts, new_succ, new_pay, freed, _ = compact_ops.compact(
+        state.store.ts, state.store.succ, state.store.payload,
+        jnp.ones((S,), bool), A, state.now,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+    store = VersionStore(ts=new_ts, succ=new_succ, payload=new_pay)
+    return state._replace(store=store), freed.reshape(-1)
 
 
 def _sweep_slots(
-    state: MVState, slot_ids: jax.Array, mask: jax.Array
+    state: MVState,
+    slot_ids: jax.Array,
+    mask: jax.Array,
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[MVState, jax.Array]:
-    """needed-sweep restricted to the given slots (steam / slrt locality)."""
+    """needed-sweep restricted to the given slots (steam / slrt locality).
+
+    ``use_kernel`` dispatches the gathered rows through the fused Pallas
+    compaction kernel; otherwise the lax searchsorted form runs (the two are
+    differentially tested in tests/mvgc/test_vstore.py)."""
     A = ann.scan(state.board)
     rows_ts = state.store.ts[slot_ids]
     rows_succ = state.store.succ[slot_ids]
-    needed = needed_intervals(rows_ts, rows_succ, A, state.now)
-    kill = ~needed & (rows_ts != EMPTY) & mask[:, None]
     rows_pay = state.store.payload[slot_ids]
-    freed = jnp.where(kill, rows_pay, EMPTY).reshape(-1)
+    if use_kernel:
+        new_ts, new_succ, new_pay, freed2d, _ = compact_ops.compact(
+            rows_ts, rows_succ, rows_pay, mask, A, state.now,
+            use_kernel=True, interpret=interpret,
+        )
+        freed = freed2d.reshape(-1)
+    else:
+        needed = needed_intervals(rows_ts, rows_succ, A, state.now)
+        kill = ~needed & (rows_ts != EMPTY) & mask[:, None]
+        freed = jnp.where(kill, rows_pay, EMPTY).reshape(-1)
+        new_ts = jnp.where(kill, EMPTY, rows_ts)
+        new_succ = jnp.where(kill, TS_MAX, rows_succ)
+        new_pay = jnp.where(kill, EMPTY, rows_pay)
     store = VersionStore(
-        ts=state.store.ts.at[slot_ids].set(
-            jnp.where(kill, EMPTY, rows_ts), mode="drop"
-        ),
-        succ=state.store.succ.at[slot_ids].set(
-            jnp.where(kill, TS_MAX, rows_succ), mode="drop"
-        ),
-        payload=state.store.payload.at[slot_ids].set(
-            jnp.where(kill, EMPTY, rows_pay), mode="drop"
-        ),
+        ts=state.store.ts.at[slot_ids].set(new_ts, mode="drop"),
+        succ=state.store.succ.at[slot_ids].set(new_succ, mode="drop"),
+        payload=state.store.payload.at[slot_ids].set(new_pay, mode="drop"),
     )
     return state._replace(store=store), freed
 
@@ -300,9 +362,11 @@ def hot_slots(state: MVState, k: int) -> jax.Array:
 
 def reclaim_on_pressure(
     state: MVState,
-    hot: jax.Array,      # i32[K] hot slot ids (-1 = inert lane), cf. hot_slots()
-    deficit: jax.Array,  # i32[]  versions to free (capacity_gate().deficit)
+    hot_keys: jax.Array,  # i32[K] hot slot ids (-1 = inert lane), cf. hot_slots()
+    deficit: jax.Array,   # i32[]  versions to free (capacity_gate().deficit)
     policy: str = "slrt",
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[MVState, jax.Array, jax.Array]:
     """Synchronous pressure response: run the policy's sweep over the hot
     slots first, spilling to the cold slabs only while the deficit is unmet —
@@ -336,7 +400,8 @@ def reclaim_on_pressure(
         state, freed = gc_step(state, policy="ebr")
         return state, freed, live0 - live_versions(state)
     if policy == "sweep":
-        state, freed = _sweep_all_needed(state)
+        state, freed = _sweep_all_needed(state, use_kernel=use_kernel,
+                                         interpret=interpret)
         return state, freed, live0 - live_versions(state)
     if policy == "dlrt":
         state, freed = gc_step(state, policy="dlrt", force=True)
@@ -344,14 +409,18 @@ def reclaim_on_pressure(
 
     # steam / slrt: hot-first, cold spill only while the deficit is unmet
     if policy == "slrt":
-        state, freed_rt = gc_step(state, policy="slrt", force=True)
+        state, freed_rt = gc_step(state, policy="slrt", force=True,
+                                  use_kernel=use_kernel, interpret=interpret)
     else:
         freed_rt = jnp.full((0,), EMPTY, jnp.int32)
-    state, freed_hot = _sweep_slots(state, jnp.maximum(hot, 0), hot >= 0)
+    state, freed_hot = _sweep_slots(state, jnp.maximum(hot_keys, 0),
+                                    hot_keys >= 0, use_kernel=use_kernel,
+                                    interpret=interpret)
     hot_met = (live0 - live_versions(state)) >= deficit
 
     def _cold(st: MVState):
-        return _sweep_all_needed(st)
+        return _sweep_all_needed(st, use_kernel=use_kernel,
+                                 interpret=interpret)
 
     def _skip(st: MVState):
         return st, jnp.full((S * V,), EMPTY, jnp.int32)

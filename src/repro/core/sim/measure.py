@@ -39,13 +39,22 @@ against the committed repo-root files).
 
 Every row carries the keys in ``REQUIRED_ROW_KEYS``; ``tools/
 check_bench_json.py`` (run by the CI ``bench-smoke`` step) enforces this.
+
+Since v4.1 each payload also **declares its row schema** (top-level
+``row_schema`` key) against the registry below (:class:`BenchSchema` /
+:func:`register_bench_schema`): a schema names its row type, identity key
+fields, trajectory-compared value fields, and row invariants, so
+``check_bench_json`` / ``compare_bench`` / ``plot_bench`` dispatch on the
+payload instead of growing per-bench flags.  Legacy payloads without
+``row_schema`` are inferred from their ``bench`` name.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 SCHEMA_VERSION = 4
 
@@ -93,6 +102,14 @@ UNITS = {
                       "peak_pages_post_reclaim is the max live-page count "
                       "sampled immediately after a reclaim pass (0 when no "
                       "reclaim ever ran; DESIGN.md §11)",
+    "kernel_bench": "BENCH_kernel rows time one fused GC/read primitive "
+                    "(us_fused, best-of-iters) against the unfused two-"
+                    "dispatch lax baseline (us_unfused); bytes_moved is the "
+                    "analytic per-launch traffic model, gb_s = bytes_moved / "
+                    "us_fused, and target_gb_s = target_frac * the roofline "
+                    "bandwidth peak for the timed backend (launch/roofline."
+                    "py; DESIGN.md §12).  Deterministic cells (bytes_moved, "
+                    "target_*) are trajectory-gated; timing cells are not.",
 }
 
 REQUIRED_TOP_KEYS = ("bench", "schema_version", "units", "meta", "rows")
@@ -367,6 +384,297 @@ class ServeMeasurement(Measurement):
     dropped_retires: int = 0
 
 
+@dataclass
+class KernelMeasurement(Measurement):
+    """One ``BENCH_kernel.json`` cell: a fused Pallas primitive timed on one
+    shape against the unfused lax baseline, with its roofline-derived
+    bandwidth target (``units["kernel_bench"]``, DESIGN.md §12).
+
+    Base-field mapping: ``scheme`` is the kernel name, ``ds`` is ``slab``,
+    ``mix`` is the tier, ``figure`` is ``<kernel>/<tier>``; throughput/space
+    base fields are zero (kernels have no workload counters)."""
+
+    kernel: str = ""              # compact | search_gather
+    shape: str = ""               # human-readable dim string, e.g. S4096xV16xP256
+    backend: str = "cpu"          # jax backend the timings were taken on
+    path: str = "ref_fused"       # ref_fused (CPU single-jit) | pallas (TPU)
+    bytes_moved: int = 0          # analytic traffic model for one launch
+    iters: int = 0                # timing iterations (best-of)
+    us_fused: float = 0.0         # fused single-dispatch time, microseconds
+    us_unfused: float = 0.0       # unfused two-dispatch lax baseline
+    speedup: float = 0.0          # us_unfused / us_fused
+    gb_s: float = 0.0             # bytes_moved / us_fused
+    peak_bw_gb_s: float = 0.0     # roofline bandwidth peak for `backend`
+    bw_frac: float = 0.0          # gb_s / peak_bw_gb_s (achieved fraction)
+    target_frac: float = 0.0      # stated fraction of peak the kernel targets
+    target_gb_s: float = 0.0      # target_frac * peak_bw_gb_s
+    kernel_validated: bool = False  # Pallas interpret parity checked this run
+
+
+# ---------------------------------------------------------------------------
+# Schema registry: the bench-measurement API
+# ---------------------------------------------------------------------------
+# Every BENCH payload declares one of these; the tools (check_bench_json,
+# compare_bench, plot_bench) dispatch on it.  Registering a new bench row
+# type here is the whole integration — zero tool changes.
+Invariant = Callable[[List[Dict[str, Any]], Dict[str, Any]], List[str]]
+
+
+@dataclass(frozen=True)
+class BenchSchema:
+    """One registered row schema.
+
+    * ``row_type`` — the Measurement subclass whose rows the payload carries;
+    * ``key_fields`` — row identity for trajectory cell matching
+      (``compare_bench`` pairs committed/fresh rows on these);
+    * ``compare_fields`` — the value cells diffed within tolerance on each
+      matched pair (only deterministic fields belong here);
+    * ``required_row_fields`` — row keys required beyond the base contract;
+    * ``invariants`` — callables ``(rows, options) -> [problems]`` run by
+      ``check_bench_json`` (options carries tool strictness knobs, e.g.
+      ``min_txn_sizes``, ``require_pressure``);
+    * ``panel`` — the plot_bench panel family for this schema.
+    """
+
+    name: str
+    row_type: type
+    key_fields: Tuple[str, ...]
+    compare_fields: Tuple[str, ...]
+    required_row_fields: Tuple[str, ...] = ()
+    invariants: Tuple[Invariant, ...] = ()
+    panel: str = "sim"
+
+
+_SCHEMA_REGISTRY: Dict[str, BenchSchema] = {}
+# legacy payloads (no top-level row_schema key) are inferred from bench name
+_BENCH_TO_SCHEMA: Dict[str, str] = {}
+
+
+def register_bench_schema(schema: BenchSchema,
+                          benches: Sequence[str] = ()) -> BenchSchema:
+    """Register a row schema (and the bench names that default to it)."""
+    _SCHEMA_REGISTRY[schema.name] = schema
+    for b in benches:
+        _BENCH_TO_SCHEMA[b] = schema.name
+    return schema
+
+
+def get_bench_schema(name: str) -> BenchSchema:
+    """Look up a registered row schema by name; raises KeyError with the
+    registered names on a miss (tools fail fast on unknown payloads)."""
+    if name not in _SCHEMA_REGISTRY:
+        raise KeyError(
+            f"unknown bench schema {name!r} (have {sorted(_SCHEMA_REGISTRY)})")
+    return _SCHEMA_REGISTRY[name]
+
+
+def schema_of_payload(payload: Dict[str, Any]) -> BenchSchema:
+    """Resolve a payload's declared schema, inferring legacy payloads from
+    their bench name (committed files predate the ``row_schema`` key)."""
+    name = payload.get("row_schema")
+    if name is None:
+        name = _BENCH_TO_SCHEMA.get(payload.get("bench", ""), "sim")
+    return get_bench_schema(name)
+
+
+# -- registered row invariants ----------------------------------------------
+TXN_FIELDS = ("txn_size", "rw_ratio", "txns_committed", "txns_aborted",
+              "abort_rate", "txn_ranges", "point_reads", "aborts_footprint",
+              "aborts_wcc", "aborts_capacity", "txn_giveups",
+              "backoff_slices", "reclaims_triggered",
+              "versions_reclaimed_on_abort", "reclaim_latency_slices",
+              "peak_space_post_reclaim")
+
+RECLAIM_FIELDS = ("reclaims_triggered", "versions_reclaimed_on_abort",
+                  "reclaim_latency_slices", "peak_space_post_reclaim")
+
+SERVE_FIELDS = ("pressure_events", "pages_reclaimed", "peak_pages",
+                "peak_pages_post_reclaim", "page_pool", "page_size",
+                "decode_steps", "tokens_appended", "sequences_completed",
+                "give_ups", "snapshot_pins", "overflow_count",
+                "dropped_retires", "reclaims_triggered")
+
+KERNEL_FIELDS = ("kernel", "shape", "backend", "path", "bytes_moved",
+                 "iters", "us_fused", "us_unfused", "speedup", "gb_s",
+                 "peak_bw_gb_s", "bw_frac", "target_frac", "target_gb_s",
+                 "kernel_validated")
+
+
+def check_txn_rows(rows: List[Dict[str, Any]],
+                   options: Dict[str, Any]) -> List[str]:
+    """txn-schema invariants (DESIGN.md §8-§10): rate/counter consistency,
+    the abort-reason taxonomy partitioning the aborts, and the abort =>
+    reclaim => retry accounting.  ``options["min_txn_sizes"]`` (default 1)
+    sets the minimum distinct write-set sizes with committed txns."""
+    min_txn_sizes = int(options.get("min_txn_sizes", 1))
+    problems = []
+    txn_rows = []
+    for i, r in enumerate(rows):
+        missing = [k for k in TXN_FIELDS if k not in r]
+        if missing:
+            problems.append(f"row {i} missing txn fields: {missing}")
+            continue
+        for f in ("rw_ratio", "abort_rate"):
+            if not (0.0 <= r[f] <= 1.0):
+                problems.append(f"row {i}: {f}={r[f]} outside [0, 1]")
+        attempts = r["txns_committed"] + r["txns_aborted"]
+        if attempts:
+            txn_rows.append(r)
+            if r["txn_size"] < 1:
+                problems.append(f"row {i}: txns ran but txn_size="
+                                f"{r['txn_size']} < 1")
+            if r["txn_ranges"] < 1:
+                problems.append(f"row {i}: txns ran but txn_ranges="
+                                f"{r['txn_ranges']} < 1")
+            if r["rw_ratio"] <= 0.0:
+                problems.append(f"row {i}: txns ran but rw_ratio="
+                                f"{r['rw_ratio']} <= 0")
+            want = round(r["txns_aborted"] / attempts, 4)
+            if abs(r["abort_rate"] - want) > 1e-4:
+                problems.append(f"row {i}: abort_rate {r['abort_rate']} != "
+                                f"aborted/attempts {want}")
+            reasons = (r["aborts_footprint"] + r["aborts_wcc"]
+                       + r["aborts_capacity"])
+            if reasons != r["txns_aborted"]:
+                problems.append(
+                    f"row {i}: abort reasons sum to {reasons} but "
+                    f"txns_aborted={r['txns_aborted']} (taxonomy must "
+                    f"partition the aborts)")
+        # schema v4: abort => reclaim => retry fields (DESIGN.md §10)
+        for f in RECLAIM_FIELDS:
+            if r[f] < 0:
+                problems.append(f"row {i}: {f}={r[f]} < 0")
+        if r["reclaims_triggered"] > r["aborts_capacity"]:
+            problems.append(
+                f"row {i}: reclaims_triggered={r['reclaims_triggered']} > "
+                f"aborts_capacity={r['aborts_capacity']} (only capacity "
+                f"aborts trigger reclaims)")
+        if r["reclaim_latency_slices"] < r["reclaims_triggered"]:
+            problems.append(
+                f"row {i}: reclaim_latency_slices="
+                f"{r['reclaim_latency_slices']} < reclaims_triggered="
+                f"{r['reclaims_triggered']} (every reclaim pass stalls "
+                f"at least one slice)")
+        if r["reclaims_triggered"] == 0 and (
+                r["versions_reclaimed_on_abort"] or
+                r["peak_space_post_reclaim"]):
+            problems.append(
+                f"row {i}: reclaim outputs nonzero "
+                f"(versions={r['versions_reclaimed_on_abort']}, "
+                f"peak_post={r['peak_space_post_reclaim']}) with "
+                f"reclaims_triggered=0")
+    if not txn_rows:
+        problems.append("txn schema: no row has any committed or aborted "
+                        "txns")
+    sizes = {r["txn_size"] for r in txn_rows}
+    if len(sizes) < min_txn_sizes:
+        problems.append(f"only {len(sizes)} distinct txn sizes "
+                        f"({sorted(sizes)}), need >= {min_txn_sizes}")
+    return problems
+
+
+def check_serve_rows(rows: List[Dict[str, Any]],
+                     options: Dict[str, Any]) -> List[str]:
+    """serve-schema invariants (DESIGN.md §11): every reclaim pass was driven
+    by a pressure event, the post-reclaim peak never exceeds the overall
+    peak, and a cell that never reclaimed reports zero reclaim output.  With
+    ``options["require_pressure"]``, the tier with the most reclaims must
+    show the pressure loop actually working — reclaims > 0, pages freed > 0,
+    post-reclaim peak < peak — in a majority of its policy cells."""
+    require_pressure = bool(options.get("require_pressure", False))
+    problems = []
+    for i, r in enumerate(rows):
+        missing = [k for k in SERVE_FIELDS if k not in r]
+        if missing:
+            problems.append(f"row {i} missing serve fields: {missing}")
+            continue
+        for f in SERVE_FIELDS:
+            if r[f] < 0:
+                problems.append(f"row {i}: {f}={r[f]} < 0")
+        if r["reclaims_triggered"] > r["pressure_events"]:
+            problems.append(
+                f"row {i}: reclaims_triggered={r['reclaims_triggered']} > "
+                f"pressure_events={r['pressure_events']} (every reclaim "
+                f"pass must be driven by a pressure event — the LWM rule)")
+        if r["peak_pages_post_reclaim"] > r["peak_pages"]:
+            problems.append(
+                f"row {i}: peak_pages_post_reclaim="
+                f"{r['peak_pages_post_reclaim']} > peak_pages="
+                f"{r['peak_pages']}")
+        if r["peak_pages"] > r["page_pool"]:
+            problems.append(f"row {i}: peak_pages={r['peak_pages']} > "
+                            f"page_pool={r['page_pool']}")
+        if r["reclaims_triggered"] == 0 and (
+                r["pages_reclaimed"] or r["peak_pages_post_reclaim"]):
+            problems.append(
+                f"row {i}: reclaim outputs nonzero (pages="
+                f"{r['pages_reclaimed']}, peak_post="
+                f"{r['peak_pages_post_reclaim']}) with reclaims_triggered=0")
+        if r["peak_space_words"] != r["peak_pages"]:
+            problems.append(
+                f"row {i}: peak_space_words={r['peak_space_words']} != "
+                f"peak_pages={r['peak_pages']} (serve rows measure space "
+                f"in pages)")
+    if require_pressure and not problems:
+        serve_rows = [r for r in rows if "pressure_events" in r]
+        by_fig: Dict[str, List[Dict[str, Any]]] = {}
+        for r in serve_rows:
+            by_fig.setdefault(r.get("figure"), []).append(r)
+        fig, cells = max(
+            by_fig.items(),
+            key=lambda kv: sum(c["reclaims_triggered"] for c in kv[1]))
+        good = [c for c in cells
+                if c["reclaims_triggered"] > 0 and c["pages_reclaimed"] > 0
+                and c["peak_pages_post_reclaim"] < c["peak_pages"]]
+        if len(good) * 2 <= len(cells):
+            problems.append(
+                f"require_pressure: only {len(good)}/{len(cells)} cells "
+                f"of {fig} show working pressure reclamation (need a "
+                f"majority with reclaims > 0, pages freed > 0, "
+                f"post-reclaim peak < peak)")
+    return problems
+
+
+def check_kernel_rows(rows: List[Dict[str, Any]],
+                      options: Dict[str, Any]) -> List[str]:
+    """kernel-schema invariants (DESIGN.md §12): the traffic model and the
+    roofline target are populated and self-consistent on every row, and the
+    fused path beats the unfused lax baseline on every standard/full-tier
+    shape (``options["min_speedup"]``, default 1.0; smoke rows are exempt —
+    they are re-timed per-PR on noisy CI runners)."""
+    min_speedup = float(options.get("min_speedup", 1.0))
+    problems = []
+    for i, r in enumerate(rows):
+        missing = [k for k in KERNEL_FIELDS if k not in r]
+        if missing:
+            problems.append(f"row {i} missing kernel fields: {missing}")
+            continue
+        for f in ("bytes_moved", "iters", "us_fused", "us_unfused",
+                  "gb_s", "peak_bw_gb_s", "target_gb_s"):
+            if not r[f] > 0:
+                problems.append(f"row {i} ({r['figure']}): {f}={r[f]} "
+                                f"must be > 0")
+        if not (0.0 < r["target_frac"] <= 1.0):
+            problems.append(f"row {i}: target_frac={r['target_frac']} "
+                            f"outside (0, 1]")
+        if r["us_fused"] > 0:
+            want = r["us_unfused"] / r["us_fused"]
+            if abs(r["speedup"] - want) > 0.01 * max(want, 1.0):
+                problems.append(f"row {i}: speedup={r['speedup']} != "
+                                f"us_unfused/us_fused={want:.3f}")
+        if r["peak_bw_gb_s"] > 0:
+            want = r["gb_s"] / r["peak_bw_gb_s"]
+            if abs(r["bw_frac"] - want) > 0.01 * max(want, 1e-6):
+                problems.append(f"row {i}: bw_frac={r['bw_frac']} != "
+                                f"gb_s/peak={want:.4f}")
+        if r["mix"] in ("standard", "full") and r["speedup"] < min_speedup:
+            problems.append(
+                f"row {i} ({r['figure']} {r['shape']}): fused path does not "
+                f"beat the unfused lax baseline (speedup={r['speedup']} < "
+                f"{min_speedup})")
+    return problems
+
+
 # ---------------------------------------------------------------------------
 # Shared CLI scaffolding for the tiered bench drivers
 # ---------------------------------------------------------------------------
@@ -432,11 +740,17 @@ def print_rows_by_figure(rows: Sequence[Measurement],
 # BENCH_*.json serialization
 # ---------------------------------------------------------------------------
 def bench_payload(bench: str, measurements: Sequence[Measurement],
-                  meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-    """Assemble the BENCH json payload dict (see the module docstring)."""
+                  meta: Optional[Dict[str, Any]] = None,
+                  schema: Optional[str] = None) -> Dict[str, Any]:
+    """Assemble the BENCH json payload dict (see the module docstring).
+    ``schema`` declares the row schema; omitted, it is resolved from the
+    bench name (every registered bench has a default)."""
+    schema_name = schema or _BENCH_TO_SCHEMA.get(bench, "sim")
+    get_bench_schema(schema_name)  # fail fast on unregistered schemas
     return {
         "bench": bench,
         "schema_version": SCHEMA_VERSION,
+        "row_schema": schema_name,
         "units": dict(UNITS),
         "meta": dict(meta or {}),
         "rows": [m.to_row() for m in measurements],
@@ -445,10 +759,11 @@ def bench_payload(bench: str, measurements: Sequence[Measurement],
 
 def write_bench_json(path: str, bench: str,
                      measurements: Sequence[Measurement],
-                     meta: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+                     meta: Optional[Dict[str, Any]] = None,
+                     schema: Optional[str] = None) -> Dict[str, Any]:
     """Serialize measurements to ``path`` in the BENCH schema; returns the
     payload dict (also used by in-process tests)."""
-    payload = bench_payload(bench, measurements, meta)
+    payload = bench_payload(bench, measurements, meta, schema=schema)
     parent = os.path.dirname(os.path.abspath(path))
     if parent:
         os.makedirs(parent, exist_ok=True)
@@ -460,11 +775,20 @@ def write_bench_json(path: str, bench: str,
 
 def validate_bench_payload(payload: Dict[str, Any]) -> List[str]:
     """Return a list of schema problems (empty = valid).  Shared by
-    ``tools/check_bench_json.py`` and the unit tests."""
+    ``tools/check_bench_json.py`` and the unit tests.  Checks the base row
+    contract plus the declared (or inferred) schema's required row fields;
+    row *invariants* are the tools' job (``BenchSchema.invariants``)."""
     problems = []
     for k in REQUIRED_TOP_KEYS:
         if k not in payload:
             problems.append(f"missing top-level key: {k}")
+    declared = payload.get("row_schema")
+    if declared is not None and declared not in _SCHEMA_REGISTRY:
+        problems.append(f"unknown row_schema: {declared!r} "
+                        f"(registered: {sorted(_SCHEMA_REGISTRY)})")
+        declared = None
+    schema = (get_bench_schema(declared) if declared is not None
+              else schema_of_payload(payload))
     rows = payload.get("rows", [])
     if not rows:
         problems.append("rows is empty")
@@ -472,4 +796,143 @@ def validate_bench_payload(payload: Dict[str, Any]) -> List[str]:
         missing = [k for k in REQUIRED_ROW_KEYS if k not in row]
         if missing:
             problems.append(f"row {i} missing keys: {missing}")
+        extra = [k for k in schema.required_row_fields if k not in row]
+        if extra:
+            problems.append(f"row {i} missing {schema.name}-schema keys: "
+                            f"{extra}")
     return problems
+
+
+# ---------------------------------------------------------------------------
+# BenchDriver: the one CLI entrypoint shared by benchmarks/*.py
+# ---------------------------------------------------------------------------
+class BenchDriver:
+    """Uniform tiered-driver scaffolding: tier selection (``--smoke`` /
+    ``--full`` / ``--tiers a,b``), ``--out PATH``, tier meta, per-figure row
+    tables, and serialization through :func:`write_bench_json` with the
+    declared row schema.  ``run.py`` and the CI bench steps invoke every
+    driver through this one interface::
+
+        DRIVER = BenchDriver(bench="txn_mix", schema="txn", tiers=TIERS,
+                             run_tier=run_tier, default_out="BENCH_txn_mix.json",
+                             table_cols=[...])
+        if __name__ == "__main__":
+            raise SystemExit(DRIVER.main(sys.argv[1:]))
+
+    ``run_tier(name)`` returns the tier's measurement rows; everything else
+    (parsing, printing, meta, writing) is shared here instead of copy-pasted
+    per driver.  ``summarize(rows)`` may return an extra summary line printed
+    after the tables; ``post_check(rows)`` returns failure strings that make
+    the driver exit 1 (e.g. snapshot-consistency violations)."""
+
+    def __init__(self, bench: str, tiers: Dict[str, Any],
+                 run_tier: Callable[[str], List[Measurement]],
+                 default_out: str, table_cols: Sequence[str],
+                 schema: Optional[str] = None,
+                 default_tier: str = "standard", col_width: int = 18,
+                 meta_extra: Optional[Dict[str, Any]] = None,
+                 summarize: Optional[Callable[[List[Measurement]],
+                                              Optional[str]]] = None,
+                 post_check: Optional[Callable[[List[Measurement]],
+                                               List[str]]] = None):
+        self.bench = bench
+        self.tiers = tiers
+        self.run_tier = run_tier
+        self.default_out = default_out
+        self.table_cols = list(table_cols)
+        self.schema = schema or _BENCH_TO_SCHEMA.get(bench, "sim")
+        self.default_tier = default_tier
+        self.col_width = col_width
+        self.meta_extra = dict(meta_extra or {})
+        self.summarize = summarize
+        self.post_check = post_check
+
+    def run(self, tier_names: Sequence[str]) -> List[Measurement]:
+        """Run the named tiers in order and return the concatenated rows
+        (the in-process entry point — ``benchmarks/run.py`` uses this)."""
+        rows: List[Measurement] = []
+        for t in tier_names:
+            rows.extend(self.run_tier(t))
+        return rows
+
+    def main(self, argv: Optional[Sequence[str]] = None) -> int:
+        """CLI entry point: parse ``--smoke``/``--full``/``--tiers``/
+        ``--out``, run the tiers, print per-figure tables + the summary
+        line, write the BENCH json, and return the exit code (nonzero when
+        ``post_check`` reports problems)."""
+        argv = list(sys.argv[1:] if argv is None else argv)
+        names, err = parse_tier_argv(argv, self.tiers, self.default_tier)
+        if err:
+            print(err)
+            return 2
+        out, err = parse_out_argv(argv, self.default_out)
+        if err:
+            print(err)
+            return 2
+        rows = self.run(names)
+        print_rows_by_figure(rows, self.table_cols, self.col_width)
+        meta = tier_meta(names, self.tiers)
+        meta.update(self.meta_extra)
+        payload = write_bench_json(out, self.bench, rows, meta,
+                                   schema=self.schema)
+        problems = validate_bench_payload(payload)
+        extra = self.summarize(rows) if self.summarize else None
+        print(f"\nwrote {out} ({len(rows)} rows, schema {self.schema}"
+              + (f"; {extra}" if extra else "") + ")")
+        if self.post_check:
+            problems = problems + list(self.post_check(rows))
+        if problems:
+            for p in problems:
+                print(f"  FAIL: {p}", file=sys.stderr)
+            return 1
+        return 0
+
+
+# ---------------------------------------------------------------------------
+# The built-in schemas (one per committed BENCH file)
+# ---------------------------------------------------------------------------
+SIM_KEY_FIELDS = ("figure", "ds", "scheme", "mix", "scan_size", "txn_size",
+                  "txn_ranges", "zipf", "n_keys", "num_procs",
+                  "ops_per_proc", "seed")
+SPACE_COMPARE_FIELDS = ("peak_space_words", "end_space_words")
+
+register_bench_schema(BenchSchema(
+    name="sim",
+    row_type=Measurement,
+    key_fields=SIM_KEY_FIELDS,
+    compare_fields=SPACE_COMPARE_FIELDS,
+    panel="sim",
+), benches=("range_query", "gc_comparison"))
+
+register_bench_schema(BenchSchema(
+    name="txn",
+    row_type=Measurement,
+    key_fields=SIM_KEY_FIELDS,
+    compare_fields=SPACE_COMPARE_FIELDS,
+    required_row_fields=TXN_FIELDS,
+    invariants=(check_txn_rows,),
+    panel="sim",
+), benches=("txn_mix",))
+
+register_bench_schema(BenchSchema(
+    name="serve",
+    row_type=ServeMeasurement,
+    key_fields=SIM_KEY_FIELDS,
+    compare_fields=SPACE_COMPARE_FIELDS + (
+        "peak_pages", "peak_pages_post_reclaim", "pages_reclaimed"),
+    required_row_fields=SERVE_FIELDS,
+    invariants=(check_serve_rows,),
+    panel="serve",
+), benches=("serve",))
+
+register_bench_schema(BenchSchema(
+    name="kernel",
+    row_type=KernelMeasurement,
+    key_fields=("figure", "ds", "scheme", "mix", "kernel", "shape", "seed"),
+    # only the deterministic cells are trajectory-gated; timings re-measured
+    # on CI runners would flake any cell-for-cell comparison
+    compare_fields=("bytes_moved", "target_gb_s", "target_frac"),
+    required_row_fields=KERNEL_FIELDS,
+    invariants=(check_kernel_rows,),
+    panel="kernel",
+), benches=("kernel",))

@@ -19,6 +19,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 EMPTY = -1  # plain int: kernels must not capture traced constants
+TS_MAX = 2_147_483_647
 DEFAULT_BLOCK_S = 256
 
 
@@ -62,3 +63,94 @@ def needed_pallas(
         interpret=interpret,
     )(now_arr, ts, succ, ann_sorted)
     return out
+
+
+def _fused_compact_kernel(
+    num_rows,  # python int, closed over: guards padding rows in the count
+    now_ref, ann_ref,                       # scalar-prefetched (SMEM)
+    ts_ref, succ_ref, pay_ref, mask_ref,    # streamed tiles
+    out_ts_ref, out_succ_ref, out_pay_ref, out_freed_ref, out_cnt_ref,
+):
+    ts = ts_ref[...]            # (BR, V)
+    succ = succ_ref[...]        # (BR, V)
+    pay = pay_ref[...]          # (BR, V)
+    m = mask_ref[...]           # (BR,) i32: 1 = row eligible
+    A = ann_ref[...]            # (P,)
+    now = now_ref[0]
+    pinned = (
+        (ts[..., None] <= A[None, None, :]) & (A[None, None, :] < succ[..., None])
+    ).any(-1)
+    need = (ts != EMPTY) & (pinned | (succ > now))
+    kill = (ts != EMPTY) & ~need & (m[:, None] != 0)
+    out_ts_ref[...] = jnp.where(kill, EMPTY, ts)
+    out_succ_ref[...] = jnp.where(kill, TS_MAX, succ)
+    out_pay_ref[...] = jnp.where(kill, EMPTY, pay)
+    out_freed_ref[...] = jnp.where(kill, pay, EMPTY)
+    # per-block freed count; padding rows in the last tile must not count
+    br = ts.shape[0]
+    rid = jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0) + pl.program_id(0) * br
+    out_cnt_ref[0] = (kill & (rid < num_rows)).sum().astype(jnp.int32)
+
+
+def compact_pallas(
+    ts: jax.Array,          # i32[R, V]
+    succ: jax.Array,        # i32[R, V]
+    payload: jax.Array,     # i32[R, V]
+    mask: jax.Array,        # bool[R]
+    ann_sorted: jax.Array,  # i32[P] (TS_MAX padded)
+    now: jax.Array,         # i32[]
+    *,
+    block_r: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+):
+    """Fused needed + splice in one launch (DESIGN.md §12).
+
+    The announcement board and the clock ride in via **scalar prefetch**
+    (``PrefetchScalarGridSpec``): both live in SMEM before the first grid step
+    so every (BLOCK_R, V) descriptor tile is compared against the resident
+    pin vector as it streams through — no separate mask materialization, no
+    second splice dispatch.  Outputs the compacted ts/succ/payload tiles, the
+    freed payload handles and the exact freed count in the same pass.
+    """
+    R, V = ts.shape
+    br = min(block_r, R)
+    steps = pl.cdiv(R, br)
+    now_arr = jnp.reshape(jnp.asarray(now, jnp.int32), (1,))
+    mask_i32 = mask.astype(jnp.int32)
+
+    def tile(i, now_ref, ann_ref):
+        return (i, 0)
+
+    def lane(i, now_ref, ann_ref):
+        return (i,)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((br, V), tile),    # ts
+            pl.BlockSpec((br, V), tile),    # succ
+            pl.BlockSpec((br, V), tile),    # payload
+            pl.BlockSpec((br,), lane),      # row mask
+        ],
+        out_specs=(
+            pl.BlockSpec((br, V), tile),    # ts'
+            pl.BlockSpec((br, V), tile),    # succ'
+            pl.BlockSpec((br, V), tile),    # payload'
+            pl.BlockSpec((br, V), tile),    # freed handles
+            pl.BlockSpec((1,), lane),       # per-block freed count
+        ),
+    )
+    new_ts, new_succ, new_pay, freed, cnt = pl.pallas_call(
+        functools.partial(_fused_compact_kernel, R),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((R, V), jnp.int32),
+            jax.ShapeDtypeStruct((R, V), jnp.int32),
+            jax.ShapeDtypeStruct((R, V), jnp.int32),
+            jax.ShapeDtypeStruct((R, V), jnp.int32),
+            jax.ShapeDtypeStruct((steps,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(now_arr, ann_sorted, ts, succ, payload, mask_i32)
+    return new_ts, new_succ, new_pay, freed, cnt.sum()

@@ -6,8 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.compact.kernel import needed_pallas
-from repro.kernels.compact.ref import needed_ref
+from repro.kernels.compact.kernel import compact_pallas, needed_pallas
+from repro.kernels.compact.ref import compact_ref, needed_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_s"))
@@ -27,3 +27,29 @@ def needed(
             ts, succ, ann_sorted, now, block_s=block_s, interpret=interpret
         ).astype(jnp.bool_)
     return needed_ref(ts, succ, ann_sorted, now)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_r"))
+def compact(
+    ts: jax.Array,
+    succ: jax.Array,
+    payload: jax.Array,
+    mask: jax.Array,
+    ann_sorted: jax.Array,
+    now: jax.Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,   # CPU container: interpret by default; False on TPU
+    block_r: int = 256,
+):
+    """Fused needed + splice over an [R, V] row batch.
+
+    Returns ``(ts', succ', payload', freed, n_freed)`` — see ``compact_ref``
+    for the contract.  Pallas kernel when ``use_kernel``, jnp reference
+    otherwise (the two are parity-tested in tests/kernels)."""
+    if use_kernel:
+        return compact_pallas(
+            ts, succ, payload, mask, ann_sorted, now,
+            block_r=block_r, interpret=interpret,
+        )
+    return compact_ref(ts, succ, payload, mask, ann_sorted, now)

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 EMPTY = jnp.int32(-1)
+TS_MAX = jnp.int32(2_147_483_647)
 
 
 def needed_ref(
@@ -24,3 +25,27 @@ def needed_ref(
         (ts[..., None] <= A[None, None, :]) & (A[None, None, :] < succ[..., None])
     ).any(-1)
     return (ts != EMPTY) & (pinned | (succ > now))
+
+
+def compact_ref(
+    ts: jax.Array,          # i32[R, V] row batch (whole store or gathered slots)
+    succ: jax.Array,        # i32[R, V]
+    payload: jax.Array,     # i32[R, V]
+    mask: jax.Array,        # bool[R]  rows eligible for splicing
+    ann_sorted: jax.Array,  # i32[P] (TS_MAX padded)
+    now: jax.Array,         # i32[]
+):
+    """Fused needed + splice: the compaction contract in one pass.
+
+    Returns ``(ts', succ', payload', freed, n_freed)``: spliced descriptor
+    arrays (killed entries reset to EMPTY/TS_MAX/EMPTY), the freed payload
+    handles (EMPTY holes, same [R, V] layout), and the exact freed count.
+    Rows with ``mask`` False pass through untouched.
+    """
+    need = needed_ref(ts, succ, ann_sorted, now)
+    kill = (ts != EMPTY) & ~need & mask[:, None]
+    new_ts = jnp.where(kill, EMPTY, ts)
+    new_succ = jnp.where(kill, TS_MAX, succ)
+    new_pay = jnp.where(kill, EMPTY, payload)
+    freed = jnp.where(kill, payload, EMPTY)
+    return new_ts, new_succ, new_pay, freed, kill.sum().astype(jnp.int32)

@@ -80,3 +80,78 @@ def search_pallas(
         interpret=interpret,
     )(slot_ids, t, rows_ts, rows_pay)
     return pay, found.astype(jnp.bool_)
+
+
+def _search_gather_kernel(
+    t_ref, ts_ref, pay_ref, val_ref,
+    out_rows_ref, out_pay_ref, out_found_ref,
+):
+    rows_ts = ts_ref[...]          # (BB, V)
+    rows_pay = pay_ref[...]        # (BB, V)
+    t = t_ref[...]                 # (BB,)
+    ok = (rows_ts != EMPTY) & (rows_ts <= t[:, None])
+    masked = jnp.where(ok, rows_ts, NEG_INF_I32)
+    idx = jnp.argmax(masked, axis=1)
+    found = ok.any(axis=1)
+    onehot = jax.nn.one_hot(idx, rows_ts.shape[1], dtype=jnp.int32)
+    pay = jnp.where(found, (rows_pay * onehot).sum(axis=1), EMPTY)
+    out_pay_ref[...] = pay
+    out_found_ref[...] = found.astype(jnp.int8)
+    # gather the resolved value rows: per-query dynamic-slice DMA against the
+    # VMEM-resident values block (the paged-attention page-walk idiom)
+    T = val_ref.shape[0]
+    safe = jnp.clip(pay, 0, T - 1)
+    bb = rows_ts.shape[0]
+
+    def body(i, _):
+        row = pl.load(val_ref, (pl.ds(safe[i], 1), slice(None)))   # (1, M)
+        row = jnp.where(found[i], row, EMPTY)
+        pl.store(out_rows_ref, (pl.ds(i, 1), slice(None)), row)
+        return 0
+
+    jax.lax.fori_loop(0, bb, body, 0)
+
+
+def search_gather_pallas(
+    ts: jax.Array,        # i32[S, V]
+    payload: jax.Array,   # i32[S, V]
+    values: jax.Array,    # i32[T, M]
+    slot_ids: jax.Array,  # i32[B]
+    t: jax.Array,         # i32[B]
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+):
+    """One launch: batched search(t) + gather of the resolved value rows."""
+    S, V = ts.shape
+    T, M = values.shape
+    B = slot_ids.shape[0]
+    bb = min(block_b, B)
+    grid = (pl.cdiv(B, bb),)
+
+    rows_ts = ts[slot_ids]          # [B, V] (pre-gathered; see search_pallas)
+    rows_pay = payload[slot_ids]    # [B, V]
+
+    out_shape = (
+        jax.ShapeDtypeStruct((B, M), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int8),
+    )
+    rows, pay, found = pl.pallas_call(
+        _search_gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),       # timestamps
+            pl.BlockSpec((bb, V), lambda i: (i, 0)),   # gathered ts rows
+            pl.BlockSpec((bb, V), lambda i: (i, 0)),   # gathered payload rows
+            pl.BlockSpec((T, M), lambda i: (0, 0)),    # values (resident)
+        ],
+        out_specs=(
+            pl.BlockSpec((bb, M), lambda i: (i, 0)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((bb,), lambda i: (i,)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(t, rows_ts, rows_pay, values)
+    return rows, pay, found.astype(jnp.bool_)

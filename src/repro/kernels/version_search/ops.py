@@ -7,8 +7,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.version_search.kernel import search_pallas
-from repro.kernels.version_search.ref import search_ref
+from repro.kernels.version_search.kernel import search_gather_pallas, search_pallas
+from repro.kernels.version_search.ref import search_gather_ref, search_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_b"))
@@ -27,3 +27,25 @@ def search(
             ts, payload, slot_ids, t, block_b=block_b, interpret=interpret
         )
     return search_ref(ts, payload, slot_ids, t)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret", "block_b"))
+def search_gather(
+    ts: jax.Array,
+    payload: jax.Array,
+    values: jax.Array,
+    slot_ids: jax.Array,
+    t: jax.Array,
+    *,
+    use_kernel: bool = True,
+    interpret: bool = True,
+    block_b: int = 128,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused batched search(t) + value-row gather: one launch resolves a
+    batch of (slot, ts) snapshot reads AND gathers the payload-indexed rows.
+    Returns ``(rows[B, M], payload[B], found[B])``."""
+    if use_kernel:
+        return search_gather_pallas(
+            ts, payload, values, slot_ids, t, block_b=block_b, interpret=interpret
+        )
+    return search_gather_ref(ts, payload, values, slot_ids, t)

@@ -24,3 +24,22 @@ def search_ref(
     found = ok.any(axis=1)
     pay = jnp.take_along_axis(payload[slot_ids], idx[:, None], axis=1)[:, 0]
     return jnp.where(found, pay, EMPTY), found
+
+
+def search_gather_ref(
+    ts: jax.Array,        # i32[S, V]
+    payload: jax.Array,   # i32[S, V]
+    values: jax.Array,    # i32[T, M] payload-indexed value rows
+    slot_ids: jax.Array,  # i32[B]
+    t: jax.Array,         # i32[B]
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused search(t) + value-row gather: ``(rows[B, M], payload[B], found[B])``.
+
+    The resolved payload handle indexes ``values``; rows for not-found
+    queries are EMPTY-filled.  Payload handles of found versions must be
+    valid row indices into ``values`` (the vstore maintains this invariant).
+    """
+    pay, found = search_ref(ts, payload, slot_ids, t)
+    safe = jnp.clip(pay, 0, values.shape[0] - 1)
+    rows = jnp.where(found[:, None], values[safe], EMPTY)
+    return rows, pay, found

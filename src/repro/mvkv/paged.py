@@ -89,6 +89,8 @@ def append_tokens(
     v_new: jax.Array,      # [B, Hkv, D]
     mask: jax.Array,       # bool[B]
     gc_policy: str = "slrt",
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[PagedKV, jax.Array]:
     """One decode step: write each sequence's token into its current page,
     allocating a fresh page at page boundaries, and commit a **new page-table
@@ -151,7 +153,8 @@ def append_tokens(
     # rides inside `write_step` itself (compact-on-write), so `freed` below
     # is nonempty for steam even without a pressure event.
     mv, freed, ovf = vstore.write_step(
-        st.mv, seq_ids, tslots, commit, policy=gc_policy)
+        st.mv, seq_ids, tslots, commit, policy=gc_policy,
+        use_kernel=use_kernel, interpret=interpret)
     freed_all = freed.reshape(-1)
 
     # a lane whose descriptor append overflowed must hand its table slot back
@@ -177,6 +180,8 @@ def reset_sequence(
     seq_ids: jax.Array,    # i32[B] sequence slots being recycled
     mask: jax.Array,       # bool[B]
     gc_policy: str = "slrt",
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[PagedKV, jax.Array]:
     """Sequence completion: commit a new *empty* page-table version (zero
     pages, zero length) so the slot can serve the next request.  Returns
@@ -194,7 +199,8 @@ def reset_sequence(
         jnp.full((B, st.max_pages), NO_PAGE, jnp.int32), mode="drop")
     lengths_arr = st.lengths.at[tdest].set(0, mode="drop")
     mv, freed, ovf = vstore.write_step(
-        st.mv, seq_ids, tslots, ok, policy=gc_policy)
+        st.mv, seq_ids, tslots, ok, policy=gc_policy,
+        use_kernel=use_kernel, interpret=interpret)
     table_free = tf.at[jnp.where(ok & ovf, tslots, MAX_VER)].set(
         True, mode="drop")
     table_free = table_free.at[
@@ -212,6 +218,8 @@ def fork_sequence(
     dst_ids: jax.Array,    # i32[B] child sequence slots
     mask: jax.Array,       # bool[B]
     gc_policy: str = "slrt",
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[PagedKV, jax.Array]:
     """COW fork: the child's first page-table version *shares every page*
     with the parent's current version, except a *partial last page*, which is
@@ -253,7 +261,8 @@ def fork_sequence(
     lengths_arr = st.lengths.at[tdest].set(src_len, mode="drop")
 
     mv, freed, ovf = vstore.write_step(
-        st.mv, dst_ids, tslots, ok, policy=gc_policy)
+        st.mv, dst_ids, tslots, ok, policy=gc_policy,
+        use_kernel=use_kernel, interpret=interpret)
     table_free = tf.at[jnp.where(ok & ovf, tslots, MAX_VER)].set(
         True, mode="drop")
     table_free = table_free.at[
@@ -301,9 +310,11 @@ def hot_sequences(st: PagedKV, k: int) -> jax.Array:
 
 def reclaim_on_pressure(
     st: PagedKV,
-    hot_seqs: jax.Array,   # i32[K] hot sequence ids (-1 = inert lane)
+    hot_keys: jax.Array,   # i32[K] hot sequence ids (-1 = inert lane)
     deficit: jax.Array,    # i32[] pages wanted (page_pressure().deficit)
     gc_policy: str = "slrt",
+    use_kernel: bool = False,
+    interpret: bool = True,
 ) -> Tuple[PagedKV, jax.Array]:
     """Synchronous page reclamation: hot-sequence-first descriptor compaction
     (`vstore.reclaim_on_pressure`), recycle the table slots whose descriptor
@@ -316,7 +327,8 @@ def reclaim_on_pressure(
     pages."""
     MAX_VER = st.tables.shape[0]
     mv, freed, _ = vstore.reclaim_on_pressure(
-        st.mv, hot_seqs, deficit, policy=gc_policy)
+        st.mv, hot_keys, deficit, policy=gc_policy,
+        use_kernel=use_kernel, interpret=interpret)
     table_free = st.table_free.at[
         jnp.where(freed != EMPTY, freed, MAX_VER)
     ].set(True, mode="drop")
@@ -339,15 +351,23 @@ def _sweep_unreferenced(tables, table_free, page_free) -> jax.Array:
     return ~referenced
 
 
-def snapshot_view(st: PagedKV, seq_ids: jax.Array, t: jax.Array
+def snapshot_view(st: PagedKV, seq_ids: jax.Array, t: jax.Array,
+                  use_kernel: bool = False, interpret: bool = True,
                   ) -> Tuple[jax.Array, jax.Array]:
     """Resolve a pinned timestamp to (page_table[B, MP], lengths[B]) — the
-    rtx read: feed straight into kernels.decode_attention.paged_decode."""
-    tbl_idx, found = vstore.snapshot_read(st.mv, seq_ids, t)
-    tbl_safe = jnp.where(found, tbl_idx, 0)
-    tables = jnp.where(found[:, None], st.tables[tbl_safe], NO_PAGE)
-    # visible length is capped at the snapshot's table version
-    lengths = jnp.where(found, st.lengths[tbl_safe], 0)
+    rtx read: feed straight into kernels.decode_attention.paged_decode.
+
+    Built on the fused search+gather primitive: the visible length rides
+    along as an extra value column, so one launch resolves search(t) AND
+    fetches each hit's page-table row + length (no search-then-index)."""
+    MP = st.max_pages
+    values = jnp.concatenate([st.tables, st.lengths[:, None]], axis=1)
+    rows, _, found = vstore.snapshot_gather(
+        st.mv, seq_ids, t, values, use_kernel=use_kernel, interpret=interpret)
+    # not-found rows come back EMPTY-filled (== NO_PAGE for the table part);
+    # the visible length is capped at the snapshot's table version
+    tables = rows[:, :MP]
+    lengths = jnp.where(found, rows[:, MP], 0)
     return tables, lengths
 
 

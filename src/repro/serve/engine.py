@@ -75,7 +75,8 @@ def prefill_step(state: ServeState, cfg: ModelConfig, run: RunConfig,
     B = tokens.shape[0]
     ids = jnp.arange(B, dtype=jnp.int32)
     mv, _, _ = vstore.write_step(
-        state.mv, ids, lens, jnp.ones((B,), bool), policy=run.gc_policy)
+        state.mv, ids, lens, jnp.ones((B,), bool), policy=run.gc_policy,
+        use_kernel=run.use_kernel, interpret=run.kernel_interpret)
     nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     return ServeState(state.params, cache, lens, mv, nxt)
 
@@ -101,18 +102,22 @@ def decode_one(state: ServeState, cfg: ModelConfig, run: RunConfig,
     ids = jnp.arange(B, dtype=jnp.int32)
     # the update: a new descriptor version (visible length) per sequence
     mv, freed_w, ovf = vstore.write_step(
-        state.mv, ids, new_len, jnp.ones((B,), bool), policy=run.gc_policy)
+        state.mv, ids, new_len, jnp.ones((B,), bool), policy=run.gc_policy,
+        use_kernel=run.use_kernel, interpret=run.kernel_interpret)
     gate = vstore.capacity_gate(mv)
     trigger = gate.under_pressure | ovf.any()
 
     def _pressure(m: vstore.MVState):
         hs = vstore.hot_slots(m, min(8, B))
         m2, _, n = vstore.reclaim_on_pressure(
-            m, hs, gate.deficit, policy=run.gc_policy)
+            m, hs, gate.deficit, policy=run.gc_policy,
+            use_kernel=run.use_kernel, interpret=run.kernel_interpret)
         return m2, jnp.int32(1), n
 
     def _cadence(m: vstore.MVState):
-        m2, freed_g = vstore.gc_step(m, policy=run.gc_policy)
+        m2, freed_g = vstore.gc_step(m, policy=run.gc_policy,
+                                     use_kernel=run.use_kernel,
+                                     interpret=run.kernel_interpret)
         return m2, jnp.int32(0), (freed_g != EMPTY).sum().astype(jnp.int32)
 
     mv, reclaimed, n_freed = jax.lax.cond(trigger, _pressure, _cadence, mv)
@@ -121,7 +126,8 @@ def decode_one(state: ServeState, cfg: ModelConfig, run: RunConfig,
     def _retry(args):
         m, o = args
         m2, _, o2 = vstore.write_step(
-            m, ids, new_len, o, policy=run.gc_policy)
+            m, ids, new_len, o, policy=run.gc_policy,
+            use_kernel=run.use_kernel, interpret=run.kernel_interpret)
         return m2, o2
 
     mv, ovf_left = jax.lax.cond(
@@ -158,13 +164,15 @@ def end_snapshot(state: ServeState, lane: jax.Array) -> ServeState:
 
 
 def snapshot_lengths(state: ServeState, t: jax.Array,
-                     seq_ids: Optional[jax.Array] = None
+                     seq_ids: Optional[jax.Array] = None,
+                     use_kernel: bool = False, interpret: bool = True,
                      ) -> Tuple[jax.Array, jax.Array]:
     """Consistent cross-sequence snapshot: each sequence's visible length as
     of pinned time t (the paper's rtx over many vCAS objects)."""
     if seq_ids is None:
         seq_ids = jnp.arange(state.cache_len.shape[0], dtype=jnp.int32)
-    return vstore.snapshot_read(state.mv, seq_ids, t)
+    return vstore.snapshot_read(state.mv, seq_ids, t,
+                                use_kernel=use_kernel, interpret=interpret)
 
 
 def snapshot_score(state: ServeState, cfg: ModelConfig, tokens: jax.Array,
@@ -237,7 +245,8 @@ class PagedKVEngine:
                  versions_per_seq: int = 8, reader_lanes: int = 8,
                  ring_capacity: int = 0, gc_policy: str = "slrt",
                  page_watermark: float = 0.25, hot_k: int = 8,
-                 max_reclaim_rounds: int = 3, dtype=jnp.float32):
+                 max_reclaim_rounds: int = 3, use_kernel: bool = False,
+                 kernel_interpret: bool = True, dtype=jnp.float32):
         self.st = paged.make_paged_kv(
             num_seqs, num_pages, page_size, max_pages_per_seq, kv_heads,
             head_dim, versions_per_seq=versions_per_seq,
@@ -245,14 +254,18 @@ class PagedKVEngine:
             dtype=dtype)
         self.gc_policy = gc_policy
         self.max_reclaim_rounds = max_reclaim_rounds
+        self.use_kernel = use_kernel
+        self.kernel_interpret = kernel_interpret
+        kern = dict(use_kernel=use_kernel, interpret=kernel_interpret)
         self._append = jax.jit(
-            functools.partial(paged.append_tokens, gc_policy=gc_policy))
+            functools.partial(paged.append_tokens, gc_policy=gc_policy, **kern))
         self._fork = jax.jit(
-            functools.partial(paged.fork_sequence, gc_policy=gc_policy))
+            functools.partial(paged.fork_sequence, gc_policy=gc_policy, **kern))
         self._reset = jax.jit(
-            functools.partial(paged.reset_sequence, gc_policy=gc_policy))
+            functools.partial(paged.reset_sequence, gc_policy=gc_policy, **kern))
         self._reclaim = jax.jit(
-            functools.partial(paged.reclaim_on_pressure, gc_policy=gc_policy))
+            functools.partial(paged.reclaim_on_pressure, gc_policy=gc_policy,
+                              **kern))
         self._gate = jax.jit(
             functools.partial(paged.page_pressure, watermark=page_watermark))
         self._hot = jax.jit(functools.partial(paged.hot_sequences, k=hot_k))
@@ -362,7 +375,9 @@ class PagedKVEngine:
         if seq_ids is None:
             seq_ids = jnp.arange(self.st.mv.store.ts.shape[0],
                                  dtype=jnp.int32)
-        return paged.snapshot_view(self.st, seq_ids, jnp.int32(t))
+        return paged.snapshot_view(self.st, seq_ids, jnp.int32(t),
+                                   use_kernel=self.use_kernel,
+                                   interpret=self.kernel_interpret)
 
     def space(self) -> Dict[str, int]:
         rep = vstore.space_report(self.st.mv)

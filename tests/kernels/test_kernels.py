@@ -7,14 +7,15 @@ import pytest
 jax.config.update("jax_platform_name", "cpu")
 
 from repro.core.mvgc.needed import needed_intervals
+from repro.kernels.compact.ops import compact as compact_fused
 from repro.kernels.compact.ops import needed as compact_needed
-from repro.kernels.compact.ref import needed_ref
+from repro.kernels.compact.ref import compact_ref, needed_ref
 from repro.kernels.decode_attention.ops import paged_decode
 from repro.kernels.decode_attention.ref import paged_decode_ref
 from repro.kernels.flash_prefill.ops import flash_attention
 from repro.kernels.flash_prefill.ref import attention_ref
-from repro.kernels.version_search.ops import search
-from repro.kernels.version_search.ref import search_ref
+from repro.kernels.version_search.ops import search, search_gather
+from repro.kernels.version_search.ref import search_gather_ref, search_ref
 
 TS_MAX = np.iinfo(np.int32).max
 
@@ -63,6 +64,92 @@ class TestCompactKernel:
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def _assert_compact_matches(ts, succ, pay, mask, ann, now, **kw):
+    got = compact_fused(ts, succ, pay, mask, ann, now,
+                        use_kernel=True, interpret=True, **kw)
+    want = compact_ref(ts, succ, pay, mask, ann, now)
+    for g, w, name in zip(got, want, ("ts", "succ", "payload", "freed", "n")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    return got
+
+
+class TestCompactFusedKernel:
+    """Fused needed+splice (DESIGN.md §12) vs the compact_ref oracle."""
+
+    @pytest.mark.parametrize("S,V,P", [(8, 4, 4), (64, 8, 16), (200, 16, 8),
+                                       (33, 5, 3)])
+    def test_matches_ref(self, S, V, P):
+        rng = np.random.default_rng(S * 17 + V)
+        ts, succ, pay = _mk_slabs(rng, S, V)
+        ann = np.sort(rng.choice(np.arange(0, 220), size=P, replace=False)).astype(np.int32)
+        ann[P // 2 :] = TS_MAX
+        ann = jnp.array(np.sort(ann))
+        mask = jnp.array(rng.random(S) < 0.8)
+        _assert_compact_matches(ts, succ, pay, mask, ann, jnp.int32(150))
+
+    def test_block_boundary(self):
+        rng = np.random.default_rng(5)
+        ts, succ, pay = _mk_slabs(rng, 70, 4)  # R not divisible by block_r
+        ann = jnp.array([5, 50, TS_MAX, TS_MAX], jnp.int32)
+        mask = jnp.ones((70,), bool)
+        _assert_compact_matches(ts, succ, pay, mask, ann, jnp.int32(200),
+                                block_r=32)
+
+    def test_empty_chains(self):
+        """All-EMPTY slabs: nothing spliced, nothing freed."""
+        S, V = 16, 4
+        ts = jnp.full((S, V), -1, jnp.int32)
+        succ = jnp.full((S, V), TS_MAX, jnp.int32)
+        pay = jnp.full((S, V), -1, jnp.int32)
+        ann = jnp.full((4,), TS_MAX, jnp.int32)
+        got = _assert_compact_matches(ts, succ, pay, jnp.ones((S,), bool),
+                                      ann, jnp.int32(10))
+        assert int(got[4]) == 0
+
+    def test_all_needed(self):
+        """now == 0: every version is still open (succ > now), so the fused
+        pass must splice nothing even with idle readers."""
+        rng = np.random.default_rng(9)
+        ts, succ, pay = _mk_slabs(rng, 24, 6)
+        ann = jnp.full((4,), TS_MAX, jnp.int32)
+        got = _assert_compact_matches(ts, succ, pay, jnp.ones((24,), bool),
+                                      ann, jnp.int32(0))
+        assert int(got[4]) == 0
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ts))
+
+    def test_single_version_slots(self):
+        """One current version per slot (succ == TS_MAX): always needed."""
+        S, V = 12, 4
+        ts = np.full((S, V), -1, np.int32)
+        pay = np.full((S, V), -1, np.int32)
+        succ = np.full((S, V), TS_MAX, np.int32)
+        for s in range(S):
+            ts[s, s % V] = s + 1
+            pay[s, s % V] = 100 + s
+        ann = jnp.full((4,), TS_MAX, jnp.int32)
+        got = _assert_compact_matches(jnp.array(ts), jnp.array(succ),
+                                      jnp.array(pay), jnp.ones((S,), bool),
+                                      ann, jnp.int32(500))
+        assert int(got[4]) == 0
+
+    def test_pinned_lane_masks(self):
+        """A pin inside a closed interval keeps exactly that version; rows
+        with mask False pass through untouched even when fully dead."""
+        rng = np.random.default_rng(21)
+        ts, succ, pay = _mk_slabs(rng, 40, 6)
+        ann = jnp.array([40, 90, TS_MAX, TS_MAX], jnp.int32)
+        mask = jnp.array([s % 3 != 0 for s in range(40)])
+        got = _assert_compact_matches(ts, succ, pay, mask, ann, jnp.int32(250))
+        new_ts = np.asarray(got[0])
+        for s in range(0, 40, 3):  # masked-off rows byte-identical
+            np.testing.assert_array_equal(new_ts[s], np.asarray(ts)[s])
+        # every version covering a pinned ts survived
+        for a in (40, 90):
+            covered = (np.asarray(ts) <= a) & (a < np.asarray(succ)) \
+                      & (np.asarray(ts) != -1)
+            assert (new_ts[covered] != -1).all()
+
+
 class TestVersionSearchKernel:
     @pytest.mark.parametrize("S,V,B", [(16, 4, 8), (128, 8, 64), (64, 16, 200)])
     def test_matches_ref(self, S, V, B):
@@ -74,6 +161,74 @@ class TestVersionSearchKernel:
         want_p, want_f = search_ref(ts, pay, ids, t)
         np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
         np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+
+
+def _mk_gather_inputs(rng, S, V, M, B, max_ts=200):
+    """Slabs whose payload handles are valid row indices into values[T, M]."""
+    ts, succ, pay = _mk_slabs(rng, S, V, max_ts=max_ts)
+    T = S * V
+    pay_np = np.asarray(pay)
+    remapped = np.where(pay_np != -1,
+                        rng.integers(0, T, pay_np.shape).astype(np.int32), -1)
+    values = jnp.array(rng.integers(0, 10_000, (T, M)), jnp.int32)
+    ids = jnp.array(rng.integers(0, S, B), jnp.int32)
+    t = jnp.array(rng.integers(0, max_ts + 20, B), jnp.int32)
+    return ts, succ, jnp.array(remapped), values, ids, t
+
+
+def _assert_gather_matches(ts, pay, values, ids, t, **kw):
+    got = search_gather(ts, pay, values, ids, t,
+                        use_kernel=True, interpret=True, **kw)
+    want = search_gather_ref(ts, pay, values, ids, t)
+    for g, w, name in zip(got, want, ("rows", "payload", "found")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    return got
+
+
+class TestSearchGatherFusedKernel:
+    """Fused search(t) + value-row gather (DESIGN.md §12) vs its oracle."""
+
+    @pytest.mark.parametrize("S,V,M,B", [(16, 4, 4, 8), (128, 8, 8, 64),
+                                         (64, 16, 16, 200), (33, 5, 3, 17)])
+    def test_matches_ref(self, S, V, M, B):
+        rng = np.random.default_rng(S + V + M + B)
+        ts, _, pay, values, ids, t = _mk_gather_inputs(rng, S, V, M, B)
+        _assert_gather_matches(ts, pay, values, ids, t)
+
+    def test_block_boundary(self):
+        rng = np.random.default_rng(4)
+        ts, _, pay, values, ids, t = _mk_gather_inputs(rng, 32, 4, 4, 70)
+        _assert_gather_matches(ts, pay, values, ids, t, block_b=32)
+
+    def test_before_first_write(self):
+        """Queries below every version ts: not-found, rows EMPTY-filled."""
+        rng = np.random.default_rng(6)
+        ts, _, pay, values, ids, _ = _mk_gather_inputs(rng, 32, 4, 4, 16)
+        t = jnp.zeros((16,), jnp.int32)
+        rows, _, found = _assert_gather_matches(ts, pay, values, ids, t)
+        assert not bool(np.asarray(found).any())
+        assert (np.asarray(rows) == -1).all()
+
+    def test_single_version_slots(self):
+        """Exactly one version per slot: found iff t >= that version's ts,
+        and the gathered row is the payload-indexed values row."""
+        S, V, M = 8, 4, 4
+        ts = np.full((S, V), -1, np.int32)
+        pay = np.full((S, V), -1, np.int32)
+        for s in range(S):
+            ts[s, s % V] = 10 * (s + 1)
+            pay[s, s % V] = s
+        values = jnp.array(np.arange(S * M, dtype=np.int32).reshape(S, M))
+        ids = jnp.arange(S, dtype=jnp.int32)
+        t = jnp.array([10 * (s + 1) - (s % 2) for s in range(S)], jnp.int32)
+        rows, pay_got, found = _assert_gather_matches(
+            jnp.array(ts), jnp.array(pay), values, ids, t)
+        want_found = np.array([s % 2 == 0 for s in range(S)])
+        np.testing.assert_array_equal(np.asarray(found), want_found)
+        for s in range(S):
+            if want_found[s]:
+                np.testing.assert_array_equal(np.asarray(rows)[s],
+                                              np.asarray(values)[s])
 
 
 class TestFlashPrefill:

@@ -36,6 +36,8 @@ Alignment conventions (both layers are deterministic, so parity is exact):
 Identity is the version's payload handle: the driver issues a unique
 integer per write, so "freed sets match" == "surviving payload sets match".
 """
+import dataclasses
+import inspect
 import random
 
 import jax
@@ -303,3 +305,27 @@ def test_parity_interleaved_pins(policy):
     for s in (2, 2):
         w(s)
     sync()
+
+
+# ---------------------------------------------------------------------------
+# API-vocabulary parity: the deployable hook must share the sim's pressure
+# vocabulary *by signature*, not through renaming adapters (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def test_reclaim_on_pressure_signature_parity():
+    """`vstore.reclaim_on_pressure(state, hot_keys, deficit, ...)` uses the
+    exact argument names of `SchemeBase.reclaim_on_pressure(hot_keys,
+    deficit)` and of `ReclaimRequest` — a rename on either side breaks the
+    shared vocabulary this suite replays through."""
+    from repro.core.sim.contention import ReclaimRequest
+    from repro.core.sim.schemes import SchemeBase
+
+    sim_params = list(inspect.signature(
+        SchemeBase.reclaim_on_pressure).parameters)
+    assert sim_params[:3] == ["self", "hot_keys", "deficit"]
+
+    dep_params = list(inspect.signature(
+        vstore.reclaim_on_pressure).parameters)
+    assert dep_params[:3] == ["state", "hot_keys", "deficit"]
+
+    req_fields = [f.name for f in dataclasses.fields(ReclaimRequest)]
+    assert req_fields[:2] == ["deficit", "hot_keys"]

@@ -265,3 +265,88 @@ def test_ebr_cannot_reclaim_middle_versions():
     # EBR keeps every version since the pin; SL-RT keeps pinned + current
     assert ebr_live == 11, f"EBR live={ebr_live}"
     assert slrt_live == 2, f"SL-RT live={slrt_live}"
+
+
+# ---------------------------------------------------------------------------
+# kernel-path differential: use_kernel=True (Pallas, interpret) must produce
+# byte-identical states to the lax fallback on every sweep/pressure/read path
+# (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def _states_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.store.ts), np.asarray(b.store.ts))
+    np.testing.assert_array_equal(np.asarray(a.store.succ), np.asarray(b.store.succ))
+    np.testing.assert_array_equal(np.asarray(a.store.payload),
+                                  np.asarray(b.store.payload))
+    assert int(a.now) == int(b.now)
+    assert int(a.overflow_count) == int(b.overflow_count)
+
+
+@pytest.mark.parametrize("policy", ["slrt", "steam", "sweep"])
+def test_use_kernel_differential_random_trace(policy):
+    """Random retire trace (writes, pins/unpins, gc steps, pressure events)
+    replayed through two states — kernel path vs lax fallback — must keep the
+    descriptor slabs byte-identical at every step, and snapshot reads /
+    gathers must agree."""
+    rng = random.Random(sum(map(ord, policy)))
+    S, V, P = 12, 16, 4
+    kern = vstore.make_state(S, V, P, ring_capacity=64)
+    base = vstore.make_state(S, V, P, ring_capacity=64)
+    values = jnp.arange(S * V * 3, dtype=jnp.int32).reshape(S * V, 3)
+    pins = {}
+    payload_ctr = 0
+
+    for step in range(30):
+        k = rng.randint(1, 3)
+        slots = rng.sample(range(S), k)
+        pls = [payload_ctr + j for j in range(k)]
+        payload_ctr += k
+        ids = jnp.array(slots, jnp.int32)
+        pl = jnp.array([p % (S * V) for p in pls], jnp.int32)
+        m = jnp.ones((k,), bool)
+        kern, _, _ = vstore.write_step(kern, ids, pl, m, policy=policy,
+                                       use_kernel=True, interpret=True)
+        base, _, _ = vstore.write_step(base, ids, pl, m, policy=policy,
+                                       use_kernel=False)
+        if rng.random() < 0.3:
+            lane = rng.randrange(P)
+            if lane in pins:
+                am = jnp.array([True])
+                al = jnp.array([lane], jnp.int32)
+                kern = vstore.end_snapshot(kern, al, am)
+                base = vstore.end_snapshot(base, al, am)
+                del pins[lane]
+            else:
+                al = jnp.array([lane], jnp.int32)
+                am = jnp.array([True])
+                kern, ts_k = vstore.begin_snapshot(kern, al, am)
+                base, ts_b = vstore.begin_snapshot(base, al, am)
+                assert int(ts_k[0]) == int(ts_b[0])
+                pins[lane] = int(ts_k[0])
+        if rng.random() < 0.4:
+            kern, _ = vstore.gc_step(kern, policy=policy, use_kernel=True,
+                                     interpret=True)
+            base, _ = vstore.gc_step(base, policy=policy)
+        if rng.random() < 0.15:
+            hot = vstore.hot_slots(base, 4)
+            deficit = jnp.int32(rng.randint(1, 8))
+            kern, _, nk = vstore.reclaim_on_pressure(
+                kern, hot, deficit, policy=policy, use_kernel=True,
+                interpret=True)
+            base, _, nb = vstore.reclaim_on_pressure(
+                base, hot, deficit, policy=policy)
+            assert int(nk) == int(nb)
+        _states_equal(kern, base)
+
+        # reader-path parity at every pinned timestamp
+        for t in pins.values():
+            q = jnp.arange(S, dtype=jnp.int32)
+            pk, fk = vstore.snapshot_read(kern, q, jnp.int32(t),
+                                          use_kernel=True)
+            pb, fb = vstore.snapshot_read(base, q, jnp.int32(t))
+            np.testing.assert_array_equal(np.asarray(pk), np.asarray(pb))
+            np.testing.assert_array_equal(np.asarray(fk), np.asarray(fb))
+            rk = vstore.snapshot_gather(kern, q, jnp.int32(t), values,
+                                        use_kernel=True)
+            rb = vstore.snapshot_gather(base, q, jnp.int32(t), values)
+            for gk, gb in zip(rk, rb):
+                np.testing.assert_array_equal(np.asarray(gk), np.asarray(gb))

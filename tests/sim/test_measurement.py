@@ -118,6 +118,73 @@ def test_split_mode_measurement_labels():
 
 
 # ---------------------------------------------------------------------------
+# Schema registry: the bench-measurement API (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+def _kernel_measurement(mix="standard", speedup=1.2):
+    from repro.core.sim.measure import KernelMeasurement
+
+    us_f, bytes_moved, peak = 100.0, 1_000_000, 25.0
+    gb_s = round(bytes_moved / us_f / 1e3, 4)
+    return KernelMeasurement(
+        bench="kernel", figure=f"compact/{mix}", ds="slab", scheme="compact",
+        mix=mix, scan_size=0, zipf=0.0, n_keys=256, num_procs=1,
+        ops_per_proc=0, seed=0, updates=0, lookups=0, scans=0, scan_keys=0,
+        total_work=0, ops_per_mwork=0.0, updates_per_mwork=0.0,
+        scan_keys_per_mwork=0.0, peak_space_words=0, peak_versions=0,
+        avg_space_words=0, end_space_words=0, end_versions_per_list=0.0,
+        scans_validated=0, scan_violations=0, wall_s=0.0,
+        kernel="compact", shape="S256xV8xP64", backend="cpu",
+        path="ref_fused", bytes_moved=bytes_moved, iters=10, us_fused=us_f,
+        us_unfused=round(us_f * speedup, 2), speedup=speedup, gb_s=gb_s,
+        peak_bw_gb_s=peak, bw_frac=round(gb_s / peak, 6), target_frac=0.5,
+        target_gb_s=12.5, kernel_validated=True)
+
+
+def test_schema_of_payload_dispatch():
+    from repro.core.sim.measure import bench_payload, schema_of_payload
+
+    p = bench_payload("kernel", [_kernel_measurement()], schema="kernel")
+    assert p["row_schema"] == "kernel"
+    s = schema_of_payload(p)
+    assert s.name == "kernel" and s.panel == "kernel"
+    assert "bytes_moved" in s.compare_fields and "kernel" in s.key_fields
+    # legacy payloads (no row_schema key) infer from the bench name
+    assert schema_of_payload({"bench": "txn_mix"}).name == "txn"
+    assert schema_of_payload({"bench": "serve"}).name == "serve"
+    assert schema_of_payload({"bench": "range_query"}).name == "sim"
+    with pytest.raises(KeyError):
+        bench_payload("kernel", [], schema="no_such_schema")
+
+
+def test_kernel_schema_invariants():
+    from repro.core.sim.measure import bench_payload, schema_of_payload
+
+    good = _kernel_measurement(mix="standard", speedup=1.2)
+    slow_smoke = _kernel_measurement(mix="smoke", speedup=0.9)
+    slow_std = _kernel_measurement(mix="standard", speedup=0.9)
+    payload = bench_payload("kernel", [good, slow_smoke], schema="kernel")
+    assert validate_bench_payload(payload) == []
+    schema = schema_of_payload(payload)
+
+    def run_invariants(rows, options):
+        probs = []
+        for inv in schema.invariants:
+            probs.extend(inv(rows, options))
+        return probs
+
+    # smoke rows are exempt from the speedup gate; standard rows are not
+    assert run_invariants([r for r in payload["rows"]], {}) == []
+    bad = bench_payload("kernel", [slow_std], schema="kernel")
+    probs = run_invariants(bad["rows"], {})
+    assert any("unfused" in p for p in probs)
+    # self-consistency: a doctored speedup cell is caught
+    doctored = dict(good.to_row())
+    doctored["speedup"] = 9.9
+    probs = run_invariants([doctored], {})
+    assert any("speedup" in p for p in probs)
+
+
+# ---------------------------------------------------------------------------
 # Driver + docs-check smoke (what CI's bench-smoke / docs steps run)
 # ---------------------------------------------------------------------------
 def _run(cmd, **kw):

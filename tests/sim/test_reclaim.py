@@ -293,12 +293,13 @@ def test_docs_coverage_tool_passes_on_tentpole_modules():
 
 
 def test_bench_checker_validates_v4_reclaim_fields():
-    """tools/check_bench_json.py --txn must reject inconsistent v4 rows."""
-    sys.path.insert(0, os.path.join(REPO, "tools"))
-    try:
-        from check_bench_json import check_txn_fields
-    finally:
-        sys.path.pop(0)
+    """The txn-schema invariants (registry, DESIGN.md §12) must reject
+    inconsistent v4 rows — what ``check_bench_json`` runs on txn payloads."""
+    from repro.core.sim.measure import check_txn_rows
+
+    def check_txn_fields(rows, min_txn_sizes=0):
+        return check_txn_rows(rows, {"min_txn_sizes": min_txn_sizes})
+
     base = {k: 0 for k in (
         "txn_size", "rw_ratio", "txns_committed", "txns_aborted",
         "abort_rate", "txn_ranges", "point_reads", "aborts_footprint",

@@ -6,21 +6,27 @@ at PR time (run by the CI ``bench-trajectory`` step).
   PYTHONPATH=src python tools/compare_bench.py BENCH_txn_mix.json \\
       /tmp/BENCH_txn_mix.json --tolerance 0.15
 
+The payloads declare their row schema (``measure.schema_of_payload``) and the
+comparison dispatches on it: the schema's ``key_fields`` define row identity
+and its ``compare_fields`` are the value cells diffed per matched pair —
+space words for the sim/txn schemas, page-pool accounting for serve, the
+traffic model and roofline target for kernel.  Adding a bench means
+registering a schema; this tool needs no changes.
+
 Checks, in order:
 
-1. both payloads satisfy the BENCH schema (``measure.validate_bench_payload``)
-   and report zero snapshot violations;
+1. both payloads satisfy the BENCH schema (``measure.validate_bench_payload``),
+   declare the *same* row schema, and report zero snapshot violations;
 2. coverage: the fresh run's scheme and structure sets equal the committed
    file's, and every mix the fresh run emits appears in the committed file
    (the committed file may carry more — e.g. extra tiers);
 3. cell-for-cell: every fresh row must have a committed row with the same
-   identity key (ds, scheme, mix, scan_size, txn_size, zipf, n_keys,
-   num_procs, ops_per_proc, seed) — a missing cell means the committed file
-   is stale and must be regenerated;
-4. for each matched cell, ``peak_space_words`` and ``end_space_words`` must
-   agree within ``--tolerance`` (relative).  The sim is deterministic, so
-   matched cells normally agree exactly; the tolerance absorbs cross-version
-   RNG/library drift.  A knowingly-changed cell can be waived with
+   identity key — a missing cell means the committed file is stale and must
+   be regenerated;
+4. for each matched cell, every compare field must agree within
+   ``--tolerance`` (relative).  The sim is deterministic, so matched cells
+   normally agree exactly; the tolerance absorbs cross-version RNG/library
+   drift.  A knowingly-changed cell can be waived with
    ``--waive field=value[,field=value...]`` (conjunctive; repeatable).
 
 At least ``--require-overlap`` cells must match (default 1) so the value
@@ -30,23 +36,13 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
-from repro.core.sim.measure import validate_bench_payload
-
-KEY_FIELDS = ("figure", "ds", "scheme", "mix", "scan_size", "txn_size",
-              "txn_ranges", "zipf", "n_keys", "num_procs", "ops_per_proc",
-              "seed")
-SPACE_FIELDS = ("peak_space_words", "end_space_words")
-# serve rows (BENCH_serve) additionally carry page-pool accounting; compared
-# with the same tolerance when both sides have them (absent on sim rows)
-SERVE_SPACE_FIELDS = ("peak_pages", "peak_pages_post_reclaim",
-                      "pages_reclaimed")
+from repro.core.sim.measure import schema_of_payload, validate_bench_payload
 
 
-def row_key(row: Dict[str, Any]) -> Tuple:
-    return tuple(row.get(f) for f in KEY_FIELDS)
+def row_key(row: Dict[str, Any], key_fields: Sequence[str]) -> Tuple:
+    return tuple(row.get(f) for f in key_fields)
 
 
 def parse_waive(spec: str) -> Dict[str, str]:
@@ -69,9 +65,9 @@ def main() -> int:
     ap.add_argument("committed", help="BENCH json committed at the repo root")
     ap.add_argument("fresh", help="freshly emitted BENCH json (smoke run)")
     ap.add_argument("--tolerance", type=float, default=0.15,
-                    help="max relative delta on space words (default 0.15)")
+                    help="max relative delta on compare fields (default 0.15)")
     ap.add_argument("--waive", action="append", default=[],
-                    help="field=value[,field=value...] — skip the space "
+                    help="field=value[,field=value...] — skip the value "
                          "comparison for matching rows (repeatable)")
     ap.add_argument("--require-overlap", type=int, default=1,
                     help="minimum matched cells (default 1)")
@@ -93,6 +89,10 @@ def main() -> int:
         problems.append(f"bench name mismatch: committed "
                         f"{committed.get('bench')!r} vs fresh "
                         f"{fresh.get('bench')!r}")
+    schema = schema_of_payload(committed)
+    if schema_of_payload(fresh).name != schema.name:
+        problems.append(f"row schema mismatch: committed {schema.name!r} vs "
+                        f"fresh {schema_of_payload(fresh).name!r}")
     if problems:
         return fail(args, problems)
 
@@ -110,29 +110,28 @@ def main() -> int:
         problems.append(f"fresh mixes {sorted(fmixes - cmixes)} absent from "
                         f"the committed file")
 
-    by_key = {row_key(r): r for r in crows}
+    key_fields = schema.key_fields
+    by_key = {row_key(r, key_fields): r for r in crows}
     matched = 0
     for fr in frows:
-        cr = by_key.get(row_key(fr))
+        cr = by_key.get(row_key(fr, key_fields))
         if cr is None:
             problems.append(
                 "no committed cell for fresh row "
-                + "/".join(f"{f}={fr.get(f)}" for f in KEY_FIELDS[:6])
+                + "/".join(f"{f}={fr.get(f)}" for f in key_fields[:6])
                 + " — committed file is stale, regenerate it")
             continue
         matched += 1
         if waived(fr, waivers):
             continue
-        extra = tuple(sf for sf in SERVE_SPACE_FIELDS
-                      if sf in fr and sf in cr)
-        for sf in SPACE_FIELDS + extra:
+        for sf in schema.compare_fields:
             a, b = fr.get(sf, 0), cr.get(sf, 0)
             denom = max(abs(b), 1)
             if abs(a - b) / denom > args.tolerance:
                 problems.append(
                     f"{sf} drifted {abs(a - b) / denom:.1%} (> "
                     f"{args.tolerance:.0%}) on "
-                    + "/".join(f"{fr.get(f)}" for f in KEY_FIELDS[:6])
+                    + "/".join(f"{fr.get(f)}" for f in key_fields[:6])
                     + f": fresh {a} vs committed {b}")
     if matched < args.require_overlap:
         problems.append(f"only {matched} cells matched; need >= "
@@ -140,8 +139,8 @@ def main() -> int:
 
     if problems:
         return fail(args, problems)
-    print(f"OK {args.committed} vs {args.fresh}: {matched} cells compared "
-          f"within {args.tolerance:.0%}"
+    print(f"OK {args.committed} vs {args.fresh} [{schema.name}]: {matched} "
+          f"cells compared within {args.tolerance:.0%}"
           + (f" ({len(waivers)} waiver(s) active)" if waivers else ""))
     return 0
 

@@ -23,11 +23,16 @@ Per input file, grouped by (structure, mix, zipf) with one line per scheme:
   figure family (the paper's Figs 4-8 bar view);
 * ``pages_vs_pressure``   — BENCH_serve rows (DESIGN.md §11): per tier,
   peak vs post-reclaim live pages per GC policy against the pool size,
-  plus total pages reclaimed with pressure events annotated.
+  plus total pages reclaimed with pressure events annotated;
+* ``kernel_bandwidth``    — BENCH_kernel rows (DESIGN.md §12): per shape,
+  achieved bandwidth against the roofline-derived target, plus the
+  fused-over-unfused speedup per shape.
 
-Degrades gracefully: exits 0 with a notice when matplotlib is missing
-(ENOPLOT) unless ``--require-matplotlib`` is passed (CI passes it, having
-installed matplotlib).
+Panels are selected by the payload's declared row schema
+(``measure.schema_of_payload(...).panel``), so registering a bench schema is
+the whole integration.  Degrades gracefully: exits 0 with a notice when
+matplotlib is missing (ENOPLOT) unless ``--require-matplotlib`` is passed
+(CI passes it, having installed matplotlib).
 """
 from __future__ import annotations
 
@@ -37,6 +42,8 @@ import os
 import sys
 from collections import defaultdict
 from typing import Any, Dict, List
+
+from repro.core.sim.measure import schema_of_payload
 
 SCHEME_ORDER = ("ebr", "steam", "dlrt", "slrt", "bbf")
 # one stable color per scheme across every panel
@@ -315,16 +322,64 @@ def plot_gc_figures(plt, rows, outdir, stem) -> List[str]:
     return [path]
 
 
+def plot_kernel_bandwidth(plt, rows, outdir, stem) -> List[str]:
+    """BENCH_kernel panel (DESIGN.md §12).  Left: achieved bandwidth per
+    shape (bars) against the roofline-derived target (markers) — log scale,
+    the compute-bound compact shapes sit orders below the streaming target
+    on CPU.  Right: fused-over-unfused speedup per shape with the break-even
+    line; standard/full-tier bars must clear it (``check_kernel_rows``)."""
+    rows = [r for r in rows if r.get("kernel")]
+    if not rows:
+        return []
+    colors = {"compact": "#4269d0", "search_gather": "#ff725c"}
+    rows = sorted(rows, key=lambda r: (r["kernel"], r["mix"], r["shape"]))
+    labels = [f"{r['shape']}\n{r['mix']}" for r in rows]
+    x = range(len(rows))
+    fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(11.5, 4.0))
+    ax1.bar(x, [r["gb_s"] for r in rows],
+            color=[colors.get(r["kernel"], "#888888") for r in rows])
+    ax1.scatter(x, [r["target_gb_s"] for r in rows], marker="_", s=220,
+                color="#222222", label="roofline target", zorder=3)
+    ax1.set_yscale("log")
+    ax1.set_ylabel("GB/s (bytes_moved / us_fused)")
+    ax1.set_xticks(list(x))
+    ax1.set_xticklabels(labels, fontsize=6)
+    backend = rows[0].get("backend", "?")
+    ax1.set_title(f"achieved vs target bandwidth ({backend} timings)",
+                  fontsize=9)
+    ax1.legend(fontsize=7)
+    ax2.bar(x, [r["speedup"] for r in rows],
+            color=[colors.get(r["kernel"], "#888888") for r in rows])
+    ax2.axhline(1.0, ls=":", lw=1.0, color="#555555")
+    ax2.set_ylabel("speedup (us_unfused / us_fused)")
+    ax2.set_xticks(list(x))
+    ax2.set_xticklabels(labels, fontsize=6)
+    ax2.set_title("fused over unfused two-dispatch baseline", fontsize=9)
+    handles = [plt.Rectangle((0, 0), 1, 1, color=c)
+               for k, c in colors.items() if any(r["kernel"] == k for r in rows)]
+    names = [k for k in colors if any(r["kernel"] == k for r in rows)]
+    ax2.legend(handles, names, fontsize=7)
+    fig.suptitle(f"{stem}: fused GC kernels vs roofline", fontsize=11)
+    fig.tight_layout()
+    path = os.path.join(outdir, f"{stem}_kernel_bandwidth.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return [path]
+
+
 def render(plt, path: str, outdir: str) -> List[str]:
     payload = json.load(open(path))
     rows = payload.get("rows", [])
     stem = os.path.splitext(os.path.basename(path))[0]
     bench = payload.get("bench", stem)
+    panel = schema_of_payload(payload).panel
     written: List[str] = []
-    if bench == "gc_comparison":
-        written += plot_gc_figures(plt, rows, outdir, stem)
-    elif bench == "serve":
+    if panel == "serve":
         written += plot_serve_pressure(plt, rows, outdir, stem)
+    elif panel == "kernel":
+        written += plot_kernel_bandwidth(plt, rows, outdir, stem)
+    elif bench == "gc_comparison":
+        written += plot_gc_figures(plt, rows, outdir, stem)
     else:
         written += plot_space_vs_scan_size(plt, rows, outdir, stem)
         written += plot_space_vs_txn_size(plt, rows, outdir, stem)
