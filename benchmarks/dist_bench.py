@@ -1,0 +1,302 @@
+"""Sharded multi-host MVGC bench: global-LWM reclamation under pressure
+(DESIGN.md §13).
+
+Drives ``repro.dist.mvgc.ShardedPagedKVEngine`` — continuous decode over a
+fixed batch of sequences **per host**, each restarting (``reset``) on
+reaching a random target length, with per-host page pools undersized exactly
+like ``serve_bench``'s storm tier so pressure events drive the synchronous
+reclaim loop on every shard.  Every GC-bearing step refreshes the mesh-wide
+low-water mark (per-host oldest pin -> staleness aging -> ``reduce="min"``
+ring all-reduce) and threads it through the shard GC as ``extra_pins``.
+
+Snapshot-scoring readers pin on rotating hosts mid-storm: while a pin is
+held — across reclaims on *every* shard — the pinned host's view is
+re-resolved each step and must be byte-identical.  A mismatch means a shard
+reclaimed a version pinned by some host, i.e. the global-LWM protocol is
+broken; rows record it as ``pin_violations`` (must be 0 — the dist schema
+invariant and ``_post_check`` both fail on any).
+
+The ``stall`` tier wedges one host mid-run (its announcement age is frozen
+past the staleness budget via ``virtual_ages_s`` — deterministic, no wall
+clock) while it holds a pin: the stale lane is aged out of the reduction
+(``stale_lanes_aged`` > 0), the LWM advances past its pin
+(``lwm_advances``), and the remaining hosts' reclamation proceeds.  The
+stalled host's *local* board still protects its own shard, so its held
+snapshot stays byte-stable — stalling bounds reclamation, never breaks it.
+
+Rows are ``DistMeasurement`` (serve fields summed over all hosts — space in
+**global pages** — plus the dist fields in ``units["dist_bench"]``).
+
+  python benchmarks/dist_bench.py                  # standard tier
+  python benchmarks/dist_bench.py --smoke          # tiny CI matrix (seconds)
+  python benchmarks/dist_bench.py --tiers smoke,standard,stall
+  python benchmarks/dist_bench.py --out PATH
+
+The committed repo-root ``BENCH_dist.json`` is generated with
+``--tiers smoke,standard,stall`` so the CI ``bench-trajectory`` step can
+compare a fresh ``--smoke`` run cell-for-cell against the committed smoke
+rows while the trajectory keeps the stall tier proving straggler-tolerant
+reclamation (``check_bench_json --require-pressure`` on the dist schema).
+"""
+from __future__ import annotations
+
+import os
+import random
+import sys
+import time
+from typing import Dict, List
+
+# The bench exercises the real reduce="min" ring: fake one host device per
+# shard before jax initializes.  (No-op when jax is already imported — the
+# engine then degrades to the unsharded path, which computes identical
+# values; the flag only decides *where* the reduction runs.)
+if "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4" + (
+            " " + os.environ["XLA_FLAGS"] if "XLA_FLAGS" in os.environ
+            else ""))
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.mvgc.pool import EMPTY
+from repro.core.sim.measure import BenchDriver, DistMeasurement
+from repro.core.telemetry import GCConfig
+from repro.dist.mvgc import ShardedPagedKVEngine
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_dist.json")
+
+POLICIES = ("ebr", "steam", "dlrt", "slrt")
+
+TABLE_COLS = [
+    "scheme", "hosts", "decode_steps", "tokens_appended", "pressure_events",
+    "reclaims_triggered", "pages_reclaimed", "peak_pages", "lwm_advances",
+    "stale_lanes_aged", "stalled_hosts", "give_ups", "scans_validated",
+    "pin_violations", "wall_s",
+]
+
+# Tier geometry: per-host pools undersized against worst-case demand
+# (num_seqs * max_pages_per_seq > num_pages) with shallow version slabs, so
+# every shard actually runs out and reclaims against the global LWM.  The
+# stall tier freezes one host's announcement age past the (finite)
+# staleness budget a third of the way in, while that host holds a pin.
+TIERS = {
+    "smoke": dict(hosts=2, num_seqs=4, num_pages=10, page_size=4,
+                  max_pages_per_seq=3, versions_per_seq=6, steps=18,
+                  min_len=4, max_len=9, pin_every=5, pin_hold=3,
+                  stall_host=None, stall_after=0, seed=0),
+    "standard": dict(hosts=4, num_seqs=4, num_pages=10, page_size=4,
+                     max_pages_per_seq=3, versions_per_seq=6, steps=48,
+                     min_len=4, max_len=10, pin_every=6, pin_hold=3,
+                     stall_host=None, stall_after=0, seed=0),
+    "stall": dict(hosts=4, num_seqs=4, num_pages=10, page_size=4,
+                  max_pages_per_seq=3, versions_per_seq=6, steps=60,
+                  min_len=4, max_len=10, pin_every=6, pin_hold=3,
+                  stall_host=1, stall_after=20, seed=0),
+}
+
+KV_HEADS, HEAD_DIM, READER_LANES = 1, 4, 4
+STALE_AFTER_S = 5.0          # finite staleness budget (stall tier ages past)
+STALLED_AGE_S = 100.0        # injected announcement age of the wedged host
+
+
+def view_checksum(local_st, tables: np.ndarray, lengths: np.ndarray,
+                  page_size: int) -> tuple:
+    """Content fingerprint of one host's resolved snapshot view: the exact
+    K values of every visible token (a wrongly recycled page changes the
+    values even when the table row is unchanged)."""
+    k = np.asarray(local_st.k_pages)[:, :, 0, 0]
+    sums = []
+    for s in range(tables.shape[0]):
+        n = int(lengths[s])
+        vals = tuple(
+            float(k[int(tables[s, j // page_size]), j % page_size])
+            for j in range(n))
+        sums.append((n, vals))
+    return tuple(sums)
+
+
+def run_cell(tier: str, policy: str) -> DistMeasurement:
+    p = TIERS[tier]
+    H, B, ps = p["hosts"], p["num_seqs"], p["page_size"]
+    gc = GCConfig(policy=policy, versions_per_slot=p["versions_per_seq"],
+                  reader_lanes=READER_LANES, stale_after_s=STALE_AFTER_S)
+    eng = ShardedPagedKVEngine(
+        H, B, p["num_pages"], ps, p["max_pages_per_seq"], KV_HEADS,
+        HEAD_DIM, gc=gc, dtype=jnp.float32)
+    rng = random.Random(p["seed"])
+    targets = [[rng.randrange(p["min_len"], p["max_len"] + 1)
+                for _ in range(B)] for _ in range(H)]
+    cur_len = [[0] * B for _ in range(H)]
+    seq_ids = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32), (H, B))
+    live_mask = np.ones((H, B), bool)      # stalled host rows drop out
+
+    tokens = completed = pins = validated = violations = 0
+    # (host, lane) -> [pinned ts, reference checksum, steps left to hold]
+    live_pins: Dict[tuple, list] = {}
+    next_pin = 0
+
+    def check_pins() -> None:
+        nonlocal validated, violations
+        for (host, lane), rec in live_pins.items():
+            ts, ref, _ = rec
+            tbl, ln = eng.view_at(host, ts)
+            now = view_checksum(eng.host_state(host), np.asarray(tbl),
+                                np.asarray(ln), ps)
+            validated += 1
+            if now != ref:
+                violations += 1
+
+    t0 = time.time()
+    for step in range(p["steps"]):
+        if p["stall_host"] is not None and step == p["stall_after"]:
+            # wedge one host: its appends stop, its announcement age jumps
+            # past the staleness budget, but its pin (below) stays held
+            ages = np.zeros((H,), np.float32)
+            ages[p["stall_host"]] = STALLED_AGE_S
+            eng.virtual_ages_s = ages
+            live_mask[p["stall_host"], :] = False
+
+        # one token per live sequence; per-(host, step, seq) distinct
+        # payloads so a cross-host reclaim error shows as a mismatch
+        base = (np.arange(H * B, dtype=np.float32).reshape(H, B)
+                + H * B * (step + 1))
+        kv = jnp.asarray(np.broadcast_to(
+            base[:, :, None, None], (H, B, KV_HEADS, HEAD_DIM)))
+        failed = np.asarray(eng.step(seq_ids, kv, kv,
+                                     jnp.asarray(live_mask)))
+        for h in range(H):
+            for s in range(B):
+                if live_mask[h, s] and not failed[h, s]:
+                    tokens += 1
+                    cur_len[h][s] += 1
+
+        done = np.array([[cur_len[h][s] >= targets[h][s] for s in range(B)]
+                         for h in range(H)]) & live_mask
+        if done.any():
+            eng.reset(seq_ids, jnp.asarray(done))
+            for h, s in zip(*np.nonzero(done)):
+                completed += 1
+                cur_len[h][s] = 0
+                targets[h][s] = rng.randrange(p["min_len"], p["max_len"] + 1)
+
+        # snapshot readers pin on rotating hosts and hold across reclaims
+        if step % p["pin_every"] == 0 and len(live_pins) < H:
+            host = next_pin % H
+            lane = (next_pin // H) % READER_LANES
+            next_pin += 1
+            if (host, lane) not in live_pins:
+                ts = eng.pin(host, lane)
+                tbl, ln = eng.view_at(host, ts)
+                ref = view_checksum(eng.host_state(host), np.asarray(tbl),
+                                    np.asarray(ln), ps)
+                live_pins[(host, lane)] = [ts, ref, p["pin_hold"]]
+                pins += 1
+        check_pins()
+        for key in list(live_pins):
+            live_pins[key][2] -= 1
+            # the stalled host never gets to unpin — that is the point:
+            # only staleness aging moves the LWM past it
+            if live_pins[key][2] <= 0 and key[0] != p["stall_host"]:
+                eng.unpin(*key)
+                del live_pins[key]
+
+    check_pins()                       # final resolve of every held pin
+    for key in list(live_pins):
+        eng.unpin(*key)
+    wall = time.time() - t0
+
+    space = eng.space()
+    stalled = int((eng.ages_s() > eng.budget_s()).sum())
+    ts_arr = np.asarray(eng.st.mv.store.ts)
+    occ = (ts_arr != EMPTY).sum(axis=-1)
+    steps_n = p["steps"]
+    work = tokens + validated
+    return DistMeasurement(
+        bench="dist", figure=f"dist_kv/{tier}", ds="paged_kv",
+        scheme=policy, mix=tier, scan_size=0, zipf=0.0,
+        n_keys=space["page_pool"], num_procs=H * B, ops_per_proc=steps_n,
+        seed=p["seed"], updates=tokens, lookups=0, scans=pins,
+        scan_keys=validated, total_work=work,
+        ops_per_mwork=round((tokens + pins) / max(1, work) * 1e6, 3),
+        updates_per_mwork=round(tokens / max(1, work) * 1e6, 3),
+        scan_keys_per_mwork=round(validated / max(1, work) * 1e6, 3),
+        peak_space_words=space["peak_pages"],
+        peak_versions=int(occ.max()),
+        avg_space_words=0,
+        end_space_words=space["live_pages"],
+        end_versions_per_list=round(int((ts_arr != EMPTY).sum()) / (H * B), 4),
+        scans_validated=validated, scan_violations=violations,
+        wall_s=round(wall, 2),
+        reclaims_triggered=space["reclaims_triggered"],
+        peak_space_post_reclaim=space["peak_pages_post_reclaim"],
+        pressure_events=space["pressure_events"],
+        pages_reclaimed=space["pages_reclaimed"],
+        peak_pages=space["peak_pages"],
+        peak_pages_post_reclaim=space["peak_pages_post_reclaim"],
+        page_pool=space["page_pool"], page_size=ps,
+        decode_steps=steps_n, tokens_appended=tokens,
+        sequences_completed=completed, forks=0,
+        give_ups=space["give_ups"], snapshot_pins=pins,
+        overflow_count=space["overflows"],
+        dropped_retires=space["dropped_retires"],
+        hosts=H, lwm=space["lwm"], lwm_advances=space["lwm_advances"],
+        stale_lanes_aged=space["stale_lanes_aged"], stalled_hosts=stalled,
+        under_pressure_hosts=space["under_pressure_hosts"],
+        pin_violations=violations,
+    )
+
+
+def run_tier(tier: str) -> List[DistMeasurement]:
+    rows = []
+    for policy in POLICIES:
+        m = run_cell(tier, policy)
+        rows.append(m)
+        if m.pin_violations:
+            print(f"!! pin violations in {tier}/{policy}: "
+                  f"{m.pin_violations}", file=sys.stderr)
+    return rows
+
+
+def _summarize(rows: List[DistMeasurement]) -> str:
+    return (f"{sum(m.tokens_appended for m in rows)} tokens over "
+            f"{max(m.hosts for m in rows)} hosts, "
+            f"{sum(m.pressure_events for m in rows)} pressure events, "
+            f"{sum(m.reclaims_triggered for m in rows)} reclaims freed "
+            f"{sum(m.pages_reclaimed for m in rows)} pages, "
+            f"{sum(m.stale_lanes_aged for m in rows)} stale lanes aged, "
+            f"{sum(m.pin_violations for m in rows)} pin violations")
+
+
+def _post_check(rows: List[DistMeasurement]) -> List[str]:
+    problems = []
+    violations = sum(m.pin_violations for m in rows)
+    if violations:
+        problems.append(f"global-LWM pin violations detected ({violations})")
+    stall_rows = [m for m in rows if m.stalled_hosts]
+    for m in stall_rows:
+        if m.stale_lanes_aged == 0:
+            problems.append(
+                f"{m.figure}/{m.scheme}: stalled host never aged out "
+                f"of the LWM reduction")
+    return problems
+
+
+DRIVER = BenchDriver(
+    bench="dist", schema="dist", tiers=TIERS, run_tier=run_tier,
+    default_out=DEFAULT_OUT, table_cols=TABLE_COLS, col_width=14,
+    summarize=_summarize, post_check=_post_check,
+)
+
+
+def main(argv=None) -> int:
+    return DRIVER.main(argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

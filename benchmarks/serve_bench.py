@@ -50,6 +50,7 @@ import jax.numpy as jnp
 jax.config.update("jax_platform_name", "cpu")
 
 from repro.core.sim.measure import BenchDriver, ServeMeasurement
+from repro.core.telemetry import GCConfig
 from repro.serve.engine import PagedKVEngine
 
 DEFAULT_OUT = os.path.join(
@@ -107,8 +108,9 @@ def run_cell(tier: str, policy: str) -> ServeMeasurement:
     B, ps = p["num_seqs"], p["page_size"]
     eng = PagedKVEngine(
         B, p["num_pages"], ps, p["max_pages_per_seq"], KV_HEADS, HEAD_DIM,
-        versions_per_seq=p["versions_per_seq"], reader_lanes=READER_LANES,
-        gc_policy=policy, dtype=jnp.float32)
+        gc=GCConfig(policy=policy, versions_per_slot=p["versions_per_seq"],
+                    reader_lanes=READER_LANES),
+        dtype=jnp.float32)
     rng = random.Random(p["seed"])
     targets = [rng.randrange(p["min_len"], p["max_len"] + 1)
                for _ in range(B)]

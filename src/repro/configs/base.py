@@ -10,6 +10,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+from repro.core.telemetry import GCConfig
+
 # block kinds understood by repro.models.blocks
 KINDS = ("attn", "local", "mlstm", "slstm", "rglru")
 
@@ -154,7 +156,12 @@ class RunConfig:
     weight_decay: float = 0.1
     grad_clip: float = 1.0
     grad_compression: bool = False
-    # serving / MVGC
+    # serving / MVGC.  ``gc`` is the redesigned home of every GC knob
+    # (repro.core.telemetry.GCConfig, DESIGN.md §13); the flat fields below
+    # remain for one release as deprecated spellings.  When ``gc`` is not
+    # passed, ``__post_init__`` assembles it from them, so the two views
+    # never disagree — engines read ``run.gc`` only.
+    gc: Optional[GCConfig] = None
     gc_policy: str = "slrt"
     versions_per_slot: int = 8
     reader_lanes: int = 16
@@ -167,6 +174,28 @@ class RunConfig:
     # Undersizing it drops retire records (surfaced as ``dropped_retires``
     # in the engine step stats) — DL-RT can never reclaim a dropped version.
     ring_capacity: int = 0
+
+    def __post_init__(self):
+        if self.gc is None:
+            gc = GCConfig(
+                policy=self.gc_policy,
+                versions_per_slot=self.versions_per_slot,
+                reader_lanes=self.reader_lanes,
+                ring_capacity=self.ring_capacity,
+                use_kernel=self.use_kernel,
+                kernel_interpret=self.kernel_interpret,
+            )
+            object.__setattr__(self, "gc", gc)
+        else:
+            # keep the deprecated flat fields readable either way
+            object.__setattr__(self, "gc_policy", self.gc.policy)
+            object.__setattr__(self, "versions_per_slot",
+                               self.gc.versions_per_slot)
+            object.__setattr__(self, "reader_lanes", self.gc.reader_lanes)
+            object.__setattr__(self, "ring_capacity", self.gc.ring_capacity)
+            object.__setattr__(self, "use_kernel", self.gc.use_kernel)
+            object.__setattr__(self, "kernel_interpret",
+                               self.gc.kernel_interpret)
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

@@ -16,7 +16,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mvgc.pool import EMPTY
+from repro.core.mvgc.pool import EMPTY, TS_MAX
 from repro.core.mvgc.needed import sort_announcements
 
 
@@ -60,6 +60,19 @@ def oldest(board: AnnounceBoard, now: jax.Array) -> jax.Array:
     """Oldest pinned timestamp, or ``now`` if nothing is pinned (the EBR
     epoch boundary)."""
     active = board.slots != EMPTY
-    vals = jnp.where(active, board.slots, jnp.int32(2_147_483_647))
+    vals = jnp.where(active, board.slots, TS_MAX)
     m = vals.min()
     return jnp.where(active.any(), m, now).astype(jnp.int32)
+
+
+def lwm(board: AnnounceBoard) -> jax.Array:
+    """This board's low-water-mark contribution: the oldest pinned
+    timestamp, or the ``TS_MAX`` sentinel when nothing is pinned.
+
+    Unlike :func:`oldest` (whose no-pins fallback is the *local* ``now``),
+    the sentinel is host-independent — it is the identity of ``min``, so a
+    pin-free host drops out of the cross-host
+    ``make_ring_all_reduce(reduce="min")`` reduction instead of capping the
+    global LWM at its own clock (DESIGN.md §13)."""
+    return jnp.where(board.slots != EMPTY, board.slots, TS_MAX) \
+        .min().astype(jnp.int32)

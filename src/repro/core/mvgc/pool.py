@@ -154,6 +154,18 @@ def read_current(
     return jnp.where(found, payload, EMPTY), found
 
 
+def epoch_kill_mask(store: VersionStore, bound: jax.Array) -> jax.Array:
+    """bool[S, V]: entries whose interval closed strictly before ``bound``
+    (``succ <= bound`` and valid) — the EBR epoch-quiescence splice set.
+
+    ``bound`` is the reclamation low-water mark: locally the oldest pin on
+    this host's board (or ``now`` when pin-free), and under the sharded
+    stack the mesh-wide ``min`` of every host's contribution, clamped by
+    any injected ``extra_pins`` — a version closed before *every* pin in
+    the system can never be read again (DESIGN.md §13)."""
+    return (store.succ <= bound) & (store.ts != EMPTY)
+
+
 def free_entries(store: VersionStore, kill: jax.Array) -> VersionStore:
     """Free every entry where kill[S, V] is True (the splice)."""
     return VersionStore(

@@ -19,6 +19,13 @@ the paper's scheme menu as GC *policies* over identical state:
 
 All functions are jit/shard_map friendly: fixed shapes, masked updates, no
 host control flow on traced values.  Policy strings specialize at trace time.
+
+Every GC entry point takes an optional ``extra_pins`` array of externally
+announced timestamps (``TS_MAX`` sentinel = no pin) that is honoured exactly
+like a local board lane.  Single-host callers leave it ``None`` (bit-for-bit
+the pre-existing behaviour); the sharded stack (``repro.dist.mvgc``)
+injects the mesh-wide low-water mark so no shard reclaims a version pinned
+by *any* host (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -30,8 +37,9 @@ import jax.numpy as jnp
 
 from repro.core.mvgc import announce as ann
 from repro.core.mvgc import pool, rangetracker as rt
-from repro.core.mvgc.needed import needed_intervals
+from repro.core.mvgc.needed import needed_intervals, sort_announcements
 from repro.core.mvgc.pool import EMPTY, TS_MAX, VersionStore
+from repro.core.telemetry import GCConfig, PressureSignal
 from repro.kernels.compact import ops as compact_ops
 from repro.kernels.version_search import ops as search_ops
 
@@ -49,10 +57,23 @@ class MVState(NamedTuple):
 
 def make_state(
     num_slots: int,
-    versions_per_slot: int,
-    num_reader_lanes: int,
+    versions_per_slot: Optional[int] = None,
+    num_reader_lanes: Optional[int] = None,
     ring_capacity: Optional[int] = None,
+    *,
+    gc: Optional[GCConfig] = None,
 ) -> MVState:
+    """Build an empty MVState.  Sizing comes from the positional args when
+    given, else from ``gc`` (:class:`repro.core.telemetry.GCConfig`), so both
+    the legacy ``make_state(S, V, P)`` call shape and the redesigned
+    ``make_state(S, gc=cfg)`` shape work."""
+    cfg = gc if gc is not None else GCConfig()
+    if versions_per_slot is None:
+        versions_per_slot = cfg.versions_per_slot
+    if num_reader_lanes is None:
+        num_reader_lanes = cfg.reader_lanes
+    if ring_capacity is None:
+        ring_capacity = cfg.ring_capacity
     ring_capacity = ring_capacity or max(64, num_slots // 2)
     return MVState(
         store=pool.make_store(num_slots, versions_per_slot),
@@ -75,6 +96,7 @@ def write_step(
     policy: str = "slrt",
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[MVState, jax.Array, jax.Array]:
     """One bulk-synchronous update step: tick the clock, append versions,
     retire the overwritten ones into the ring (RT policies), and return the
@@ -92,7 +114,8 @@ def write_step(
         # Steam compacts the list *when appending to it* (paper §2): sweep the
         # written slots before the append so reclaimed entries make room.
         state, freed = _sweep_slots(state, slot_ids, mask,
-                                    use_kernel=use_kernel, interpret=interpret)
+                                    use_kernel=use_kernel, interpret=interpret,
+                                    extra_pins=extra_pins)
     now = state.now + 1
     store = state.store
     S, V = store.ts.shape
@@ -186,6 +209,31 @@ def current_read(state: MVState, slot_ids: jax.Array) -> Tuple[jax.Array, jax.Ar
 # ---------------------------------------------------------------------------
 # GC step
 # ---------------------------------------------------------------------------
+def _ann_scan(state: MVState, extra_pins: Optional[jax.Array]) -> jax.Array:
+    """Sorted announcement snapshot for needed(), with any external pins
+    appended as extra virtual lanes.
+
+    ``extra_pins`` entries use the same vocabulary as board lanes: a real
+    timestamp pins it, ``TS_MAX`` (or ``EMPTY``) pins nothing — ``needed()``
+    treats both sentinels as inert, so padding is free.  The sharded stack
+    passes the mesh-wide LWM here (DESIGN.md §13)."""
+    if extra_pins is None:
+        return ann.scan(state.board)
+    extra = jnp.atleast_1d(jnp.asarray(extra_pins, jnp.int32))
+    return sort_announcements(
+        jnp.concatenate([state.board.slots, extra]))
+
+
+def _ebr_bound(state: MVState, extra_pins: Optional[jax.Array]) -> jax.Array:
+    """EBR epoch boundary: oldest local pin (or ``now``), clamped by the
+    oldest external pin (``TS_MAX`` sentinels drop out of the min)."""
+    bound = ann.oldest(state.board, state.now)
+    if extra_pins is not None:
+        extra = jnp.atleast_1d(jnp.asarray(extra_pins, jnp.int32))
+        bound = jnp.minimum(bound, extra.min())
+    return bound
+
+
 def gc_step(
     state: MVState,
     policy: str = "slrt",
@@ -193,23 +241,26 @@ def gc_step(
     flush_fraction: float = 0.5,
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[MVState, jax.Array]:
     """Run the policy's collection pass.  Returns (state', freed_payloads).
 
     For RT policies the flush triggers when ring occupancy crosses
     ``flush_fraction`` (or unconditionally when ``force``) — the batched
-    analogue of flushing every Θ(P log P) adds."""
+    analogue of flushing every Θ(P log P) adds.  ``extra_pins`` (i32[...],
+    ``TS_MAX`` = no pin) injects external announcements — e.g. the sharded
+    stack's global LWM — honoured by every policy exactly like board lanes."""
     assert policy in POLICIES, policy
     S, V = state.store.ts.shape
     if policy == "ebr":
-        bound = ann.oldest(state.board, state.now)
-        kill = (state.store.succ <= bound) & (state.store.ts != EMPTY)
+        bound = _ebr_bound(state, extra_pins)
+        kill = pool.epoch_kill_mask(state.store, bound)
         freed = jnp.where(kill, state.store.payload, EMPTY).reshape(-1)
         return state._replace(store=pool.free_entries(state.store, kill)), freed
 
     if policy == "sweep":
         return _sweep_all_needed(state, use_kernel=use_kernel,
-                                 interpret=interpret)
+                                 interpret=interpret, extra_pins=extra_pins)
 
     if policy == "steam":
         # steam does its work on the write path; the periodic GC step is a
@@ -217,7 +268,8 @@ def gc_step(
         # the engine's shutdown/pressure escape hatch: one full sweep.
         if force:
             return _sweep_all_needed(state, use_kernel=use_kernel,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     extra_pins=extra_pins)
         return state, jnp.full((state.ring.capacity,), EMPTY, jnp.int32)
 
     # dlrt / slrt
@@ -228,7 +280,7 @@ def gc_step(
     B = state.ring.capacity
 
     def _flush(st: MVState):
-        A = ann.scan(st.board)
+        A = _ann_scan(st, extra_pins)
         # slots implicated by the ring content (the paper: the lists whose
         # nodes the range tracker returned)
         occ = st.ring.idx != EMPTY
@@ -241,7 +293,8 @@ def gc_step(
             # repeat; payload recycling must be idempotent (bitmap set).
             st, freed2 = _sweep_slots(st, touched, occ,
                                       use_kernel=use_kernel,
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      extra_pins=extra_pins)
             freed = jnp.concatenate([freed, freed2])
         else:
             freed = jnp.concatenate([freed, jnp.full((B * V,), EMPTY, jnp.int32)])
@@ -254,13 +307,14 @@ def gc_step(
 
 
 def _sweep_all_needed(
-    state: MVState, use_kernel: bool = False, interpret: bool = True
+    state: MVState, use_kernel: bool = False, interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[MVState, jax.Array]:
     """Full-store needed-sweep: the fused compact primitive over every slab
     (mask all-true).  The Pallas kernel and the lax path share the same
     contract (one pass: splice + freed handles + count)."""
     S, V = state.store.ts.shape
-    A = ann.scan(state.board)
+    A = _ann_scan(state, extra_pins)
     new_ts, new_succ, new_pay, freed, _ = compact_ops.compact(
         state.store.ts, state.store.succ, state.store.payload,
         jnp.ones((S,), bool), A, state.now,
@@ -276,13 +330,14 @@ def _sweep_slots(
     mask: jax.Array,
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[MVState, jax.Array]:
     """needed-sweep restricted to the given slots (steam / slrt locality).
 
     ``use_kernel`` dispatches the gathered rows through the fused Pallas
     compaction kernel; otherwise the lax searchsorted form runs (the two are
     differentially tested in tests/mvgc/test_vstore.py)."""
-    A = ann.scan(state.board)
+    A = _ann_scan(state, extra_pins)
     rows_ts = state.store.ts[slot_ids]
     rows_succ = state.store.succ[slot_ids]
     rows_pay = state.store.payload[slot_ids]
@@ -310,29 +365,28 @@ def _sweep_slots(
 # ---------------------------------------------------------------------------
 # Pressure path (DESIGN.md §11): capacity gate -> hot slots -> reclaim
 # ---------------------------------------------------------------------------
-class PressureReport(NamedTuple):
-    """Capacity-gate output: all scalars are traced values (masked reductions,
-    no host control flow), so the gate composes under jit/shard_map."""
-
-    live: jax.Array            # i32[] total live versions
-    max_occupancy: jax.Array   # i32[] fullest slab's live-version count
-    slab_frac: jax.Array       # f32[] max_occupancy / versions_per_slot
-    ring_frac: jax.Array       # f32[] retire-ring occupancy fraction
-    under_pressure: jax.Array  # bool[] either watermark crossed
-    deficit: jax.Array         # i32[] versions to free to clear the watermarks
+#: Deprecated alias: ``capacity_gate`` now returns the unified
+#: :class:`repro.core.telemetry.PressureSignal` (DESIGN.md §13).  The old
+#: per-layer fields map as level = max(slab frac, ring frac), live = total
+#: live versions, capacity = S * V; ``under_pressure`` / ``deficit`` / ``live``
+#: keep their names and meanings.
+PressureReport = PressureSignal
 
 
 def capacity_gate(
     state: MVState,
     slab_watermark: float = 0.75,
     ring_watermark: float = 0.5,
-) -> PressureReport:
+) -> PressureSignal:
     """Evaluate the slab- and ring-occupancy watermarks (turso's LWM rule:
     reclamation is *triggered by events* crossing a watermark, never by a
     timer alone).  ``deficit`` is the number of versions that must be freed
     to bring every slab under ``slab_watermark`` and the ring under
     ``ring_watermark`` — the quantity `reclaim_on_pressure` chases, mirroring
-    the sim's ``ReclaimRequest.deficit``."""
+    the sim's ``ReclaimRequest.deficit``.  Returns the unified
+    :class:`repro.core.telemetry.PressureSignal` (``level`` is the worse of
+    the slab and ring occupancy fractions); all fields are traced values, so
+    the gate composes under jit/shard_map."""
     S, V = state.store.ts.shape
     occ = (state.store.ts != EMPTY).sum(axis=1)
     slab_hi = max(1, int(slab_watermark * V))
@@ -340,13 +394,14 @@ def capacity_gate(
     ring_size = rt.ring_size(state.ring)
     slab_over = jnp.maximum(occ - slab_hi, 0)
     deficit = slab_over.sum() + jnp.maximum(ring_size - ring_hi, 0)
-    return PressureReport(
-        live=occ.sum(),
-        max_occupancy=occ.max(),
-        slab_frac=occ.max().astype(jnp.float32) / V,
-        ring_frac=ring_size.astype(jnp.float32) / state.ring.capacity,
+    slab_frac = occ.max().astype(jnp.float32) / V
+    ring_frac = ring_size.astype(jnp.float32) / state.ring.capacity
+    return PressureSignal(
+        level=jnp.maximum(slab_frac, ring_frac),
         under_pressure=(occ.max() > slab_hi) | (ring_size > ring_hi),
         deficit=deficit,
+        live=occ.sum(),
+        capacity=jnp.int32(S * V),
     )
 
 
@@ -367,6 +422,7 @@ def reclaim_on_pressure(
     policy: str = "slrt",
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[MVState, jax.Array, jax.Array]:
     """Synchronous pressure response: run the policy's sweep over the hot
     slots first, spilling to the cold slabs only while the deficit is unmet —
@@ -397,30 +453,35 @@ def reclaim_on_pressure(
     deficit = jnp.asarray(deficit, jnp.int32)
 
     if policy == "ebr":
-        state, freed = gc_step(state, policy="ebr")
+        state, freed = gc_step(state, policy="ebr", extra_pins=extra_pins)
         return state, freed, live0 - live_versions(state)
     if policy == "sweep":
         state, freed = _sweep_all_needed(state, use_kernel=use_kernel,
-                                         interpret=interpret)
+                                         interpret=interpret,
+                                         extra_pins=extra_pins)
         return state, freed, live0 - live_versions(state)
     if policy == "dlrt":
-        state, freed = gc_step(state, policy="dlrt", force=True)
+        state, freed = gc_step(state, policy="dlrt", force=True,
+                               extra_pins=extra_pins)
         return state, freed, live0 - live_versions(state)
 
     # steam / slrt: hot-first, cold spill only while the deficit is unmet
     if policy == "slrt":
         state, freed_rt = gc_step(state, policy="slrt", force=True,
-                                  use_kernel=use_kernel, interpret=interpret)
+                                  use_kernel=use_kernel, interpret=interpret,
+                                  extra_pins=extra_pins)
     else:
         freed_rt = jnp.full((0,), EMPTY, jnp.int32)
     state, freed_hot = _sweep_slots(state, jnp.maximum(hot_keys, 0),
                                     hot_keys >= 0, use_kernel=use_kernel,
-                                    interpret=interpret)
+                                    interpret=interpret,
+                                    extra_pins=extra_pins)
     hot_met = (live0 - live_versions(state)) >= deficit
 
     def _cold(st: MVState):
         return _sweep_all_needed(st, use_kernel=use_kernel,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 extra_pins=extra_pins)
 
     def _skip(st: MVState):
         return st, jnp.full((S * V,), EMPTY, jnp.int32)

@@ -69,6 +69,8 @@ from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from repro.core.telemetry import PressureSignal
+
 # Abort reasons, in check order (wcc is the eager first-updater-wins check
 # on the write set, footprint is full validation, capacity gates the final
 # apply — charged only for versions actually about to be installed, so
@@ -232,13 +234,31 @@ class ContentionManager:
         self.refund(versions)
 
     # -- signals for schemes and tests ---------------------------------------
+    def pressure_signal(self, now: float) -> PressureSignal:
+        """The manager's view in the unified telemetry vocabulary
+        (:class:`repro.core.telemetry.PressureSignal`, DESIGN.md §13):
+        ``level`` is the 0..1 conflict-recency decay, ``deficit`` / ``live``
+        / ``capacity`` come from the version-budget token bucket (all zero
+        when the gate is disabled), and ``under_pressure`` is true while the
+        bucket is short of full."""
+        age = now - self._last_conflict_ts
+        level = 1.0 if age < 0 else max(0.0, 1.0 - age / self.pressure_window)
+        cap = self.capacity or 0
+        short = max(0, cap - self.budget) if self.capacity is not None else 0
+        return PressureSignal(
+            level=level,
+            under_pressure=short > 0,
+            deficit=short,
+            live=cap - self.budget if self.capacity is not None else 0,
+            capacity=cap,
+        )
+
     def pressure(self, now: float) -> float:
         """0..1 conflict-recency signal: 1.0 at the instant of a conflict,
-        decaying linearly to 0 over ``pressure_window`` timestamp ticks."""
-        age = now - self._last_conflict_ts
-        if age < 0:
-            return 1.0
-        return max(0.0, 1.0 - age / self.pressure_window)
+        decaying linearly to 0 over ``pressure_window`` timestamp ticks.
+        Deprecated alias for ``pressure_signal(now).level`` — kept (without a
+        warning; schemes call it per-slice) for one release."""
+        return float(self.pressure_signal(now).level)
 
     def hot_keys(self, n: int = 8) -> List[Tuple[int, int]]:
         """The ``n`` most-conflicted keys as (key, conflicts) — raw lifetime

@@ -110,6 +110,18 @@ UNITS = {
                     "bandwidth peak for the timed backend (launch/roofline."
                     "py; DESIGN.md §12).  Deterministic cells (bytes_moved, "
                     "target_*) are trajectory-gated; timing cells are not.",
+    "dist_bench": "BENCH_dist rows measure one sharded multi-host serving "
+                  "run (repro.dist.mvgc; DESIGN.md §13): page counts are "
+                  "summed over every host's pool; lwm is the final "
+                  "mesh-wide low-water mark (ring-min over per-host oldest "
+                  "pins; 2147483647 = the pin-free TS_MAX sentinel) and "
+                  "lwm_advances counts its upward moves; stale_lanes_aged "
+                  "counts stalled hosts' announcements aged out of the "
+                  "reduction past their watchdog budget (nonzero only when "
+                  "stalled_hosts > 0); pin_violations counts snapshot "
+                  "reads that lost a version pinned by *any* host to a "
+                  "reclaim pass — the global-LWM safety invariant demands "
+                  "exactly 0",
 }
 
 REQUIRED_TOP_KEYS = ("bench", "schema_version", "units", "meta", "rows")
@@ -385,6 +397,27 @@ class ServeMeasurement(Measurement):
 
 
 @dataclass
+class DistMeasurement(ServeMeasurement):
+    """One ``BENCH_dist.json`` cell: a sharded multi-host serving run under
+    global-LWM reclamation (``repro.dist.mvgc``, DESIGN.md §13).
+
+    Extends the serve row — the space/pressure fields keep their serve
+    meaning but are summed over every host's shard (``page_pool`` is the
+    global pool, ``peak_pages`` the global live peak) — with the dist-only
+    accounting in ``units["dist_bench"]``.  ``pin_violations`` is the
+    committed safety signal: snapshot reads on any host that observed a
+    version reclaimed while pinned by *any* host.  It must be zero."""
+
+    hosts: int = 0
+    lwm: int = 0
+    lwm_advances: int = 0
+    stale_lanes_aged: int = 0
+    stalled_hosts: int = 0
+    under_pressure_hosts: int = 0
+    pin_violations: int = 0
+
+
+@dataclass
 class KernelMeasurement(Measurement):
     """One ``BENCH_kernel.json`` cell: a fused Pallas primitive timed on one
     shape against the unfused lax baseline, with its roofline-derived
@@ -493,6 +526,10 @@ SERVE_FIELDS = ("pressure_events", "pages_reclaimed", "peak_pages",
                 "decode_steps", "tokens_appended", "sequences_completed",
                 "give_ups", "snapshot_pins", "overflow_count",
                 "dropped_retires", "reclaims_triggered")
+
+DIST_FIELDS = SERVE_FIELDS + ("hosts", "lwm", "lwm_advances",
+                              "stale_lanes_aged", "stalled_hosts",
+                              "under_pressure_hosts", "pin_violations")
 
 KERNEL_FIELDS = ("kernel", "shape", "backend", "path", "bytes_moved",
                  "iters", "us_fused", "us_unfused", "speedup", "gb_s",
@@ -632,6 +669,80 @@ def check_serve_rows(rows: List[Dict[str, Any]],
                 f"of {fig} show working pressure reclamation (need a "
                 f"majority with reclaims > 0, pages freed > 0, "
                 f"post-reclaim peak < peak)")
+    return problems
+
+
+def check_dist_rows(rows: List[Dict[str, Any]],
+                    options: Dict[str, Any]) -> List[str]:
+    """dist-schema invariants (DESIGN.md §13), layered on top of the serve
+    per-row checks: the global-LWM safety signal is clean
+    (``pin_violations == 0`` on every row), staleness aging fires exactly
+    when a host is stalled, and the per-host counters stay inside the mesh.
+
+    ``options["require_pressure"]`` swaps in a dist-appropriate working-
+    pressure proof instead of serve's: the most-reclaiming tier must show
+    reclaims > 0, pages freed > 0 and the LWM actually advancing in a
+    majority of its cells (serve's strict post-reclaim-peak < peak does not
+    hold under a stalled host, whose live pages are legitimately
+    unreclaimable at peak), and at least one cell must exercise the
+    straggler path (``stalled_hosts > 0``) so the committed payload proves
+    aged-out reclamation, not just the happy path."""
+    require_pressure = bool(options.get("require_pressure", False))
+    problems = check_serve_rows(rows, {**options, "require_pressure": False})
+    any_stall = False
+    for i, r in enumerate(rows):
+        missing = [k for k in DIST_FIELDS if k not in r]
+        if missing:
+            problems.append(f"row {i} missing dist fields: {missing}")
+            continue
+        if r["hosts"] < 1:
+            problems.append(f"row {i}: hosts={r['hosts']} < 1")
+            continue
+        for f in ("lwm_advances", "stale_lanes_aged", "stalled_hosts",
+                  "under_pressure_hosts", "pin_violations"):
+            if r[f] < 0:
+                problems.append(f"row {i}: {f}={r[f]} < 0")
+        if r["pin_violations"] != 0:
+            problems.append(
+                f"row {i} ({r['figure']}): pin_violations="
+                f"{r['pin_violations']} != 0 — a shard reclaimed a version "
+                f"pinned by some host (global-LWM safety broken)")
+        for f in ("stalled_hosts", "under_pressure_hosts"):
+            if r[f] > r["hosts"]:
+                problems.append(f"row {i}: {f}={r[f]} > hosts={r['hosts']}")
+        if r["stalled_hosts"] > 0:
+            any_stall = True
+            if r["stale_lanes_aged"] == 0:
+                problems.append(
+                    f"row {i} ({r['figure']}): stalled_hosts="
+                    f"{r['stalled_hosts']} but stale_lanes_aged=0 — a host "
+                    f"past its watchdog budget must be aged out of the LWM")
+        elif r["stale_lanes_aged"] != 0:
+            problems.append(
+                f"row {i} ({r['figure']}): stale_lanes_aged="
+                f"{r['stale_lanes_aged']} with stalled_hosts=0 — aging "
+                f"fired without a stalled host")
+    if require_pressure and not problems:
+        if not any_stall:
+            problems.append(
+                "require_pressure: no dist row exercises the straggler path "
+                "(need at least one cell with stalled_hosts > 0 proving "
+                "reclamation proceeds with the stale lane aged out)")
+        by_fig: Dict[str, List[Dict[str, Any]]] = {}
+        for r in rows:
+            by_fig.setdefault(r.get("figure"), []).append(r)
+        fig, cells = max(
+            by_fig.items(),
+            key=lambda kv: sum(c["reclaims_triggered"] for c in kv[1]))
+        good = [c for c in cells
+                if c["reclaims_triggered"] > 0 and c["pages_reclaimed"] > 0
+                and c["lwm_advances"] > 0]
+        if len(good) * 2 <= len(cells):
+            problems.append(
+                f"require_pressure: only {len(good)}/{len(cells)} cells of "
+                f"{fig} show working global-LWM reclamation (need a "
+                f"majority with reclaims > 0, pages freed > 0, "
+                f"lwm_advances > 0)")
     return problems
 
 
@@ -924,6 +1035,20 @@ register_bench_schema(BenchSchema(
     invariants=(check_serve_rows,),
     panel="serve",
 ), benches=("serve",))
+
+register_bench_schema(BenchSchema(
+    name="dist",
+    row_type=DistMeasurement,
+    key_fields=SIM_KEY_FIELDS,
+    compare_fields=SPACE_COMPARE_FIELDS + (
+        "peak_pages", "peak_pages_post_reclaim", "pages_reclaimed",
+        "stale_lanes_aged", "pin_violations"),
+    # check_dist_rows runs the serve per-row checks itself (with serve's
+    # require_pressure majority rule swapped for the dist one)
+    required_row_fields=DIST_FIELDS,
+    invariants=(check_dist_rows,),
+    panel="serve",
+), benches=("dist",))
 
 register_bench_schema(BenchSchema(
     name="kernel",

@@ -11,16 +11,29 @@ Three orthogonal modules, each consumable on its own:
 * :mod:`repro.dist.straggler` — ``StepWatchdog`` (per-step latency outlier
   detection) and ``HeartbeatFile`` (cross-host liveness via the checkpoint
   filesystem), the fault-tolerance substrate of ``launch.train``.
+* :mod:`repro.dist.mvgc` — the sharded multi-host MVGC stack: host-stacked
+  version-store/page-pool state, global-LWM reclamation over the
+  ``reduce="min"`` ring, and straggler-tolerant announcement aging
+  (DESIGN.md §13).
 """
+from repro.dist.mvgc import (ShardedPagedKVEngine, age_out_stale, global_lwm,
+                             lwm_contributions, stack_states)
 from repro.dist.overlap import make_ring_all_reduce
-from repro.dist.sharding import (batch_sharding, batch_spec, param_shardings)
+from repro.dist.sharding import (batch_sharding, batch_spec,
+                                 host_stacked_sharding, param_shardings)
 from repro.dist.straggler import HeartbeatFile, StepWatchdog
 
 __all__ = [
     "batch_sharding",
     "batch_spec",
+    "host_stacked_sharding",
     "param_shardings",
     "make_ring_all_reduce",
     "StepWatchdog",
     "HeartbeatFile",
+    "ShardedPagedKVEngine",
+    "stack_states",
+    "lwm_contributions",
+    "age_out_stale",
+    "global_lwm",
 ]

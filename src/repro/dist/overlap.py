@@ -8,7 +8,11 @@ the caller interleaves (gradient compression, the next microbatch's
 backward, ...).  Numerically it computes exactly ``psum``: every element is
 the sum of all n shards, accumulated in ring order.  ``reduce="mean"``
 divides by the axis size (= ``pmean``), the correct reduction for
-data-parallel gradient averaging.
+data-parallel gradient averaging.  ``reduce="min"`` replaces the additive
+combine with an elementwise minimum (= ``pmin``) — the reduction the
+sharded MVGC stack uses to compute the mesh-wide low-water mark from each
+host's oldest announced timestamp (DESIGN.md §13; hosts with no pins
+contribute the TS_MAX sentinel, which is the identity of ``min``).
 """
 from __future__ import annotations
 
@@ -32,9 +36,17 @@ def make_ring_all_reduce(
     ``reduce="mean"`` divides the ring sum by the axis size, matching
     ``jax.lax.pmean`` — the right reduction for data-parallel gradients,
     where the bare sum trains with gradients ``n``× too large.
+
+    ``reduce="min"`` takes the elementwise minimum instead of the sum,
+    matching ``jax.lax.pmin`` — the global-LWM reduction of the sharded
+    MVGC stack.  The zero-padded chunk tail is harmless for every mode:
+    pad positions only ever combine with other shards' pad positions (the
+    locals are the same size on every device) and are sliced off before the
+    reshape back.
     """
-    if reduce not in ("sum", "mean"):
-        raise ValueError(f"reduce must be 'sum' or 'mean', got {reduce!r}")
+    if reduce not in ("sum", "mean", "min"):
+        raise ValueError(
+            f"reduce must be 'sum', 'mean' or 'min', got {reduce!r}")
     n = mesh.shape[axis]
     perm = [(i, (i + 1) % n) for i in range(n)]
 
@@ -52,6 +64,8 @@ def make_ring_all_reduce(
         def rs_hop(s, b):
             send = b[(r - s) % n]
             recv = jax.lax.ppermute(send, axis, perm)
+            if reduce == "min":
+                return b.at[(r - s - 1) % n].min(recv)
             return b.at[(r - s - 1) % n].add(recv)
 
         buf = jax.lax.fori_loop(0, n - 1, rs_hop, buf)

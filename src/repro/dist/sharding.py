@@ -81,6 +81,29 @@ def batch_sharding(batch, mesh: Mesh, batch_size: Optional[int] = None):
 
 
 # ---------------------------------------------------------------------------
+# host-stacked state (sharded MVGC, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def host_spec(leaf, axis: str = "gc_hosts") -> P:
+    """PartitionSpec for one leaf of a host-stacked state tree: the leading
+    ``[H]`` host dim shards over ``axis``, everything else is replicated.
+    Scalars (no shape) are replicated outright."""
+    shape = getattr(leaf, "shape", None)
+    if not shape:
+        return P()
+    return P(*([axis] + [None] * (len(shape) - 1)))
+
+
+def host_stacked_sharding(tree, mesh: Mesh, axis: str = "gc_hosts"):
+    """NamedSharding tree placing a host-stacked MVGC state (every leaf
+    carries a leading ``[H]`` dim, one slice per host — see
+    ``repro.dist.mvgc.stack_states``) so each host's slab/page-pool shard
+    lands on its own device, while announcement lanes stay host-local (the
+    board rides inside the per-host slice)."""
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, host_spec(leaf, axis)), tree)
+
+
+# ---------------------------------------------------------------------------
 # parameter sharding
 # ---------------------------------------------------------------------------
 def _tp_axes(parts: Sequence[str], shape: Tuple[int, ...], *,

@@ -49,6 +49,29 @@ class StepWatchdog:
         std = math.sqrt(self._m2 / max(1, self._n - 1))
         return max(self.min_budget_s, self._mean + self.k_sigma * std)
 
+    def budget_s(self, grace_steps: float = 3.0) -> float:
+        """Always-finite staleness budget for cross-host liveness checks,
+        in seconds: ``grace_steps`` suspect-thresholds' worth of wall clock.
+
+        Unlike :meth:`threshold`, this never returns inf: during warmup (or
+        when ``stop()`` was never called after ``start()``) it falls back to
+        ``grace_steps * min_budget_s``.  Comparing a ``HeartbeatFile.age_s``
+        of inf (host never beat) against an inf warmup threshold evaluates
+        ``inf > inf == False`` — a dead host reads as live exactly while the
+        watchdog knows least.  The finite floor closes that hole; the
+        sharded-GC staleness aging (DESIGN.md §13) and ``launch.train`` both
+        compare ages against *this*."""
+        thr = self.threshold()
+        if not math.isfinite(thr):
+            thr = self.min_budget_s
+        return grace_steps * thr
+
+    def is_stale(self, age_s: float, grace_steps: float = 3.0) -> bool:
+        """True when a heartbeat/announcement of age ``age_s`` seconds is
+        past the staleness budget (inf ages — never beaten — are always
+        stale; see :meth:`budget_s`)."""
+        return age_s > self.budget_s(grace_steps)
+
     def stop(self, step: int) -> float:
         """Returns the step duration; records ``step`` if it is a straggler."""
         assert self._t0 is not None, "stop() without start()"

@@ -1,8 +1,11 @@
 import os
 import sys as _sys
-# --smoke compiles one tiny cell on a single host device; everything else
-# fakes a pod's worth of devices.  Must be decided before jax imports.
-_FAKE_DEVICES = 1 if "--smoke" in _sys.argv else 512
+# --smoke compiles one tiny cell on a single host device (two for the
+# --mesh host2 leg, which proves multi-device host meshes lower/compile);
+# everything else fakes a pod's worth of devices.  Must be decided before
+# jax imports.
+_FAKE_DEVICES = ((2 if "host2" in _sys.argv else 1)
+                 if "--smoke" in _sys.argv else 512)
 os.environ["XLA_FLAGS"] = (
     f"--xla_force_host_platform_device_count={_FAKE_DEVICES}" + (
         " " + os.environ["XLA_FLAGS"] if "XLA_FLAGS" in os.environ else ""))
@@ -94,6 +97,8 @@ def collective_census(hlo: str) -> Dict[str, Dict[str, float]]:
 def _mesh_for(mesh_name: str):
     if mesh_name == "host":          # --smoke: whatever this machine has
         return make_host_mesh(1, 1)
+    if mesh_name == "host2":         # --smoke --mesh host2: 2-host data mesh
+        return make_host_mesh(2, 1)
     return make_production_mesh(multi_pod=(mesh_name == "multipod"))
 
 
@@ -193,11 +198,13 @@ def main() -> None:
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default=None,
-                    choices=[None, "pod", "multipod", "host"])
+                    choices=[None, "pod", "multipod", "host", "host2"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="one cell: smallest arch x train_4k on a 1-device "
-                         "host mesh (the CI launch-dryrun smoke step)")
+                         "host mesh (the CI launch-dryrun smoke step); "
+                         "combine with --mesh host2 for the 2-host leg run "
+                         "by the weekly bench-standard job")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--variant", default="baseline")
     args = ap.parse_args()
@@ -205,8 +212,9 @@ def main() -> None:
     if args.smoke:
         args.arch = args.arch or smallest_arch()
         args.shape = args.shape or "train_4k"
-        args.mesh = "host"
-        args.variant = "smoke"
+        args.mesh = args.mesh or "host"
+        args.variant = ("smoke" if args.mesh == "host"
+                        else f"smoke_{args.mesh}")
         args.force = True
 
     archs = [args.arch] if args.arch else list_archs()

@@ -28,3 +28,15 @@ def make_host_mesh(data: int = 1, model: int = 1):
         (data, max(1, min(model, n // data))), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2,
     )
+
+
+def make_gc_mesh(hosts: int = 0, axis: str = "gc_hosts"):
+    """1-D mesh for the sharded MVGC stack (``repro.dist.mvgc``): one
+    position per host along ``axis``.  ``hosts=0`` uses every available
+    device.  The global-LWM ring all-reduce and the per-shard GC shard_maps
+    both run over this axis (DESIGN.md §13)."""
+    n = len(jax.devices())
+    hosts = n if hosts <= 0 else min(hosts, n)
+    return jax.make_mesh(
+        (hosts,), (axis,), axis_types=(jax.sharding.AxisType.Auto,),
+    )

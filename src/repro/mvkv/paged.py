@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.mvgc import vstore
 from repro.core.mvgc.pool import EMPTY
+from repro.core.telemetry import GCConfig, PressureSignal, resolve_gc_config
 
 NO_PAGE = jnp.int32(-1)
 
@@ -47,17 +48,26 @@ class PagedKV(NamedTuple):
 
 def make_paged_kv(num_seqs: int, num_pages: int, page_size: int,
                   max_pages_per_seq: int, kv_heads: int, head_dim: int,
-                  versions_per_seq: int = 8, reader_lanes: int = 8,
-                  ring_capacity: int = 0, dtype=jnp.bfloat16) -> PagedKV:
-    max_ver = num_seqs * versions_per_seq
+                  versions_per_seq: Optional[int] = None,
+                  reader_lanes: Optional[int] = None,
+                  ring_capacity: Optional[int] = None, dtype=jnp.bfloat16,
+                  *, gc: Optional[GCConfig] = None) -> PagedKV:
+    """Build an empty paged-KV state.  GC sizing comes from ``gc``
+    (:class:`repro.core.telemetry.GCConfig`); the old ``versions_per_seq`` /
+    ``reader_lanes`` / ``ring_capacity`` kwargs still work but are deprecated
+    (DESIGN.md §13 migration table)."""
+    cfg = resolve_gc_config(gc, "make_paged_kv",
+                            versions_per_slot=versions_per_seq,
+                            reader_lanes=reader_lanes,
+                            ring_capacity=ring_capacity)
+    max_ver = num_seqs * cfg.versions_per_slot
     # Reclamation is pressure-driven (no per-append cadence GC), so the
     # retire ring must absorb every close between two pressure flushes —
     # up to one per slab entry plus the in-flight step.  An undersized ring
     # drops retire records (`dropped_retires`), which the DLRT policy can
     # never recover (its reclaim walks only the ring); size it to the slab
     # by default and let callers shrink it deliberately.
-    if ring_capacity <= 0:
-        ring_capacity = max(16, 2 * max_ver)
+    ring = cfg.ring_capacity if cfg.ring_capacity > 0 else max(16, 2 * max_ver)
     return PagedKV(
         k_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
         v_pages=jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype),
@@ -65,8 +75,8 @@ def make_paged_kv(num_seqs: int, num_pages: int, page_size: int,
         tables=jnp.full((max_ver, max_pages_per_seq), NO_PAGE, jnp.int32),
         table_free=jnp.ones((max_ver,), bool),
         lengths=jnp.zeros((max_ver,), jnp.int32),
-        mv=vstore.make_state(num_seqs, versions_per_seq, reader_lanes,
-                             ring_capacity=ring_capacity),
+        mv=vstore.make_state(num_seqs, cfg.versions_per_slot,
+                             cfg.reader_lanes, ring_capacity=ring),
     )
 
 
@@ -91,6 +101,7 @@ def append_tokens(
     gc_policy: str = "slrt",
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[PagedKV, jax.Array]:
     """One decode step: write each sequence's token into its current page,
     allocating a fresh page at page boundaries, and commit a **new page-table
@@ -154,7 +165,7 @@ def append_tokens(
     # is nonempty for steam even without a pressure event.
     mv, freed, ovf = vstore.write_step(
         st.mv, seq_ids, tslots, commit, policy=gc_policy,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, extra_pins=extra_pins)
     freed_all = freed.reshape(-1)
 
     # a lane whose descriptor append overflowed must hand its table slot back
@@ -182,6 +193,7 @@ def reset_sequence(
     gc_policy: str = "slrt",
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[PagedKV, jax.Array]:
     """Sequence completion: commit a new *empty* page-table version (zero
     pages, zero length) so the slot can serve the next request.  Returns
@@ -200,7 +212,7 @@ def reset_sequence(
     lengths_arr = st.lengths.at[tdest].set(0, mode="drop")
     mv, freed, ovf = vstore.write_step(
         st.mv, seq_ids, tslots, ok, policy=gc_policy,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, extra_pins=extra_pins)
     table_free = tf.at[jnp.where(ok & ovf, tslots, MAX_VER)].set(
         True, mode="drop")
     table_free = table_free.at[
@@ -220,6 +232,7 @@ def fork_sequence(
     gc_policy: str = "slrt",
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[PagedKV, jax.Array]:
     """COW fork: the child's first page-table version *shares every page*
     with the parent's current version, except a *partial last page*, which is
@@ -262,7 +275,7 @@ def fork_sequence(
 
     mv, freed, ovf = vstore.write_step(
         st.mv, dst_ids, tslots, ok, policy=gc_policy,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, extra_pins=extra_pins)
     table_free = tf.at[jnp.where(ok & ovf, tslots, MAX_VER)].set(
         True, mode="drop")
     table_free = table_free.at[
@@ -277,27 +290,28 @@ def fork_sequence(
 # ---------------------------------------------------------------------------
 # Pressure path (DESIGN.md §11): pool watermark -> hot sequences -> reclaim
 # ---------------------------------------------------------------------------
-class PagePressure(NamedTuple):
-    """Page-pool gate output (all traced scalars, like `vstore.PressureReport`)."""
-
-    free_pages: jax.Array      # i32[] free-bitmap popcount
-    free_frac: jax.Array       # f32[] fraction of the pool still free
-    under_pressure: jax.Array  # bool[] popcount under the watermark
-    deficit: jax.Array         # i32[] pages to free to clear the watermark
+#: Deprecated alias: ``page_pressure`` now returns the unified
+#: :class:`repro.core.telemetry.PressureSignal` (DESIGN.md §13).  The old
+#: fields survive as properties: ``free_pages`` = capacity - live,
+#: ``free_frac`` = 1 - level.
+PagePressure = PressureSignal
 
 
-def page_pressure(st: PagedKV, watermark: float = 0.25) -> PagePressure:
+def page_pressure(st: PagedKV, watermark: float = 0.25) -> PressureSignal:
     """Free-bitmap popcount under the watermark = pool pressure.  The deficit
     is measured in pages; `reclaim_on_pressure` chases it by freeing stale
-    descriptor versions (each stale table version pins >= 0 pages)."""
+    descriptor versions (each stale table version pins >= 0 pages).  Returns
+    the unified :class:`repro.core.telemetry.PressureSignal` (``level`` is
+    the occupied fraction of the pool)."""
     n = st.free.shape[0]
     lo = max(1, int(watermark * n))
     free = st.free.sum()
-    return PagePressure(
-        free_pages=free,
-        free_frac=free.astype(jnp.float32) / n,
+    return PressureSignal(
+        level=1.0 - free.astype(jnp.float32) / n,
         under_pressure=free < lo,
         deficit=jnp.maximum(lo - free, 0),
+        live=(jnp.int32(n) - free).astype(jnp.int32),
+        capacity=jnp.int32(n),
     )
 
 
@@ -315,6 +329,7 @@ def reclaim_on_pressure(
     gc_policy: str = "slrt",
     use_kernel: bool = False,
     interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
 ) -> Tuple[PagedKV, jax.Array]:
     """Synchronous page reclamation: hot-sequence-first descriptor compaction
     (`vstore.reclaim_on_pressure`), recycle the table slots whose descriptor
@@ -328,7 +343,7 @@ def reclaim_on_pressure(
     MAX_VER = st.tables.shape[0]
     mv, freed, _ = vstore.reclaim_on_pressure(
         st.mv, hot_keys, deficit, policy=gc_policy,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, extra_pins=extra_pins)
     table_free = st.table_free.at[
         jnp.where(freed != EMPTY, freed, MAX_VER)
     ].set(True, mode="drop")

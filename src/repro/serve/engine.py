@@ -34,6 +34,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.mvgc import vstore
 from repro.core.mvgc.pool import EMPTY
+from repro.core.telemetry import GCConfig, ReclaimStats, resolve_gc_config
 from repro.models import transformer as tf
 from repro.mvkv import paged
 
@@ -49,11 +50,12 @@ class ServeState(NamedTuple):
 def make_serve_state(cfg: ModelConfig, run: RunConfig, params, batch: int,
                      max_len: int, dtype=jnp.bfloat16) -> ServeState:
     cache = tf.init_cache(cfg, batch, max_len, dtype)
+    gc = run.gc
     mv = vstore.make_state(
         num_slots=batch,
-        versions_per_slot=run.versions_per_slot,
-        num_reader_lanes=run.reader_lanes,
-        ring_capacity=run.ring_capacity or max(16, batch * 2),
+        versions_per_slot=gc.versions_per_slot,
+        num_reader_lanes=gc.reader_lanes,
+        ring_capacity=gc.ring_capacity or max(16, batch * 2),
     )
     return ServeState(
         params=params,
@@ -75,8 +77,8 @@ def prefill_step(state: ServeState, cfg: ModelConfig, run: RunConfig,
     B = tokens.shape[0]
     ids = jnp.arange(B, dtype=jnp.int32)
     mv, _, _ = vstore.write_step(
-        state.mv, ids, lens, jnp.ones((B,), bool), policy=run.gc_policy,
-        use_kernel=run.use_kernel, interpret=run.kernel_interpret)
+        state.mv, ids, lens, jnp.ones((B,), bool), policy=run.gc.policy,
+        use_kernel=run.gc.use_kernel, interpret=run.gc.kernel_interpret)
     nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     return ServeState(state.params, cache, lens, mv, nxt)
 
@@ -102,22 +104,22 @@ def decode_one(state: ServeState, cfg: ModelConfig, run: RunConfig,
     ids = jnp.arange(B, dtype=jnp.int32)
     # the update: a new descriptor version (visible length) per sequence
     mv, freed_w, ovf = vstore.write_step(
-        state.mv, ids, new_len, jnp.ones((B,), bool), policy=run.gc_policy,
-        use_kernel=run.use_kernel, interpret=run.kernel_interpret)
+        state.mv, ids, new_len, jnp.ones((B,), bool), policy=run.gc.policy,
+        use_kernel=run.gc.use_kernel, interpret=run.gc.kernel_interpret)
     gate = vstore.capacity_gate(mv)
     trigger = gate.under_pressure | ovf.any()
 
     def _pressure(m: vstore.MVState):
         hs = vstore.hot_slots(m, min(8, B))
         m2, _, n = vstore.reclaim_on_pressure(
-            m, hs, gate.deficit, policy=run.gc_policy,
-            use_kernel=run.use_kernel, interpret=run.kernel_interpret)
+            m, hs, gate.deficit, policy=run.gc.policy,
+            use_kernel=run.gc.use_kernel, interpret=run.gc.kernel_interpret)
         return m2, jnp.int32(1), n
 
     def _cadence(m: vstore.MVState):
-        m2, freed_g = vstore.gc_step(m, policy=run.gc_policy,
-                                     use_kernel=run.use_kernel,
-                                     interpret=run.kernel_interpret)
+        m2, freed_g = vstore.gc_step(m, policy=run.gc.policy,
+                                     use_kernel=run.gc.use_kernel,
+                                     interpret=run.gc.kernel_interpret)
         return m2, jnp.int32(0), (freed_g != EMPTY).sum().astype(jnp.int32)
 
     mv, reclaimed, n_freed = jax.lax.cond(trigger, _pressure, _cadence, mv)
@@ -126,8 +128,8 @@ def decode_one(state: ServeState, cfg: ModelConfig, run: RunConfig,
     def _retry(args):
         m, o = args
         m2, _, o2 = vstore.write_step(
-            m, ids, new_len, o, policy=run.gc_policy,
-            use_kernel=run.use_kernel, interpret=run.kernel_interpret)
+            m, ids, new_len, o, policy=run.gc.policy,
+            use_kernel=run.gc.use_kernel, interpret=run.gc.kernel_interpret)
         return m2, o2
 
     mv, ovf_left = jax.lax.cond(
@@ -236,60 +238,99 @@ class PagedKVEngine:
     the failed lanes, up to ``max_reclaim_rounds`` before giving up (turso's
     trigger-on-event rule; the sim's abort => reclaim => retry loop).  A
     post-step watermark crossing triggers the same pass without a failure.
-    Counters (``pressure_events``, ``reclaims_triggered``,
-    ``pages_reclaimed``, ``peak_pages``, ``peak_pages_post_reclaim``,
-    ``give_ups``) feed BENCH_serve rows directly."""
+    Accounting lives in one :class:`repro.core.telemetry.ReclaimStats`
+    (``self.stats``); the schema-v4 counter names (``pressure_events``,
+    ``reclaims_triggered``, ``pages_reclaimed``, ``peak_pages``,
+    ``peak_pages_post_reclaim``, ``give_ups``) survive as read-only
+    properties feeding BENCH_serve rows directly.
+
+    Configuration lives in one :class:`repro.core.telemetry.GCConfig`
+    (``gc=``); the old per-kwarg spellings (``versions_per_seq``,
+    ``gc_policy``, ``page_watermark``, ...) still work for one release but
+    emit ``DeprecationWarning`` (DESIGN.md §13)."""
 
     def __init__(self, num_seqs: int, num_pages: int, page_size: int,
                  max_pages_per_seq: int, kv_heads: int, head_dim: int, *,
-                 versions_per_seq: int = 8, reader_lanes: int = 8,
-                 ring_capacity: int = 0, gc_policy: str = "slrt",
-                 page_watermark: float = 0.25, hot_k: int = 8,
-                 max_reclaim_rounds: int = 3, use_kernel: bool = False,
-                 kernel_interpret: bool = True, dtype=jnp.float32):
+                 gc: Optional[GCConfig] = None,
+                 versions_per_seq: Optional[int] = None,
+                 reader_lanes: Optional[int] = None,
+                 ring_capacity: Optional[int] = None,
+                 gc_policy: Optional[str] = None,
+                 page_watermark: Optional[float] = None,
+                 hot_k: Optional[int] = None,
+                 max_reclaim_rounds: Optional[int] = None,
+                 use_kernel: Optional[bool] = None,
+                 kernel_interpret: Optional[bool] = None, dtype=jnp.float32):
+        cfg = resolve_gc_config(
+            gc, "PagedKVEngine",
+            versions_per_slot=versions_per_seq, reader_lanes=reader_lanes,
+            ring_capacity=ring_capacity, policy=gc_policy,
+            page_watermark=page_watermark, hot_k=hot_k,
+            max_reclaim_rounds=max_reclaim_rounds, use_kernel=use_kernel,
+            kernel_interpret=kernel_interpret)
+        self.gc = cfg
         self.st = paged.make_paged_kv(
             num_seqs, num_pages, page_size, max_pages_per_seq, kv_heads,
-            head_dim, versions_per_seq=versions_per_seq,
-            reader_lanes=reader_lanes, ring_capacity=ring_capacity,
-            dtype=dtype)
-        self.gc_policy = gc_policy
-        self.max_reclaim_rounds = max_reclaim_rounds
-        self.use_kernel = use_kernel
-        self.kernel_interpret = kernel_interpret
-        kern = dict(use_kernel=use_kernel, interpret=kernel_interpret)
+            head_dim, gc=cfg, dtype=dtype)
+        self.gc_policy = cfg.policy
+        self.max_reclaim_rounds = cfg.max_reclaim_rounds
+        self.use_kernel = cfg.use_kernel
+        self.kernel_interpret = cfg.kernel_interpret
+        kern = cfg.kernel_kwargs()
         self._append = jax.jit(
-            functools.partial(paged.append_tokens, gc_policy=gc_policy, **kern))
+            functools.partial(paged.append_tokens, gc_policy=cfg.policy,
+                              **kern))
         self._fork = jax.jit(
-            functools.partial(paged.fork_sequence, gc_policy=gc_policy, **kern))
+            functools.partial(paged.fork_sequence, gc_policy=cfg.policy,
+                              **kern))
         self._reset = jax.jit(
-            functools.partial(paged.reset_sequence, gc_policy=gc_policy, **kern))
+            functools.partial(paged.reset_sequence, gc_policy=cfg.policy,
+                              **kern))
         self._reclaim = jax.jit(
-            functools.partial(paged.reclaim_on_pressure, gc_policy=gc_policy,
+            functools.partial(paged.reclaim_on_pressure, gc_policy=cfg.policy,
                               **kern))
         self._gate = jax.jit(
-            functools.partial(paged.page_pressure, watermark=page_watermark))
-        self._hot = jax.jit(functools.partial(paged.hot_sequences, k=hot_k))
+            functools.partial(paged.page_pressure,
+                              watermark=cfg.page_watermark))
+        self._hot = jax.jit(functools.partial(paged.hot_sequences,
+                                              k=cfg.hot_k))
         self._freed_pages: List[int] = []
-        self.pressure_events = 0
-        self.reclaims_triggered = 0
-        self.pages_reclaimed = 0
-        self.give_ups = 0
-        self.peak_pages = 0
-        self.peak_pages_post_reclaim = 0
+        self.stats = ReclaimStats(unit="pages")
+
+    # schema-v4 counter names, now backed by the unified ReclaimStats
+    @property
+    def pressure_events(self) -> int:
+        return self.stats.pressure_events
+
+    @property
+    def reclaims_triggered(self) -> int:
+        return self.stats.reclaims_triggered
+
+    @property
+    def pages_reclaimed(self) -> int:
+        return self.stats.reclaimed
+
+    @property
+    def give_ups(self) -> int:
+        return self.stats.give_ups
+
+    @property
+    def peak_pages(self) -> int:
+        return self.stats.peak_live
+
+    @property
+    def peak_pages_post_reclaim(self) -> int:
+        return self.stats.peak_live_post_reclaim
 
     def _note_peak(self) -> None:
-        self.peak_pages = max(self.peak_pages,
-                              int(paged.live_pages(self.st)))
+        self.stats.note_live(int(paged.live_pages(self.st)))
 
     def _reclaim_once(self, extra_deficit: int = 0) -> None:
         gate = self._gate(self.st)
         deficit = max(int(gate.deficit), extra_deficit, 1)
         self.st, pages = self._reclaim(self.st, self._hot(self.st),
                                        jnp.int32(deficit))
-        self.reclaims_triggered += 1
-        self.pages_reclaimed += int(pages)
-        self.peak_pages_post_reclaim = max(self.peak_pages_post_reclaim,
-                                           int(paged.live_pages(self.st)))
+        self.stats.note_reclaim(int(pages), int(paged.live_pages(self.st)))
 
     def step(self, seq_ids: jax.Array, k_new: jax.Array, v_new: jax.Array,
              mask: jax.Array) -> jax.Array:
@@ -301,7 +342,7 @@ class PagedKVEngine:
         self._note_peak()
         rounds = 0
         while bool(failed.any()) and rounds < self.max_reclaim_rounds:
-            self.pressure_events += 1
+            self.stats.note_event()
             self._reclaim_once(extra_deficit=int(failed.sum()))
             self.st, failed = self._append(self.st, seq_ids, k_new, v_new,
                                            failed)
@@ -309,10 +350,10 @@ class PagedKVEngine:
             rounds += 1
         # LWM rule: a watermark crossing is itself a trigger event
         if bool(self._gate(self.st).under_pressure):
-            self.pressure_events += 1
+            self.stats.note_event()
             self._reclaim_once()
         if bool(failed.any()):
-            self.give_ups += int(failed.sum())
+            self.stats.give_ups += int(failed.sum())
         newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
         self._freed_pages.extend(int(p) for p in newly)
         return failed
@@ -326,13 +367,13 @@ class PagedKVEngine:
         self._note_peak()
         rounds = 0
         while bool(failed.any()) and rounds < self.max_reclaim_rounds:
-            self.pressure_events += 1
+            self.stats.note_event()
             self._reclaim_once(extra_deficit=int(failed.sum()))
             self.st, failed = self._fork(self.st, src_ids, dst_ids, failed)
             self._note_peak()
             rounds += 1
         if bool(failed.any()):
-            self.give_ups += int(failed.sum())
+            self.stats.give_ups += int(failed.sum())
         newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
         self._freed_pages.extend(int(p) for p in newly)
         return failed
@@ -345,12 +386,12 @@ class PagedKVEngine:
         self.st = st
         rounds = 0
         while bool(failed.any()) and rounds < self.max_reclaim_rounds:
-            self.pressure_events += 1
+            self.stats.note_event()
             self._reclaim_once(extra_deficit=int(failed.sum()))
             self.st, failed = self._reset(self.st, seq_ids, failed)
             rounds += 1
         if bool(failed.any()):
-            self.give_ups += int(failed.sum())
+            self.stats.give_ups += int(failed.sum())
         newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
         self._freed_pages.extend(int(p) for p in newly)
         return failed

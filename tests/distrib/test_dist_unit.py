@@ -173,6 +173,58 @@ def test_ring_all_reduce_mean_matches_pmean():
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
 
 
+@pytest.mark.slow
+def test_ring_all_reduce_min_is_global_lwm():
+    """reduce='min' over 4 fake devices: the reduced value equals the min of
+    the shard-local ``announce.lwm`` contributions (= pmin), including the
+    all-unpinned case where every board contributes the TS_MAX sentinel
+    (DESIGN.md §13)."""
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.mvgc import announce as ann
+        from repro.core.mvgc.pool import TS_MAX
+        from repro.dist.overlap import make_ring_all_reduce
+        mesh = jax.make_mesh((4,), ("gc_hosts",))
+        one = jnp.ones((1,), jnp.int32)
+        t = jnp.ones((1,), bool)
+        # 4 host-local boards: three pinned at distinct ts, one pin-free
+        boards = [ann.make_board(4) for _ in range(4)]
+        for i, ts in ((0, 17), (1, 5), (2, 23)):
+            boards[i] = ann.announce(boards[i], one * i, one * ts, t)
+        contrib = jnp.stack([ann.lwm(b) for b in boards])
+        fn = jax.jit(make_ring_all_reduce(mesh, "gc_hosts", reduce="min"))
+        got = np.asarray(fn(contrib))
+        assert got.shape == (4,) and (got == 5).all(), got
+        ref = jax.shard_map(lambda s: jax.lax.pmin(s, "gc_hosts"),
+                            mesh=mesh, in_specs=P("gc_hosts"),
+                            out_specs=P("gc_hosts"))
+        np.testing.assert_array_equal(got, np.asarray(jax.jit(ref)(contrib)))
+        # sentinel case: every board pin-free -> the reduction stays TS_MAX
+        empty = jnp.stack([ann.lwm(ann.make_board(4)) for _ in range(4)])
+        got2 = np.asarray(fn(empty))
+        assert (got2 == int(TS_MAX)).all(), got2
+        print("min ring OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=300, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+
+
+def test_ring_all_reduce_min_single_device_identity():
+    """On a 1-position mesh the min ring is the identity (no hops) — the
+    degraded path ShardedPagedKVEngine relies on when under-deviced."""
+    mesh = jax.make_mesh((1,), ("gc_hosts",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    fn = make_ring_all_reduce(mesh, "gc_hosts", reduce="min")
+    x = jnp.asarray([7, 3, 11], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(jax.jit(fn)(x)),
+                                  np.asarray(x))
+
+
 def test_ring_all_reduce_rejects_unknown_reduce():
     mesh = _mesh11()
     with pytest.raises(ValueError):
@@ -244,3 +296,27 @@ class TestStraggler:
         hb = HeartbeatFile(str(p), host_id=0)
         assert hb.read() is None
         assert hb.age_s() == float("inf")
+
+    def test_budget_is_finite_during_warmup(self):
+        """Regression: threshold() is inf during warmup, and a never-beaten
+        HeartbeatFile has age_s() == inf; ``inf > inf == False`` made a dead
+        host read as live.  budget_s() must stay finite so is_stale catches
+        it (the sharded-GC staleness-aging rule, DESIGN.md §13)."""
+        wd = StepWatchdog(min_budget_s=0.25)
+        assert wd.threshold() == float("inf")        # warmup
+        assert wd.budget_s() == pytest.approx(3.0 * 0.25)
+        assert wd.is_stale(float("inf"))             # dead host is stale
+        assert not wd.is_stale(0.0)
+
+    def test_never_beaten_heartbeat_counts_stale(self, tmp_path):
+        hb = HeartbeatFile(str(tmp_path / "hb.json"), host_id=1)
+        wd = StepWatchdog()
+        assert wd.is_stale(hb.age_s())               # the closed inf-inf hole
+
+    def test_budget_tracks_threshold_after_warmup(self):
+        wd = StepWatchdog(k_sigma=0.0, min_budget_s=2.0, warmup_steps=1)
+        wd.start(); wd.stop(0)
+        assert wd.threshold() == pytest.approx(2.0)   # floor dominates
+        assert wd.budget_s(grace_steps=4.0) == pytest.approx(8.0)
+        assert wd.is_stale(8.5, grace_steps=4.0)
+        assert not wd.is_stale(7.5, grace_steps=4.0)

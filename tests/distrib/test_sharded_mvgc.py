@@ -1,0 +1,266 @@
+"""Sharded multi-host MVGC: global-LWM safety and straggler tolerance
+(repro.dist.mvgc, DESIGN.md §13).
+
+Everything here runs on one CPU device — the protocol is placement-
+independent (``global_lwm`` degrades to a plain ``min`` when the stack is
+unsharded), so these tests exercise the exact shard/LWM/aging logic the
+fake-device subprocess tests in ``test_dist_unit.py`` run over a real
+``reduce="min"`` ring."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.mvgc.pool import EMPTY, TS_MAX
+from repro.core.telemetry import GCConfig, PressureSignal
+from repro.dist.mvgc import (ShardedPagedKVEngine, age_out_stale, global_lwm,
+                             lwm_contributions, stack_states)
+from repro.mvkv import paged
+
+B, NP, PS, MP, KVH, HD = 4, 12, 4, 3, 1, 4
+GC = GCConfig(policy="slrt", versions_per_slot=6, reader_lanes=4)
+
+
+def _engine(hosts: int, gc: GCConfig = GC) -> ShardedPagedKVEngine:
+    return ShardedPagedKVEngine(hosts, B, NP, PS, MP, KVH, HD, gc=gc)
+
+
+def _kv(hosts: int, step: int) -> jnp.ndarray:
+    """Per-(host, step, seq) distinct payloads: a wrongly reclaimed page
+    shows up as a value mismatch, not just a shape change."""
+    base = (np.arange(hosts * B, dtype=np.float32).reshape(hosts, B)
+            + hosts * B * (step + 1))
+    return jnp.asarray(np.broadcast_to(
+        base[:, :, None, None], (hosts, B, KVH, HD)))
+
+
+def _seq_ids(hosts: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32), (hosts, B))
+
+
+def _checksum(local_st, tables: np.ndarray, lengths: np.ndarray) -> tuple:
+    k = np.asarray(local_st.k_pages)[:, :, 0, 0]
+    out = []
+    for s in range(tables.shape[0]):
+        n = int(lengths[s])
+        out.append((n, tuple(
+            float(k[int(tables[s, j // PS]), j % PS]) for j in range(n))))
+    return tuple(out)
+
+
+def _churn(eng: ShardedPagedKVEngine, steps: int, start: int = 0) -> None:
+    """Append/reset churn that retires versions and recycles pages on every
+    host — the workload under which reclamation must stay pin-safe."""
+    hosts = eng.hosts
+    seq = _seq_ids(hosts)
+    all_on = jnp.ones((hosts, B), bool)
+    for step in range(start, start + steps):
+        eng.step(seq, _kv(hosts, step), _kv(hosts, step), all_on)
+        if step % 3 == 2:
+            done = np.zeros((hosts, B), bool)
+            done[:, step % B] = True
+            eng.reset(seq, jnp.asarray(done))
+
+
+# ---------------------------------------------------------------------------
+# building blocks (single device, fast)
+# ---------------------------------------------------------------------------
+class TestBuildingBlocks:
+    def test_stack_states_adds_host_dim(self):
+        base = paged.make_paged_kv(B, NP, PS, MP, KVH, HD, gc=GC)
+        st = stack_states(base, 3)
+        for leaf, orig in zip(jax.tree.leaves(st), jax.tree.leaves(base)):
+            assert leaf.shape == (3,) + orig.shape
+            np.testing.assert_array_equal(np.asarray(leaf[1]),
+                                          np.asarray(orig))
+
+    def test_lwm_contributions_sentinel_and_pins(self):
+        eng = _engine(3)
+        contrib = np.asarray(lwm_contributions(eng.st))
+        assert (contrib == int(TS_MAX)).all()       # pin-free boards
+        ts = eng.pin(1, 0)
+        contrib = np.asarray(lwm_contributions(eng.st))
+        assert contrib[1] == ts
+        assert contrib[0] == contrib[2] == int(TS_MAX)
+
+    def test_age_out_stale_replaces_and_counts(self):
+        contrib = jnp.asarray([15, 7, int(TS_MAX)], jnp.int32)
+        aged, n = age_out_stale(contrib, [0.0, 100.0, 100.0], 5.0)
+        np.testing.assert_array_equal(
+            np.asarray(aged), [15, int(TS_MAX), int(TS_MAX)])
+        # only the stale *pinning* lane counts (TS_MAX was already inert)
+        assert int(n) == 1
+
+    def test_global_lwm_without_ring(self):
+        contrib = jnp.asarray([23, 5, int(TS_MAX)], jnp.int32)
+        assert int(global_lwm(contrib)) == 5
+        assert int(global_lwm(jnp.full((4,), TS_MAX, jnp.int32))) \
+            == int(TS_MAX)
+
+    def test_pressure_is_unified_signal_with_host_dim(self):
+        eng = _engine(2)
+        sig = eng.pressure()
+        assert isinstance(sig, PressureSignal)
+        assert sig.under_pressure.shape == (2,)
+        assert sig.capacity.shape == (2,)
+        np.testing.assert_array_equal(np.asarray(sig.capacity), [NP, NP])
+
+
+# ---------------------------------------------------------------------------
+# differential: sharded shards replay the single-host vstore bit-for-bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["ebr", "slrt"])
+def test_sharded_trace_matches_single_host(policy):
+    """The same op trace through (a) the single-host paged stack and (b) the
+    host-stacked vmapped stack with the inert TS_MAX global pin must land in
+    bit-identical states on every host — sharding changes placement, never
+    the protocol."""
+    gc = GCConfig(policy=policy, versions_per_slot=6, reader_lanes=4)
+    hosts = 3
+    single = paged.make_paged_kv(B, NP, PS, MP, KVH, HD, gc=gc)
+    stacked = stack_states(single, hosts)
+    sentinel = jnp.full((hosts, 1), TS_MAX, jnp.int32)
+
+    app1 = jax.jit(functools.partial(paged.append_tokens, gc_policy=policy))
+    rst1 = jax.jit(functools.partial(paged.reset_sequence, gc_policy=policy))
+    rec1 = jax.jit(functools.partial(paged.reclaim_on_pressure,
+                                     gc_policy=policy))
+    apph = jax.jit(jax.vmap(lambda s, q, k, v, m, p: paged.append_tokens(
+        s, q, k, v, m, gc_policy=policy, extra_pins=p)))
+    rsth = jax.jit(jax.vmap(lambda s, q, m, p: paged.reset_sequence(
+        s, q, m, gc_policy=policy, extra_pins=p)))
+    rech = jax.jit(jax.vmap(lambda s, h, d, p: paged.reclaim_on_pressure(
+        s, h, d, gc_policy=policy, extra_pins=p)))
+
+    seq1 = jnp.arange(B, dtype=jnp.int32)
+    seqh = _seq_ids(hosts)
+    on1 = jnp.ones((B,), bool)
+    onh = jnp.ones((hosts, B), bool)
+    for step in range(12):
+        kv1 = _kv(1, step)[0]
+        kvh = jnp.broadcast_to(kv1[None], (hosts, B, KVH, HD))
+        single, f1 = app1(single, seq1, kv1, kv1, on1)
+        stacked, fh = apph(stacked, seqh, kvh, kvh, onh, sentinel)
+        np.testing.assert_array_equal(np.asarray(fh[1]), np.asarray(f1))
+        if step % 4 == 3:
+            done1 = on1 & (seq1 == step % B)
+            single, _ = rst1(single, seq1, done1)
+            stacked, _ = rsth(stacked, seqh,
+                              jnp.broadcast_to(done1[None], (hosts, B)),
+                              sentinel)
+        if step % 5 == 4:
+            hot1 = paged.hot_sequences(single, k=2)
+            single, _ = rec1(single, hot1, jnp.int32(4))
+            hoth = jax.vmap(functools.partial(paged.hot_sequences,
+                                              k=2))(stacked)
+            stacked, _ = rech(stacked, hoth,
+                              jnp.full((hosts,), 4, jnp.int32), sentinel)
+
+    for leaf_h, leaf_1 in zip(jax.tree.leaves(stacked),
+                              jax.tree.leaves(single)):
+        for h in range(hosts):
+            np.testing.assert_array_equal(np.asarray(leaf_h[h]),
+                                          np.asarray(leaf_1))
+
+
+# ---------------------------------------------------------------------------
+# global-LWM safety: a pin on one host protects snapshots on every host
+# ---------------------------------------------------------------------------
+def test_pin_on_one_host_protects_every_shard():
+    """A reader pins on host 0's board and snapshot-reads *every* host's
+    shard at that timestamp (announcement lanes are host-local; only the
+    global LWM carries the pin across).  Under churn + forced reclaims, all
+    those views must stay byte-identical.  The control run with the LWM
+    neutered must corrupt a remote view — proving the global LWM is the
+    load-bearing protection, not local boards or luck."""
+    def run(neuter_lwm: bool) -> int:
+        eng = _engine(4)
+        if neuter_lwm:
+            sentinel = jnp.full((eng.hosts, 1), TS_MAX, jnp.int32)
+            eng.lwm_pins = lambda: sentinel
+        _churn(eng, 4)
+        ts = eng.pin(0, 0)
+        refs = {}
+        for h in range(eng.hosts):
+            tbl, ln = eng.view_at(h, ts)
+            refs[h] = _checksum(eng.host_state(h), np.asarray(tbl),
+                                np.asarray(ln))
+        _churn(eng, 8, start=4)
+        eng.reclaim(deficit=NP)          # full cold-spill sweep, every shard
+        _churn(eng, 4, start=12)
+        bad = 0
+        for h in range(eng.hosts):
+            tbl, ln = eng.view_at(h, ts)
+            now = _checksum(eng.host_state(h), np.asarray(tbl),
+                            np.asarray(ln))
+            if now != refs[h]:
+                bad += 1
+        return bad
+
+    assert run(neuter_lwm=False) == 0
+    assert run(neuter_lwm=True) > 0
+
+
+def test_lwm_tracks_min_over_hosts():
+    eng = _engine(3)
+    _churn(eng, 3)
+    t0 = eng.pin(0, 0)
+    _churn(eng, 2, start=3)
+    t1 = eng.pin(1, 0)
+    assert t1 > t0
+    pins = np.asarray(eng.lwm_pins())
+    assert pins.shape == (3, 1)
+    assert (pins == t0).all()            # min over hosts, broadcast to all
+    eng.unpin(0, 0)
+    assert (np.asarray(eng.lwm_pins()) == t1).all()
+    assert eng.lwm_advances >= 1         # the LWM moved up off a real pin
+
+
+# ---------------------------------------------------------------------------
+# straggler tolerance: a stalled host bounds reclamation, never blocks it
+# ---------------------------------------------------------------------------
+def test_stalled_host_is_aged_out_and_reclamation_proceeds():
+    gc = GCConfig(policy="slrt", versions_per_slot=6, reader_lanes=4,
+                  stale_after_s=5.0)
+    eng = _engine(4, gc=gc)
+    _churn(eng, 4)
+    ts = eng.pin(1, 0)                   # the soon-to-stall host pins
+    assert (np.asarray(eng.lwm_pins()) == ts).all()
+
+    # host 1 stalls past its staleness budget; its announcement ages out
+    ages = np.zeros((4,), np.float32)
+    ages[1] = 100.0
+    eng.virtual_ages_s = ages
+    pins = np.asarray(eng.lwm_pins())
+    assert (pins == int(TS_MAX)).all()   # stale pin no longer bounds the LWM
+    assert eng.stats.stale_lanes_aged >= 1
+
+    # the remaining hosts keep reclaiming as if the pin were gone
+    before = eng.stats.reclaimed
+    _churn(eng, 6, start=4)
+    eng.reclaim(deficit=NP)
+    assert eng.stats.reclaimed > before
+
+    # the stalled host's *local* board still protects its own shard: its
+    # held snapshot stays byte-stable even though the mesh moved on
+    tbl, ln = eng.view_at(1, ts)
+    ref = _checksum(eng.host_state(1), np.asarray(tbl), np.asarray(ln))
+    _churn(eng, 3, start=10)
+    tbl, ln = eng.view_at(1, ts)
+    assert _checksum(eng.host_state(1), np.asarray(tbl),
+                     np.asarray(ln)) == ref
+
+    row = eng.space()
+    assert row["stale_lanes_aged"] >= 1
+    assert row["pages_reclaimed"] > 0
+
+
+def test_fresh_hosts_never_aged_with_infinite_budget():
+    eng = _engine(2)                     # stale_after_s=inf -> watchdog
+    _churn(eng, 3)
+    assert eng.stats.stale_lanes_aged == 0
+    assert (eng.budget_s() > 0).all()    # warmup budget is finite, not inf
