@@ -1,0 +1,401 @@
+"""Fork-DAG + checkpoint-coupled GC bench for the paged-KV serving stack
+(DESIGN.md §14).
+
+Drives ``repro.serve.engine.PagedKVEngine``'s first-class lineage ops
+(``fork`` / ``join`` / ``release``) and its checkpoint coupling
+(``checkpoint()`` arming turso's sole-survivor eviction rule) through three
+workload families, every cell embedding its own measured controls:
+
+* **beam** — beam-search decoding: roots fork ``beam_width`` children per
+  round, children decode a few tokens, the best child joins back, the rest
+  release.  The same op sequence re-runs on an ``eager_fork=True`` engine
+  (every fork deep-copies the parent's pages) and the row records both
+  peaks: ``shared_savings_pages = eager_peak_pages - peak_pages`` is the
+  space COW sharing saved, and must be strictly positive on every forking
+  row.
+* **spec** — speculative decoding: each root forks a draft, the draft runs
+  ahead, and the root either adopts it (``join``) or rejects it
+  (``release``) — the fork/join-heavy shape.
+* **ckpt_churn** — a batch where most sequences go idle after a warmup
+  phase while the rest keep decoding under an undersized pool.  Idle
+  sole-survivor sequences hold pages **no GC policy can reclaim** (current
+  versions are always needed); after ``checkpoint()`` the same reclaim
+  pass evicts them (``ckpt_pages_freed > 0``), and the identical run
+  *without* a checkpoint proves the converse: ``control_ckpt_pages_freed
+  == 0`` and ``control_end_pages`` stays pinned high.
+
+Replay validation extends the pinned-snapshot checking of
+``serve_bench.py`` to fork DAGs (``repro.serve.forking.ForkValidator``):
+at fork time the child's inherited prefix is fingerprinted (exact K
+values), and on every later step the child's current view must reproduce
+it byte-for-byte (``prefix_checks`` / ``prefix_violations``; the driver
+exits nonzero on any violation).  ``forking.check_no_leak`` — refcount
+oracle vs. the refcount-free reachability sweep — runs after every round.
+
+Rows are ``ForkMeasurement`` (serve fields + ``units["fork_bench"]``; the
+serve-dormant ``forks`` field carries the real engine fork count here).
+
+  python benchmarks/fork_bench.py                  # standard = beam tier
+  python benchmarks/fork_bench.py --smoke          # tiny CI matrix (seconds)
+  python benchmarks/fork_bench.py --tiers smoke,beam,spec,ckpt_churn
+  python benchmarks/fork_bench.py --out PATH
+
+The committed repo-root ``BENCH_fork.json`` is generated with
+``--tiers smoke,beam,spec,ckpt_churn`` so CI can compare a fresh
+``--smoke`` run cell-for-cell against the committed smoke rows while the
+trajectory keeps the full tiers for plotting and the fork-invariant gate
+(``tools/check_bench_json.py --serve``).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.sim.measure import BenchDriver, ForkMeasurement
+from repro.core.telemetry import GCConfig
+from repro.serve import forking
+from repro.serve.engine import PagedKVEngine
+
+DEFAULT_OUT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_fork.json")
+
+POLICIES = ("ebr", "steam", "dlrt", "slrt")
+
+TABLE_COLS = [
+    "scheme", "forks", "joins", "releases", "pages_shared_peak",
+    "peak_pages", "eager_peak_pages", "shared_savings_pages",
+    "prefix_checks", "prefix_violations", "ckpt_pages_freed",
+    "control_end_pages", "end_space_words", "give_ups", "wall_s",
+]
+
+# Tier geometry.  The fork tiers size the pool so neither the COW run nor
+# the eager control saturates — the peak gap is then exactly the pages
+# sharing saved.  Forks always happen with the parent past one full page,
+# so the eager copy is strictly larger than COW's partial-tail copy.
+# ``ckpt_churn`` undersizes the pool against the *control's* demand
+# (idle + active > num_pages) while keeping the checkpointed run's demand
+# (active only, after eviction) inside it.
+TIERS = {
+    "smoke": dict(kind="beam", num_seqs=6, num_pages=24, page_size=4,
+                  max_pages_per_seq=6, versions_per_seq=8, roots=(0,),
+                  prefill=6, rounds=2, beam_width=2, child_tokens=2,
+                  join_every=2, seed=0),
+    "beam": dict(kind="beam", num_seqs=8, num_pages=40, page_size=4,
+                 max_pages_per_seq=6, versions_per_seq=8, roots=(0, 1),
+                 prefill=6, rounds=6, beam_width=2, child_tokens=2,
+                 join_every=2, seed=0),
+    "spec": dict(kind="spec", num_seqs=6, num_pages=48, page_size=4,
+                 max_pages_per_seq=8, versions_per_seq=10, roots=(0, 1, 2),
+                 prefill=5, rounds=8, draft_tokens=3, seed=0),
+    "ckpt_churn": dict(kind="ckpt", num_seqs=8, num_pages=20, page_size=4,
+                       max_pages_per_seq=6, versions_per_seq=8, idle=5,
+                       phase1_steps=8, phase2_steps=16, seed=0),
+}
+
+KV_HEADS, HEAD_DIM, READER_LANES = 1, 4, 4
+NOW = 2**31 - 2          # "current" snapshot timestamp (any ts works)
+
+
+class _Run:
+    """One engine run's host-side accounting (the COW main run, the eager
+    control, or the no-checkpoint control share this loop harness)."""
+
+    def __init__(self, p: Dict, policy: str, eager: bool):
+        self.p = p
+        self.eng = PagedKVEngine(
+            p["num_seqs"], p["num_pages"], p["page_size"],
+            p["max_pages_per_seq"], KV_HEADS, HEAD_DIM,
+            gc=GCConfig(policy=policy,
+                        versions_per_slot=p["versions_per_seq"],
+                        reader_lanes=READER_LANES, hot_k=p["num_seqs"]),
+            eager_fork=eager, dtype=jnp.float32)
+        self.validator = forking.ForkValidator()
+        self.B = p["num_seqs"]
+        self.ids = jnp.arange(self.B, dtype=jnp.int32)
+        self.tokens = 0
+        self.step_no = 0
+        self.shared_peak = 0
+        self.leaks = 0
+        self.ckpt_saves = 0
+
+    def _sample(self) -> None:
+        self.shared_peak = max(self.shared_peak,
+                               forking.shared_page_count(self.eng.st))
+        ok, _, _ = forking.check_no_leak(self.eng.st)
+        if not ok:
+            self.leaks += 1
+
+    def views(self) -> tuple:
+        tbl, ln = self.eng.view_at(NOW)
+        return np.asarray(tbl), np.asarray(ln)
+
+    def append(self, mask: np.ndarray) -> np.ndarray:
+        """One decode step over ``mask``; per-(step, seq) distinct payload
+        values so a wrongly recycled page shows up in a prefix check."""
+        self.step_no += 1
+        base = np.arange(self.B, dtype=np.float32) + self.B * self.step_no
+        kv = jnp.asarray(np.broadcast_to(
+            base[:, None, None], (self.B, KV_HEADS, HEAD_DIM)))
+        failed = np.asarray(self.eng.step(self.ids, kv, kv,
+                                          jnp.asarray(mask)))
+        self.tokens += int((mask & ~failed).sum())
+        self._sample()
+        return failed
+
+    def fork(self, pairs: List[tuple]) -> None:
+        """Fork (src, dst) pairs and register each child's inherited prefix
+        with the validator."""
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        mask = jnp.ones((len(pairs),), bool)
+        failed = np.asarray(self.eng.fork(src, dst, mask))
+        self._sample()
+        tbl, ln = self.views()
+        for (s, d), bad in zip(pairs, failed):
+            if not bad:
+                self.validator.note_fork(self.eng.st, d, tbl[d], int(ln[d]))
+
+    def check_children(self, children: List[int]) -> None:
+        tbl, ln = self.views()
+        for c in children:
+            self.validator.check(self.eng.st, c, tbl[c], int(ln[c]))
+
+    def join(self, pairs: List[tuple]) -> None:
+        src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+        dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+        self.eng.join(src, dst, jnp.ones((len(pairs),), bool))
+        for s, _ in pairs:
+            self.validator.drop(s)
+        self._sample()
+
+    def release(self, slots: List[int]) -> None:
+        ids = jnp.asarray(slots, jnp.int32)
+        self.eng.release(ids, jnp.ones((len(slots),), bool))
+        for s in slots:
+            self.validator.drop(s)
+        self._sample()
+
+
+def _beam_workload(run: _Run) -> None:
+    """Beam search: each root forks ``beam_width`` children, children
+    decode ``child_tokens`` steps (prefix-checked each step), then the
+    first child joins back into its root (every ``join_every``-th round)
+    and the rest release."""
+    p = run.p
+    roots = list(p["roots"])
+    child_slots = [s for s in range(run.B) if s not in roots]
+    mask0 = np.zeros((run.B,), bool)
+    for r in roots:
+        mask0[r] = True
+    for _ in range(p["prefill"]):
+        run.append(mask0)
+    for rnd in range(p["rounds"]):
+        pairs, by_root = [], {}
+        free = list(child_slots)
+        for r in roots:
+            kids = [free.pop(0) for _ in range(p["beam_width"])]
+            by_root[r] = kids
+            pairs.extend((r, k) for k in kids)
+        run.fork(pairs)
+        kids_mask = np.zeros((run.B,), bool)
+        for _, k in pairs:
+            kids_mask[k] = True
+        for _ in range(p["child_tokens"]):
+            run.append(kids_mask)
+            run.check_children([k for _, k in pairs])
+        # the root advances too, desynchronizing parent and child tails
+        run.append(mask0)
+        run.check_children([k for _, k in pairs])
+        if (rnd + 1) % p["join_every"] == 0:
+            run.join([(by_root[r][0], r) for r in roots])
+            run.release([k for r in roots for k in by_root[r][1:]])
+        else:
+            run.release([k for r in roots for k in by_root[r]])
+
+
+def _spec_workload(run: _Run) -> None:
+    """Speculative decoding: each root forks a draft that runs
+    ``draft_tokens`` ahead; even rounds accept (join), odd rounds reject
+    (release)."""
+    p = run.p
+    roots = list(p["roots"])
+    drafts = [s for s in range(run.B) if s not in roots][:len(roots)]
+    mask0 = np.zeros((run.B,), bool)
+    for r in roots:
+        mask0[r] = True
+    for _ in range(p["prefill"]):
+        run.append(mask0)
+    for rnd in range(p["rounds"]):
+        pairs = list(zip(roots, drafts))
+        run.fork(pairs)
+        draft_mask = np.zeros((run.B,), bool)
+        for d in drafts:
+            draft_mask[d] = True
+        for _ in range(p["draft_tokens"]):
+            run.append(draft_mask)
+            run.check_children(drafts)
+        if rnd % 2 == 0:
+            run.join([(d, r) for r, d in pairs])
+        else:
+            run.release(drafts)
+
+
+def _ckpt_workload(run: _Run, with_ckpt: bool) -> None:
+    """Checkpoint churn: all sequences decode ``phase1_steps``, then the
+    first ``idle`` go quiet while the rest keep decoding.  With
+    ``with_ckpt`` the engine checkpoints at the phase boundary, decodes one
+    active step (so active current versions move past ``ckpt_max``), and
+    forces a full reclaim — the sole-survivor eviction frees the idle
+    pages durable storage already holds.  The control runs the identical
+    schedule minus the ``checkpoint()`` call."""
+    p = run.p
+    all_mask = np.ones((run.B,), bool)
+    active_mask = np.zeros((run.B,), bool)
+    active_mask[p["idle"]:] = True
+    for _ in range(p["phase1_steps"]):
+        run.append(all_mask)
+    with tempfile.TemporaryDirectory() as d:
+        if with_ckpt:
+            run.eng.checkpoint(d)
+            run.ckpt_saves += 1
+        # active sequences write first: their current versions get
+        # ts > ckpt_max, so the forced reclaim below can only evict the
+        # idle-since-checkpoint ones (DESIGN.md §14)
+        run.append(active_mask)
+        run.eng.reclaim(p["num_seqs"] * p["versions_per_seq"])
+        for _ in range(p["phase2_steps"] - 1):
+            run.append(active_mask)
+
+
+def run_cell(tier: str, policy: str) -> ForkMeasurement:
+    p = TIERS[tier]
+    t0 = time.time()
+
+    main = _Run(p, policy, eager=False)
+    if p["kind"] == "beam":
+        _beam_workload(main)
+        eager = _Run(p, policy, eager=True)
+        _beam_workload(eager)
+        control: Optional[_Run] = None
+    elif p["kind"] == "spec":
+        _spec_workload(main)
+        eager = _Run(p, policy, eager=True)
+        _spec_workload(eager)
+        control = None
+    else:
+        _ckpt_workload(main, with_ckpt=True)
+        eager = None
+        control = _Run(p, policy, eager=False)
+        _ckpt_workload(control, with_ckpt=False)
+    wall = time.time() - t0
+
+    eng = main.eng
+    space = eng.space()
+    v = main.validator
+    checks = v.checked
+    violations = v.violations + main.leaks
+    eager_peak = eager.eng.peak_pages if eager is not None else 0
+    work = main.tokens + checks
+    B = p["num_seqs"]
+    return ForkMeasurement(
+        bench="fork", figure=f"fork_dag/{tier}", ds="paged_kv",
+        scheme=policy, mix=tier, scan_size=0, zipf=0.0,
+        n_keys=p["num_pages"], num_procs=B, ops_per_proc=main.step_no,
+        seed=p["seed"], updates=main.tokens, lookups=0, scans=eng.forks,
+        scan_keys=checks, total_work=work,
+        ops_per_mwork=round((main.tokens + eng.forks)
+                            / max(1, work) * 1e6, 3),
+        updates_per_mwork=round(main.tokens / max(1, work) * 1e6, 3),
+        scan_keys_per_mwork=round(checks / max(1, work) * 1e6, 3),
+        peak_space_words=eng.peak_pages,
+        peak_versions=space["max_slot_occupancy"],
+        avg_space_words=0,
+        end_space_words=space["live_pages"],
+        end_versions_per_list=round(space["live_versions"] / B, 4),
+        scans_validated=checks, scan_violations=violations,
+        wall_s=round(wall, 2),
+        reclaims_triggered=eng.reclaims_triggered,
+        peak_space_post_reclaim=eng.peak_pages_post_reclaim,
+        pressure_events=eng.pressure_events,
+        pages_reclaimed=eng.pages_reclaimed,
+        peak_pages=eng.peak_pages,
+        peak_pages_post_reclaim=eng.peak_pages_post_reclaim,
+        page_pool=p["num_pages"], page_size=p["page_size"],
+        decode_steps=main.step_no, tokens_appended=main.tokens,
+        sequences_completed=0, forks=eng.forks, give_ups=eng.give_ups,
+        snapshot_pins=0,
+        overflow_count=space["overflows"],
+        dropped_retires=space["dropped_retires"],
+        joins=eng.joins, releases=eng.releases,
+        pages_shared_peak=main.shared_peak,
+        eager_peak_pages=eager_peak,
+        shared_savings_pages=max(0, eager_peak - eng.peak_pages)
+        if eager is not None else 0,
+        prefix_checks=checks, prefix_violations=v.violations,
+        ckpt_saves=main.ckpt_saves,
+        ckpt_evictions=eng.stats.ckpt_evictions,
+        ckpt_pages_freed=eng.stats.ckpt_freed,
+        control_ckpt_pages_freed=(control.eng.stats.ckpt_freed
+                                  if control is not None else 0),
+        control_end_pages=(int(control.eng.space()["live_pages"])
+                           if control is not None else 0),
+        scheme_stats={"leak_checks_failed": main.leaks},
+    )
+
+
+def run_tier(tier: str) -> List[ForkMeasurement]:
+    rows = []
+    for policy in POLICIES:
+        m = run_cell(tier, policy)
+        rows.append(m)
+        if m.prefix_violations or m.scan_violations:
+            print(f"!! fork-DAG violations in {tier}/{policy}: "
+                  f"prefix={m.prefix_violations} "
+                  f"total={m.scan_violations}", file=sys.stderr)
+    return rows
+
+
+def _summarize(rows: List[ForkMeasurement]) -> str:
+    return (f"{sum(m.forks for m in rows)} forks / "
+            f"{sum(m.joins for m in rows)} joins / "
+            f"{sum(m.releases for m in rows)} releases, "
+            f"COW saved {sum(m.shared_savings_pages for m in rows)} peak "
+            f"pages vs eager, ckpt eviction freed "
+            f"{sum(m.ckpt_pages_freed for m in rows)} pages "
+            f"(controls: {sum(m.control_ckpt_pages_freed for m in rows)}), "
+            f"{sum(m.prefix_checks for m in rows)} prefix checks, "
+            f"{sum(m.prefix_violations for m in rows)} violations")
+
+
+def _post_check(rows: List[ForkMeasurement]) -> List[str]:
+    problems = []
+    violations = sum(m.scan_violations for m in rows)
+    if violations:
+        problems.append(
+            f"fork-DAG replay/leak violations detected ({violations})")
+    return problems
+
+
+DRIVER = BenchDriver(
+    bench="fork", schema="fork", tiers=TIERS, run_tier=run_tier,
+    default_out=DEFAULT_OUT, table_cols=TABLE_COLS, col_width=14,
+    summarize=_summarize, post_check=_post_check, default_tier="beam",
+)
+
+
+def main(argv=None) -> int:
+    return DRIVER.main(argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

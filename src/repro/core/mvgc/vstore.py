@@ -26,6 +26,16 @@ like a local board lane.  Single-host callers leave it ``None`` (bit-for-bit
 the pre-existing behaviour); the sharded stack (``repro.dist.mvgc``)
 injects the mesh-wide low-water mark so no shard reclaims a version pinned
 by *any* host (DESIGN.md §13).
+
+``gc_step`` / ``reclaim_on_pressure`` additionally take an optional
+``ckpt_max`` — the highest durably checkpointed timestamp (``EMPTY`` = no
+checkpoint).  It unlocks turso's *sole-survivor* rule (SNIPPETS.md §1,
+DESIGN.md §14): a slot's only live version, durable at-or-before
+``ckpt_max`` and older than every pin, may be evicted even though it is
+current — durable storage has the data, ``restore()`` brings it back.  The
+kill is applied as one shared post-pass (:func:`evict_checkpointed`) after
+the policy's own collection, so all five policies inherit it with zero
+policy-specific code — exactly like the ``extra_pins`` threading.
 """
 from __future__ import annotations
 
@@ -234,6 +244,49 @@ def _ebr_bound(state: MVState, extra_pins: Optional[jax.Array]) -> jax.Array:
     return bound
 
 
+def ckpt_kill_mask(state: MVState, ckpt_max: jax.Array,
+                   extra_pins: Optional[jax.Array] = None) -> jax.Array:
+    """bool[S, V]: turso's sole-survivor rule (SNIPPETS.md §1 rule 3,
+    DESIGN.md §14).  An entry is evictable iff it is the *current* version
+    (``succ == TS_MAX``), its slot's **only** live version (chain length 1 —
+    older versions must drain through the normal policies first), it began
+    at-or-before the durable checkpoint (``ts <= ckpt_max``: the slot has
+    not been written since the checkpoint, so durable storage holds exactly
+    this state), and it began before every pin in the system (``ts <
+    bound``, the same LWM every policy honours).  ``ckpt_max`` is a traced
+    i32 scalar; the ``EMPTY`` (-1) sentinel disables the rule entirely, so
+    the mask composes under jit without retracing."""
+    store = state.store
+    ckpt = jnp.asarray(ckpt_max, jnp.int32)
+    bound = _ebr_bound(state, extra_pins)
+    valid = store.ts != EMPTY
+    sole = (valid.sum(axis=1) == 1)[:, None]
+    cur = (store.succ == TS_MAX) & valid
+    return (cur & sole & (store.ts <= ckpt) & (store.ts < bound)
+            & (ckpt >= 0))
+
+
+def evict_checkpointed(
+    state: MVState,
+    ckpt_max: jax.Array,
+    extra_pins: Optional[jax.Array] = None,
+) -> Tuple[MVState, jax.Array, jax.Array]:
+    """Free every entry :func:`ckpt_kill_mask` marks.  Returns
+    (state', freed_payloads[S*V] with EMPTY holes, n_evicted).
+
+    This is the checkpoint-coupled reclamation edge no policy can make on
+    its own: current versions are by definition needed(A, t), so without a
+    durable copy they are pinned forever.  With one, an idle-since-
+    checkpoint slot's last version (and every page it pins, in the paged
+    stack) becomes free — ``restore()`` resurrects it on demand.  Callers
+    treat an evicted slot like a cold-miss: reading it finds no current
+    version until the slot is restored or rewritten."""
+    kill = ckpt_kill_mask(state, ckpt_max, extra_pins)
+    freed = jnp.where(kill, state.store.payload, EMPTY).reshape(-1)
+    n = kill.sum().astype(jnp.int32)
+    return state._replace(store=pool.free_entries(state.store, kill)), freed, n
+
+
 def gc_step(
     state: MVState,
     policy: str = "slrt",
@@ -242,6 +295,7 @@ def gc_step(
     use_kernel: bool = False,
     interpret: bool = True,
     extra_pins: Optional[jax.Array] = None,
+    ckpt_max: Optional[jax.Array] = None,
 ) -> Tuple[MVState, jax.Array]:
     """Run the policy's collection pass.  Returns (state', freed_payloads).
 
@@ -249,7 +303,29 @@ def gc_step(
     ``flush_fraction`` (or unconditionally when ``force``) — the batched
     analogue of flushing every Θ(P log P) adds.  ``extra_pins`` (i32[...],
     ``TS_MAX`` = no pin) injects external announcements — e.g. the sharded
-    stack's global LWM — honoured by every policy exactly like board lanes."""
+    stack's global LWM — honoured by every policy exactly like board lanes.
+    ``ckpt_max`` (i32[], ``EMPTY`` = none) appends the checkpoint-coupled
+    sole-survivor post-pass (:func:`evict_checkpointed`) after the policy's
+    own collection — every policy inherits it unchanged (DESIGN.md §14)."""
+    state, freed = _policy_gc_step(
+        state, policy=policy, force=force, flush_fraction=flush_fraction,
+        use_kernel=use_kernel, interpret=interpret, extra_pins=extra_pins)
+    if ckpt_max is not None:
+        state, freed_ck, _ = evict_checkpointed(state, ckpt_max, extra_pins)
+        freed = jnp.concatenate([freed.reshape(-1), freed_ck])
+    return state, freed
+
+
+def _policy_gc_step(
+    state: MVState,
+    policy: str = "slrt",
+    force: bool = False,
+    flush_fraction: float = 0.5,
+    use_kernel: bool = False,
+    interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
+) -> Tuple[MVState, jax.Array]:
+    """The per-policy collection pass proper (no checkpoint post-pass)."""
     assert policy in POLICIES, policy
     S, V = state.store.ts.shape
     if policy == "ebr":
@@ -419,6 +495,32 @@ def reclaim_on_pressure(
     state: MVState,
     hot_keys: jax.Array,  # i32[K] hot slot ids (-1 = inert lane), cf. hot_slots()
     deficit: jax.Array,   # i32[]  versions to free (capacity_gate().deficit)
+    policy: str = "slrt",
+    use_kernel: bool = False,
+    interpret: bool = True,
+    extra_pins: Optional[jax.Array] = None,
+    ckpt_max: Optional[jax.Array] = None,
+) -> Tuple[MVState, jax.Array, jax.Array]:
+    """Synchronous pressure response with the optional checkpoint-coupled
+    post-pass: the policy reclaim runs first (:func:`_policy_reclaim`), then
+    — when ``ckpt_max`` is given (i32[], ``EMPTY`` = none) — the sole-
+    survivor eviction frees idle-since-checkpoint slots the policy cannot
+    touch (DESIGN.md §14).  Returns (state', freed_payloads, n_freed); the
+    interface is otherwise exactly :func:`_policy_reclaim`'s."""
+    live0 = live_versions(state)
+    state, freed, _ = _policy_reclaim(
+        state, hot_keys, deficit, policy=policy, use_kernel=use_kernel,
+        interpret=interpret, extra_pins=extra_pins)
+    if ckpt_max is not None:
+        state, freed_ck, _ = evict_checkpointed(state, ckpt_max, extra_pins)
+        freed = jnp.concatenate([freed.reshape(-1), freed_ck])
+    return state, freed, live0 - live_versions(state)
+
+
+def _policy_reclaim(
+    state: MVState,
+    hot_keys: jax.Array,
+    deficit: jax.Array,
     policy: str = "slrt",
     use_kernel: bool = False,
     interpret: bool = True,

@@ -110,6 +110,23 @@ UNITS = {
                     "bandwidth peak for the timed backend (launch/roofline."
                     "py; DESIGN.md §12).  Deterministic cells (bytes_moved, "
                     "target_*) are trajectory-gated; timing cells are not.",
+    "fork_bench": "BENCH_fork rows measure one fork-DAG serving run "
+                  "(DESIGN.md §14): forks/joins/releases count successful "
+                  "engine lineage ops; pages_shared_peak is the max count "
+                  "of pages referenced by >1 live table version (COW "
+                  "sharing the eager-copy control cannot have); "
+                  "eager_peak_pages is the peak of the same cell re-run "
+                  "with fork_sequence(copy_pages=True) and "
+                  "shared_savings_pages = eager_peak_pages - peak_pages; "
+                  "prefix_checks/prefix_violations count ForkValidator "
+                  "byte-stability replays of inherited prefixes (must be "
+                  "0 violations); ckpt_saves counts engine checkpoints "
+                  "taken, ckpt_evictions/ckpt_pages_freed the sole-"
+                  "survivor evictions they enabled, and control_ckpt_"
+                  "pages_freed/control_end_pages the same cell re-run "
+                  "without any checkpoint — the control provably cannot "
+                  "make those reclaims (ckpt freed stays 0, end pages "
+                  "stay higher)",
     "dist_bench": "BENCH_dist rows measure one sharded multi-host serving "
                   "run (repro.dist.mvgc; DESIGN.md §13): page counts are "
                   "summed over every host's pool; lwm is the final "
@@ -418,6 +435,34 @@ class DistMeasurement(ServeMeasurement):
 
 
 @dataclass
+class ForkMeasurement(ServeMeasurement):
+    """One ``BENCH_fork.json`` cell: a fork-DAG serving run (DESIGN.md §14).
+
+    Extends the serve row — space/pressure fields keep their serve meaning;
+    the inherited ``forks`` field (dormant in serve rows) carries the real
+    engine fork count here — with the COW-vs-eager and checkpoint-coupling
+    evidence in ``units["fork_bench"]``.  Every cell embeds its own
+    controls: ``eager_peak_pages`` is the same workload re-run with eager
+    page copying (``shared_savings_pages`` is what COW saved), and
+    ``control_ckpt_pages_freed`` / ``control_end_pages`` are the same
+    workload re-run with no checkpoint (the reclaims checkpoint coupling
+    enabled are exactly the ones that control cannot make)."""
+
+    joins: int = 0
+    releases: int = 0
+    pages_shared_peak: int = 0
+    eager_peak_pages: int = 0
+    shared_savings_pages: int = 0
+    prefix_checks: int = 0
+    prefix_violations: int = 0
+    ckpt_saves: int = 0
+    ckpt_evictions: int = 0
+    ckpt_pages_freed: int = 0
+    control_ckpt_pages_freed: int = 0
+    control_end_pages: int = 0
+
+
+@dataclass
 class KernelMeasurement(Measurement):
     """One ``BENCH_kernel.json`` cell: a fused Pallas primitive timed on one
     shape against the unfused lax baseline, with its roofline-derived
@@ -530,6 +575,12 @@ SERVE_FIELDS = ("pressure_events", "pages_reclaimed", "peak_pages",
 DIST_FIELDS = SERVE_FIELDS + ("hosts", "lwm", "lwm_advances",
                               "stale_lanes_aged", "stalled_hosts",
                               "under_pressure_hosts", "pin_violations")
+
+FORK_FIELDS = SERVE_FIELDS + (
+    "forks", "joins", "releases", "pages_shared_peak", "eager_peak_pages",
+    "shared_savings_pages", "prefix_checks", "prefix_violations",
+    "ckpt_saves", "ckpt_evictions", "ckpt_pages_freed",
+    "control_ckpt_pages_freed", "control_end_pages")
 
 KERNEL_FIELDS = ("kernel", "shape", "backend", "path", "bytes_moved",
                  "iters", "us_fused", "us_unfused", "speedup", "gb_s",
@@ -743,6 +794,112 @@ def check_dist_rows(rows: List[Dict[str, Any]],
                 f"{fig} show working global-LWM reclamation (need a "
                 f"majority with reclaims > 0, pages freed > 0, "
                 f"lwm_advances > 0)")
+    return problems
+
+
+def check_fork_rows(rows: List[Dict[str, Any]],
+                    options: Dict[str, Any]) -> List[str]:
+    """fork-schema invariants (DESIGN.md §14), layered on the serve per-row
+    checks.  Hard per-row rules: the replay validator is clean
+    (``prefix_violations == 0``), sharing stays inside the live set
+    (``pages_shared_peak <= peak_pages``), lineage ops are consistent
+    (``forks >= joins``; a fork-free cell reports zero sharing, joins,
+    releases and savings), every forking cell with a measured eager control
+    shows a **strict** COW saving (``eager_peak_pages > peak_pages``), and
+    checkpoint accounting only appears when a checkpoint was taken — with
+    the no-checkpoint control proving the converse (``control_ckpt_pages_
+    freed == 0`` always; a cell with ckpt-freed pages must also show
+    ``control_end_pages > end_space_words``, the pages the control could
+    not free).  With ``options["require_pressure"]``, the most-reclaiming
+    tier must show working reclamation in a majority of its cells and at
+    least one row must prove the checkpoint edge (``ckpt_pages_freed >
+    0``)."""
+    require_pressure = bool(options.get("require_pressure", False))
+    problems = check_serve_rows(rows, {**options, "require_pressure": False})
+    for i, r in enumerate(rows):
+        missing = [k for k in FORK_FIELDS if k not in r]
+        if missing:
+            problems.append(f"row {i} missing fork fields: {missing}")
+            continue
+        for f in ("forks", "joins", "releases", "pages_shared_peak",
+                  "eager_peak_pages", "shared_savings_pages",
+                  "prefix_checks", "prefix_violations", "ckpt_saves",
+                  "ckpt_evictions", "ckpt_pages_freed",
+                  "control_ckpt_pages_freed", "control_end_pages"):
+            if r[f] < 0:
+                problems.append(f"row {i}: {f}={r[f]} < 0")
+        if r["prefix_violations"] != 0:
+            problems.append(
+                f"row {i} ({r['figure']}): prefix_violations="
+                f"{r['prefix_violations']} != 0 — a fork child's inherited "
+                f"prefix changed under it (shared-page safety broken)")
+        if r["pages_shared_peak"] > r["peak_pages"]:
+            problems.append(
+                f"row {i}: pages_shared_peak={r['pages_shared_peak']} > "
+                f"peak_pages={r['peak_pages']}")
+        if r["forks"] < r["joins"]:
+            problems.append(
+                f"row {i}: forks={r['forks']} < joins={r['joins']} (every "
+                f"join consumes a forked child)")
+        if r["forks"] == 0:
+            for f in ("joins", "releases", "pages_shared_peak",
+                      "shared_savings_pages"):
+                if r[f]:
+                    problems.append(
+                        f"row {i}: {f}={r[f]} nonzero with forks=0 "
+                        f"(zero-fork consistency)")
+        elif r["eager_peak_pages"]:
+            if r["eager_peak_pages"] <= r["peak_pages"]:
+                problems.append(
+                    f"row {i} ({r['figure']}): eager_peak_pages="
+                    f"{r['eager_peak_pages']} <= peak_pages="
+                    f"{r['peak_pages']} — COW forking must strictly beat "
+                    f"the eager-copy control")
+            want = r["eager_peak_pages"] - r["peak_pages"]
+            if r["shared_savings_pages"] != want:
+                problems.append(
+                    f"row {i}: shared_savings_pages="
+                    f"{r['shared_savings_pages']} != eager_peak - peak "
+                    f"= {want}")
+        if r["control_ckpt_pages_freed"] != 0:
+            problems.append(
+                f"row {i}: control_ckpt_pages_freed="
+                f"{r['control_ckpt_pages_freed']} != 0 — the no-checkpoint "
+                f"control made a checkpoint-coupled reclaim")
+        if r["ckpt_saves"] == 0 and (r["ckpt_evictions"]
+                                     or r["ckpt_pages_freed"]):
+            problems.append(
+                f"row {i}: checkpoint eviction outputs nonzero (evictions="
+                f"{r['ckpt_evictions']}, pages={r['ckpt_pages_freed']}) "
+                f"with ckpt_saves=0")
+        if r["ckpt_pages_freed"] > 0 and (
+                r["control_end_pages"] <= r["end_space_words"]):
+            problems.append(
+                f"row {i} ({r['figure']}): ckpt_pages_freed="
+                f"{r['ckpt_pages_freed']} but control_end_pages="
+                f"{r['control_end_pages']} <= end pages="
+                f"{r['end_space_words']} — the no-checkpoint control "
+                f"should be stuck holding the pages eviction freed")
+    if require_pressure and not problems:
+        by_fig: Dict[str, List[Dict[str, Any]]] = {}
+        for r in rows:
+            by_fig.setdefault(r.get("figure"), []).append(r)
+        fig, cells = max(
+            by_fig.items(),
+            key=lambda kv: sum(c["reclaims_triggered"] for c in kv[1]))
+        good = [c for c in cells
+                if c["reclaims_triggered"] > 0 and c["pages_reclaimed"] > 0]
+        if len(good) * 2 <= len(cells):
+            problems.append(
+                f"require_pressure: only {len(good)}/{len(cells)} cells of "
+                f"{fig} show working pressure reclamation (need a majority "
+                f"with reclaims > 0 and pages freed > 0)")
+        if not any(r["ckpt_pages_freed"] > 0 for r in rows):
+            problems.append(
+                "require_pressure: no fork row proves the checkpoint "
+                "reclamation edge (need at least one cell with "
+                "ckpt_pages_freed > 0 that its no-checkpoint control "
+                "cannot match)")
     return problems
 
 
@@ -1049,6 +1206,23 @@ register_bench_schema(BenchSchema(
     invariants=(check_dist_rows,),
     panel="serve",
 ), benches=("dist",))
+
+register_bench_schema(BenchSchema(
+    name="fork",
+    row_type=ForkMeasurement,
+    key_fields=SIM_KEY_FIELDS,
+    compare_fields=SPACE_COMPARE_FIELDS + (
+        "peak_pages", "peak_pages_post_reclaim", "pages_reclaimed",
+        "forks", "joins", "releases", "pages_shared_peak",
+        "eager_peak_pages", "shared_savings_pages", "prefix_checks",
+        "prefix_violations", "ckpt_saves", "ckpt_pages_freed",
+        "control_ckpt_pages_freed", "control_end_pages"),
+    # check_fork_rows runs the serve per-row checks itself (with serve's
+    # require_pressure majority rule swapped for the fork one)
+    required_row_fields=FORK_FIELDS,
+    invariants=(check_fork_rows,),
+    panel="serve",
+), benches=("fork",))
 
 register_bench_schema(BenchSchema(
     name="kernel",

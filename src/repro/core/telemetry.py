@@ -90,6 +90,8 @@ class ReclaimStats:
     peak_live: int = 0              # max live units ever observed
     peak_live_post_reclaim: int = 0  # max live units right after a reclaim
     stale_lanes_aged: int = 0       # dist: stale host announcements aged out
+    ckpt_evictions: int = 0         # sole-survivor evictions (DESIGN.md §14)
+    ckpt_freed: int = 0             # units freed by checkpoint eviction alone
 
     def note_event(self) -> None:
         """One pressure event (a failed append/fork/reset or a watermark
@@ -103,6 +105,13 @@ class ReclaimStats:
         self.reclaimed += max(0, int(freed))
         self.peak_live_post_reclaim = max(self.peak_live_post_reclaim,
                                           int(live_after))
+
+    def note_ckpt_eviction(self, evicted: int, freed: int) -> None:
+        """One checkpoint-eviction pass: ``evicted`` sole-survivor versions
+        dropped because durable storage has them, freeing ``freed`` units no
+        GC policy could otherwise reclaim (DESIGN.md §14)."""
+        self.ckpt_evictions += max(0, int(evicted))
+        self.ckpt_freed += max(0, int(freed))
 
     def note_live(self, live: int) -> None:
         """Track the all-time live peak."""
@@ -118,6 +127,8 @@ class ReclaimStats:
             f"peak_{self.unit}": self.peak_live,
             f"peak_{self.unit}_post_reclaim": self.peak_live_post_reclaim,
             "stale_lanes_aged": self.stale_lanes_aged,
+            "ckpt_evictions": self.ckpt_evictions,
+            f"ckpt_{self.unit}_freed": self.ckpt_freed,
         }
 
 

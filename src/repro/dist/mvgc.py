@@ -167,10 +167,14 @@ class ShardedPagedKVEngine:
                                              gc_policy=cfg.policy,
                                              extra_pins=pins, **kern)
 
+        def _evict(s, ckpt, pins):
+            return paged.evict_checkpointed(s, ckpt, extra_pins=pins)
+
         self._append = jax.jit(jax.vmap(_append))
         self._reset = jax.jit(jax.vmap(_reset))
         self._fork = jax.jit(jax.vmap(_fork))
         self._reclaim_v = jax.jit(jax.vmap(_reclaim))
+        self._evict_v = jax.jit(jax.vmap(_evict))
         self._gate = jax.jit(jax.vmap(functools.partial(
             paged.page_pressure, watermark=cfg.page_watermark)))
         self._hot = jax.jit(jax.vmap(functools.partial(
@@ -183,6 +187,11 @@ class ShardedPagedKVEngine:
         self.stats = ReclaimStats(unit="pages")
         self.lwm_advances = 0
         self._last_lwm = -1
+        self.forks = 0
+        #: highest durably checkpointed timestamp across the mesh; -1 = no
+        #: checkpoint.  Arms the sole-survivor eviction rule on every shard
+        #: (DESIGN.md §14).
+        self.ckpt_max: int = -1
 
     # -- global LWM ----------------------------------------------------------
     def ages_s(self) -> np.ndarray:
@@ -230,7 +239,18 @@ class ShardedPagedKVEngine:
                               max(1, extra_deficit)).astype(jnp.int32)
         self.st, pages = self._reclaim_v(self.st, self._hot(self.st),
                                          deficit, pins)
-        self.stats.note_reclaim(int(pages.sum()), int(self.live_pages()))
+        freed = int(pages.sum())
+        # checkpoint-coupled eviction (DESIGN.md §14): shards still under
+        # pressure drop idle sole-survivor sequences that durable storage
+        # already holds — pages no policy pass can reach
+        if self.ckpt_max >= 0 and bool(
+                self._gate(self.st).under_pressure.any()):
+            ck = jnp.full((self.hosts,), int(self.ckpt_max), jnp.int32)
+            self.st, ck_pages, n_ev = self._evict_v(self.st, ck, pins)
+            self.stats.note_ckpt_eviction(int(n_ev.sum()),
+                                          int(ck_pages.sum()))
+            freed += int(ck_pages.sum())
+        self.stats.note_reclaim(freed, int(self.live_pages()))
 
     # -- batched serving ops (all args [H, ...]-leading) ---------------------
     def step(self, seq_ids: jax.Array, k_new: jax.Array, v_new: jax.Array,
@@ -291,6 +311,7 @@ class ShardedPagedKVEngine:
             rounds += 1
         if bool(failed.any()):
             self.stats.give_ups += int(failed.sum())
+        self.forks += int((np.asarray(mask) & ~np.asarray(failed)).sum())
         return failed
 
     def reclaim(self, deficit: Optional[int] = None) -> int:
@@ -341,6 +362,53 @@ class ShardedPagedKVEngine:
         return paged.snapshot_view(local, seq_ids, jnp.int32(t),
                                    **self.gc.kernel_kwargs())
 
+    # -- durability (DESIGN.md §14) -------------------------------------------
+    def checkpoint(self, directory, step: Optional[int] = None) -> int:
+        """Durably checkpoint the whole host-stacked pytree (every shard's
+        pages, tables, retire ring, announce board) plus the engine's
+        accounting, then advance ``ckpt_max`` to the slowest shard's clock —
+        a version is only durable mesh-wide once *every* shard has passed
+        it.  Returns the manifest step."""
+        import dataclasses
+        import os as _os
+        from repro.ckpt.manager import CheckpointManager
+        mgr = (directory if isinstance(directory, CheckpointManager)
+               else CheckpointManager(_os.fspath(directory)))
+        ts = int(jnp.min(self.st.mv.now))
+        step = ts if step is None else int(step)
+        extra = {
+            "stats": dataclasses.asdict(self.stats),
+            "forks": self.forks,
+            "lwm_advances": self.lwm_advances,
+            "last_lwm": self._last_lwm,
+            "ckpt_max": ts,
+        }
+        mgr.save(step, self.st, extra=extra)
+        self.ckpt_max = ts
+        return step
+
+    def restore(self, directory, step: Optional[int] = None) -> int:
+        """Inverse of `checkpoint`: replace the stacked pytree and replay
+        the accounting, so mesh-wide reclamation resumes where the saved
+        engine left off.  ``step=None`` restores the latest manifest."""
+        import os as _os
+        from repro.ckpt.manager import CheckpointManager
+        mgr = (directory if isinstance(directory, CheckpointManager)
+               else CheckpointManager(_os.fspath(directory)))
+        if step is None:
+            step = mgr.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint manifest under {mgr.dir!r}")
+        tree, extra = mgr.restore(int(step), like=self.st)
+        self.st = jax.tree.map(jnp.asarray, tree)
+        self.stats = ReclaimStats(**extra.get("stats", {}))
+        self.forks = int(extra.get("forks", 0))
+        self.lwm_advances = int(extra.get("lwm_advances", 0))
+        self._last_lwm = int(extra.get("last_lwm", -1))
+        self.ckpt_max = int(extra.get("ckpt_max", -1))
+        return int(step)
+
     # -- telemetry ------------------------------------------------------------
     def live_pages(self) -> jax.Array:
         return (~self.st.free).sum()
@@ -364,4 +432,5 @@ class ShardedPagedKVEngine:
         rep["lwm_advances"] = self.lwm_advances
         rep["overflows"] = int(self.st.mv.overflow_count.sum())
         rep["dropped_retires"] = int(self.st.mv.dropped_retires.sum())
+        rep["forks"] = self.forks
         return rep

@@ -24,7 +24,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 
 def make_ring_all_reduce(
-    mesh: Mesh, axis: str, reduce: str = "sum"
+    mesh: Mesh, axis: str, reduce: str = "sum", shard_mapped: bool = True
 ) -> Callable[[jax.Array], jax.Array]:
     """Build ``fn(x)``: an all-reduce over ``axis`` as a chunked ppermute ring.
 
@@ -43,6 +43,12 @@ def make_ring_all_reduce(
     pad positions only ever combine with other shards' pad positions (the
     locals are the same size on every device) and are sliced off before the
     reshape back.
+
+    ``shard_mapped=False`` returns the per-shard ``local`` body *without*
+    the ``shard_map`` wrapper, for callers already inside a ``shard_map``
+    over ``axis`` (a DP training loop's ``grad_reduce`` hook —
+    ``train.step.make_grad_reduce``): shard_map does not nest, but the bare
+    body composes with any enclosing one that binds ``axis``.
     """
     if reduce not in ("sum", "mean", "min"):
         raise ValueError(
@@ -79,5 +85,7 @@ def make_ring_all_reduce(
         out = buf.reshape(-1)[: flat.size].reshape(shape)
         return out / n if reduce == "mean" else out
 
+    if not shard_mapped:
+        return local
     return jax.shard_map(local, mesh=mesh, in_specs=P(axis),
                          out_specs=P(axis), check_vma=False)

@@ -233,6 +233,7 @@ def fork_sequence(
     use_kernel: bool = False,
     interpret: bool = True,
     extra_pins: Optional[jax.Array] = None,
+    copy_pages: bool = False,
 ) -> Tuple[PagedKV, jax.Array]:
     """COW fork: the child's first page-table version *shares every page*
     with the parent's current version, except a *partial last page*, which is
@@ -242,32 +243,65 @@ def fork_sequence(
     (state', failed[B]).  Shared pages stay live until no reachable table
     version of *either* sequence references them — the reachability sweep
     needs no refcounts for this, exactly the property the paper's GC
-    exploits."""
+    exploits.
+
+    ``copy_pages=True`` (static) is the **eager-copy control**: the child
+    deep-copies *every* page the parent references instead of sharing the
+    full ones — the fork semantics of a non-COW cache.  Nothing downstream
+    changes (same table-version commit, same sweep); the only difference is
+    page demand, which is exactly what ``benchmarks/fork_bench.py`` measures
+    COW against (DESIGN.md §14)."""
     MAX_VER = st.tables.shape[0]
     PS = st.page_size
     MP = st.max_pages
     B = src_ids.shape[0]
+    N_PAGES = st.k_pages.shape[0]
     src_tbl, has = vstore.current_read(st.mv, src_ids)
     src_safe = jnp.where(has, src_tbl, 0)
     src_len = jnp.where(has, st.lengths[src_safe], 0)
     off = src_len % PS
     pcol = jnp.minimum(src_len // PS, MP - 1)
-    needs_copy = mask & has & (off > 0)
 
-    free2, cpages, got_page = _alloc(st.free, needs_copy)
-    ok0 = mask & has & (~needs_copy | got_page)
-    tf, tslots, got = _alloc(st.table_free, ok0)
-    ok = ok0 & got
+    if copy_pages:
+        # eager control: allocate + copy every page the parent covers
+        n_used = (src_len + PS - 1) // PS
+        want2d = ((jnp.arange(MP, dtype=jnp.int32)[None, :] < n_used[:, None])
+                  & (mask & has)[:, None])
+        free2, cflat, got = _alloc(st.free, want2d.reshape(-1))
+        got2d = got.reshape(B, MP)
+        lane_ok = mask & has & (got2d | ~want2d).all(axis=1)
+        tf, tslots, got_t = _alloc(st.table_free, lane_ok)
+        ok = lane_ok & got_t
+        # hand back pages allocated for lanes that didn't fully make it
+        # (partial page allocation at pool exhaustion, or no table slot)
+        giveback = got & ~jnp.repeat(ok, MP)
+        free2 = free2.at[jnp.where(giveback, cflat, N_PAGES)].set(
+            True, mode="drop")
+        do_copy2d = want2d & ok[:, None]
+        rows = jnp.where(do_copy2d, cflat.reshape(B, MP), NO_PAGE)
+        src_flat = jnp.maximum(st.tables[src_safe], 0).reshape(-1)
+        cdest = jnp.where(do_copy2d.reshape(-1), cflat, N_PAGES)
+        k_pages = st.k_pages.at[cdest].set(st.k_pages[src_flat], mode="drop")
+        v_pages = st.v_pages.at[cdest].set(st.v_pages[src_flat], mode="drop")
+    else:
+        needs_copy = mask & has & (off > 0)
 
-    rows = jnp.where(ok[:, None], st.tables[src_safe], NO_PAGE)
-    do_copy = needs_copy & ok
-    rows = rows.at[jnp.arange(B), pcol].set(
-        jnp.where(do_copy, cpages, rows[jnp.arange(B), pcol]))
-    src_page = st.tables[src_safe, pcol]
-    src_page_safe = jnp.maximum(src_page, 0)
-    cdest = jnp.where(do_copy, cpages, st.k_pages.shape[0])
-    k_pages = st.k_pages.at[cdest].set(st.k_pages[src_page_safe], mode="drop")
-    v_pages = st.v_pages.at[cdest].set(st.v_pages[src_page_safe], mode="drop")
+        free2, cpages, got_page = _alloc(st.free, needs_copy)
+        ok0 = mask & has & (~needs_copy | got_page)
+        tf, tslots, got = _alloc(st.table_free, ok0)
+        ok = ok0 & got
+
+        rows = jnp.where(ok[:, None], st.tables[src_safe], NO_PAGE)
+        do_copy = needs_copy & ok
+        rows = rows.at[jnp.arange(B), pcol].set(
+            jnp.where(do_copy, cpages, rows[jnp.arange(B), pcol]))
+        src_page = st.tables[src_safe, pcol]
+        src_page_safe = jnp.maximum(src_page, 0)
+        cdest = jnp.where(do_copy, cpages, N_PAGES)
+        k_pages = st.k_pages.at[cdest].set(st.k_pages[src_page_safe],
+                                           mode="drop")
+        v_pages = st.v_pages.at[cdest].set(st.v_pages[src_page_safe],
+                                           mode="drop")
 
     tdest = jnp.where(ok, tslots, MAX_VER)
     tables = st.tables.at[tdest].set(rows, mode="drop")
@@ -330,6 +364,7 @@ def reclaim_on_pressure(
     use_kernel: bool = False,
     interpret: bool = True,
     extra_pins: Optional[jax.Array] = None,
+    ckpt_max: Optional[jax.Array] = None,
 ) -> Tuple[PagedKV, jax.Array]:
     """Synchronous page reclamation: hot-sequence-first descriptor compaction
     (`vstore.reclaim_on_pressure`), recycle the table slots whose descriptor
@@ -339,11 +374,17 @@ def reclaim_on_pressure(
     The version deficit is the page deficit: every freed descriptor version
     releases exactly one table version which un-pins up to MP pages, so
     chasing ``deficit`` versions is a conservative target for ``deficit``
-    pages."""
+    pages.
+
+    ``ckpt_max`` (optional, DESIGN.md §14) additionally evicts idle
+    sole-survivor sequences whose current version is durably checkpointed —
+    pages no policy can otherwise touch, because current versions are always
+    needed."""
     MAX_VER = st.tables.shape[0]
     mv, freed, _ = vstore.reclaim_on_pressure(
         st.mv, hot_keys, deficit, policy=gc_policy,
-        use_kernel=use_kernel, interpret=interpret, extra_pins=extra_pins)
+        use_kernel=use_kernel, interpret=interpret, extra_pins=extra_pins,
+        ckpt_max=ckpt_max)
     table_free = st.table_free.at[
         jnp.where(freed != EMPTY, freed, MAX_VER)
     ].set(True, mode="drop")
@@ -352,6 +393,35 @@ def reclaim_on_pressure(
     return (
         st._replace(mv=mv, table_free=table_free, free=free_pages),
         pages_freed,
+    )
+
+
+def evict_checkpointed(
+    st: PagedKV,
+    ckpt_max: jax.Array,   # i32[] highest durably checkpointed ts (EMPTY=none)
+    extra_pins: Optional[jax.Array] = None,
+) -> Tuple[PagedKV, jax.Array, jax.Array]:
+    """turso's sole-survivor rule at page granularity (DESIGN.md §14): evict
+    every sequence whose *only* version is durably checkpointed
+    (``ts <= ckpt_max``) and unpinned, recycle its table slot, and sweep the
+    pages it held.  Returns (state', pages_freed, versions_evicted).
+
+    This frees pages **no GC policy can reach** — current versions are always
+    needed — which is exactly what makes checkpoint coupling a new
+    reclamation edge rather than a faster policy.  An evicted sequence reads
+    as having no current version until ``restore()``d or rewritten; callers
+    must only advertise a checkpoint they can actually restore from."""
+    MAX_VER = st.tables.shape[0]
+    mv, freed, n_ev = vstore.evict_checkpointed(st.mv, ckpt_max, extra_pins)
+    table_free = st.table_free.at[
+        jnp.where(freed != EMPTY, freed, MAX_VER)
+    ].set(True, mode="drop")
+    free_pages = _sweep_unreferenced(st.tables, table_free, st.free)
+    pages_freed = free_pages.sum() - st.free.sum()
+    return (
+        st._replace(mv=mv, table_free=table_free, free=free_pages),
+        pages_freed,
+        n_ev,
     )
 
 

@@ -24,19 +24,23 @@ allocator.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+import os
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt.manager import CheckpointManager
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.mvgc import vstore
 from repro.core.mvgc.pool import EMPTY
 from repro.core.telemetry import GCConfig, ReclaimStats, resolve_gc_config
 from repro.models import transformer as tf
 from repro.mvkv import paged
+from repro.serve.forking import ForkDAG
 
 
 class ServeState(NamedTuple):
@@ -260,7 +264,8 @@ class PagedKVEngine:
                  hot_k: Optional[int] = None,
                  max_reclaim_rounds: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
-                 kernel_interpret: Optional[bool] = None, dtype=jnp.float32):
+                 kernel_interpret: Optional[bool] = None,
+                 eager_fork: bool = False, dtype=jnp.float32):
         cfg = resolve_gc_config(
             gc, "PagedKVEngine",
             versions_per_slot=versions_per_seq, reader_lanes=reader_lanes,
@@ -282,13 +287,14 @@ class PagedKVEngine:
                               **kern))
         self._fork = jax.jit(
             functools.partial(paged.fork_sequence, gc_policy=cfg.policy,
-                              **kern))
+                              copy_pages=eager_fork, **kern))
         self._reset = jax.jit(
             functools.partial(paged.reset_sequence, gc_policy=cfg.policy,
                               **kern))
         self._reclaim = jax.jit(
             functools.partial(paged.reclaim_on_pressure, gc_policy=cfg.policy,
                               **kern))
+        self._evict = jax.jit(paged.evict_checkpointed)
         self._gate = jax.jit(
             functools.partial(paged.page_pressure,
                               watermark=cfg.page_watermark))
@@ -296,6 +302,12 @@ class PagedKVEngine:
                                               k=cfg.hot_k))
         self._freed_pages: List[int] = []
         self.stats = ReclaimStats(unit="pages")
+        self.eager_fork = eager_fork
+        self.dag = ForkDAG()
+        #: highest durably checkpointed timestamp; -1 = no checkpoint taken.
+        #: Setting it (via `checkpoint()`) arms the sole-survivor eviction
+        #: rule in `_reclaim_once` (DESIGN.md §14).
+        self.ckpt_max: int = -1
 
     # schema-v4 counter names, now backed by the unified ReclaimStats
     @property
@@ -322,6 +334,18 @@ class PagedKVEngine:
     def peak_pages_post_reclaim(self) -> int:
         return self.stats.peak_live_post_reclaim
 
+    @property
+    def forks(self) -> int:
+        return self.dag.forks
+
+    @property
+    def joins(self) -> int:
+        return self.dag.joins
+
+    @property
+    def releases(self) -> int:
+        return self.dag.releases
+
     def _note_peak(self) -> None:
         self.stats.note_live(int(paged.live_pages(self.st)))
 
@@ -330,7 +354,18 @@ class PagedKVEngine:
         deficit = max(int(gate.deficit), extra_deficit, 1)
         self.st, pages = self._reclaim(self.st, self._hot(self.st),
                                        jnp.int32(deficit))
-        self.stats.note_reclaim(int(pages), int(paged.live_pages(self.st)))
+        freed = int(pages)
+        # Checkpoint-coupled eviction (turso sole-survivor rule, DESIGN.md
+        # §14): if the policy pass left us under pressure, idle sequences
+        # whose only version is durably checkpointed are holding pages no
+        # policy can touch — current versions are always needed.  Durable
+        # storage has their data; drop them.
+        if self.ckpt_max >= 0 and bool(self._gate(self.st).under_pressure):
+            self.st, ck_pages, n_ev = self._evict(self.st,
+                                                  jnp.int32(self.ckpt_max))
+            self.stats.note_ckpt_eviction(int(n_ev), int(ck_pages))
+            freed += int(ck_pages)
+        self.stats.note_reclaim(freed, int(paged.live_pages(self.st)))
 
     def step(self, seq_ids: jax.Array, k_new: jax.Array, v_new: jax.Array,
              mask: jax.Array) -> jax.Array:
@@ -358,9 +393,11 @@ class PagedKVEngine:
         self._freed_pages.extend(int(p) for p in newly)
         return failed
 
-    def fork(self, src_ids: jax.Array, dst_ids: jax.Array,
-             mask: jax.Array) -> jax.Array:
-        """COW fork with the same reclaim-and-retry discipline as `step`."""
+    def _fork_retry(self, src_ids: jax.Array, dst_ids: jax.Array,
+                    mask: jax.Array) -> jax.Array:
+        """The fork op proper (COW, or eager when ``eager_fork``) with the
+        same reclaim-and-retry discipline as `step` — shared by `fork` and
+        `join`, which differ only in lineage bookkeeping."""
         free_before = np.asarray(self.st.free)
         st, failed = self._fork(self.st, src_ids, dst_ids, mask)
         self.st = st
@@ -376,6 +413,55 @@ class PagedKVEngine:
             self.stats.give_ups += int(failed.sum())
         newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
         self._freed_pages.extend(int(p) for p in newly)
+        return failed
+
+    def _current_lengths(self, seq_ids: jax.Array) -> np.ndarray:
+        tbl, has = vstore.current_read(self.st.mv, jnp.asarray(seq_ids))
+        lens = np.asarray(self.st.lengths)[np.maximum(np.asarray(tbl), 0)]
+        return np.where(np.asarray(has), lens, 0)
+
+    def fork(self, src_ids: jax.Array, dst_ids: jax.Array,
+             mask: jax.Array) -> jax.Array:
+        """First-class COW fork: child ``dst`` adopts parent ``src``'s
+        content (sharing full pages unless ``eager_fork``) and enters the
+        lineage DAG, so `joins`/`releases`/validators can see it.  Returns
+        failed[B]."""
+        failed = self._fork_retry(src_ids, dst_ids, mask)
+        ok = np.asarray(mask) & ~np.asarray(failed)
+        if ok.any():
+            ts = int(self.st.mv.now)
+            lens = self._current_lengths(dst_ids)
+            src_np, dst_np = np.asarray(src_ids), np.asarray(dst_ids)
+            for i in np.flatnonzero(ok):
+                self.dag.fork(int(src_np[i]), int(dst_np[i]), ts,
+                              int(lens[i]))
+        return failed
+
+    def join(self, src_ids: jax.Array, dst_ids: jax.Array,
+             mask: jax.Array) -> jax.Array:
+        """Join child ``src`` back into ``dst``: the target adopts the
+        child's content as its next descriptor version (a fork write onto
+        the target slot — pages stay shared) and the child slot is released.
+        Grandchildren are re-parented to the join target.  Returns
+        failed[B]."""
+        failed = self._fork_retry(src_ids, dst_ids, mask)
+        done = np.asarray(mask) & ~np.asarray(failed)
+        if done.any():
+            self.reset(jnp.asarray(src_ids), jnp.asarray(done))
+            src_np, dst_np = np.asarray(src_ids), np.asarray(dst_ids)
+            for i in np.flatnonzero(done):
+                self.dag.join(int(src_np[i]), int(dst_np[i]))
+        return failed
+
+    def release(self, seq_ids: jax.Array, mask: jax.Array) -> jax.Array:
+        """Release a branch: recycle the slot and drop it from the lineage
+        DAG — its shared pages are freed by the sweep exactly when the last
+        descendant holding them goes.  Returns failed[B]."""
+        failed = self.reset(seq_ids, mask)
+        done = np.asarray(mask) & ~np.asarray(failed)
+        ids_np = np.asarray(seq_ids)
+        for i in np.flatnonzero(done):
+            self.dag.release(int(ids_np[i]))
         return failed
 
     def reset(self, seq_ids: jax.Array, mask: jax.Array) -> jax.Array:
@@ -396,6 +482,23 @@ class PagedKVEngine:
         self._freed_pages.extend(int(p) for p in newly)
         return failed
 
+    def reclaim(self, deficit: Optional[int] = None) -> int:
+        """Explicit GC pass (the engine-level ``gc_step``; API parity with
+        ``ShardedPagedKVEngine.reclaim``): chases the gate deficit, or an
+        explicit one — a large deficit forces the full cold-spill sweep,
+        and with ``ckpt_max`` armed the checkpoint-eviction post-pass runs
+        if the pool is still under pressure afterwards.  Counted as one
+        pressure event so the reclaims <= pressure_events invariant holds.
+        Returns pages freed."""
+        free_before = np.asarray(self.st.free)
+        before = int(paged.live_pages(self.st))
+        self.stats.note_event()
+        self._reclaim_once(
+            extra_deficit=0 if deficit is None else int(deficit))
+        newly = np.flatnonzero(np.asarray(self.st.free) & ~free_before)
+        self._freed_pages.extend(int(p) for p in newly)
+        return before - int(paged.live_pages(self.st))
+
     def freed_pages(self) -> List[int]:
         """Drain the handles of pages recycled since the last call — exactly
         the loop the module docstring promises: a page appears here once its
@@ -403,6 +506,56 @@ class PagedKVEngine:
         (the free bitmap) may hand it to any sequence's next append."""
         out, self._freed_pages = self._freed_pages, []
         return out
+
+    # -- durability (DESIGN.md §14) -------------------------------------
+    def checkpoint(self, directory: Union[str, os.PathLike,
+                                          CheckpointManager],
+                   step: Optional[int] = None) -> int:
+        """Durably checkpoint the whole engine: the paged-KV pytree (pages,
+        free bitmaps, page tables, the full MVState including the retire
+        ring and announce board) plus the host-side GC state (ReclaimStats,
+        fork DAG, pending freed-page handles).  Returns the manifest step.
+
+        Success *arms* the sole-survivor rule: ``ckpt_max`` advances to the
+        store clock, so every version written up to now is durable and an
+        idle sequence's sole surviving version may be evicted under pressure
+        — `restore` can always bring it back."""
+        mgr = (directory if isinstance(directory, CheckpointManager)
+               else CheckpointManager(os.fspath(directory)))
+        ts = int(self.st.mv.now)
+        step = ts if step is None else int(step)
+        extra = {
+            "stats": dataclasses.asdict(self.stats),
+            "dag": self.dag.as_dict(),
+            "freed_pages_pending": [int(p) for p in self._freed_pages],
+            "ckpt_max": ts,
+        }
+        mgr.save(step, self.st, extra=extra)
+        self.ckpt_max = ts
+        return step
+
+    def restore(self, directory: Union[str, os.PathLike, CheckpointManager],
+                step: Optional[int] = None) -> int:
+        """Inverse of `checkpoint`: replace the device pytree and replay the
+        host-side GC state (retire ring and announce board ride in the
+        pytree; stats/DAG/pending-frees come from the manifest extras), so
+        reclamation resumes exactly where the saved engine left off.
+        ``step=None`` restores the latest manifest."""
+        mgr = (directory if isinstance(directory, CheckpointManager)
+               else CheckpointManager(os.fspath(directory)))
+        if step is None:
+            step = mgr.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoint manifest under {mgr.dir!r}")
+        tree, extra = mgr.restore(int(step), like=self.st)
+        self.st = jax.tree_util.tree_map(jnp.asarray, tree)
+        self.stats = ReclaimStats(**extra.get("stats", {}))
+        self.dag = ForkDAG.from_dict(extra.get("dag", {}))
+        self._freed_pages = [int(p) for p in
+                             extra.get("freed_pages_pending", [])]
+        self.ckpt_max = int(extra.get("ckpt_max", -1))
+        return int(step)
 
     def pin(self, lane: int) -> int:
         self.st, ts = paged.begin_snapshot(self.st, jnp.int32(lane))
@@ -430,4 +583,9 @@ class PagedKVEngine:
         rep["pressure_events"] = self.pressure_events
         rep["reclaims_triggered"] = self.reclaims_triggered
         rep["give_ups"] = self.give_ups
+        rep["forks"] = self.forks
+        rep["joins"] = self.joins
+        rep["releases"] = self.releases
+        rep["ckpt_evictions"] = self.stats.ckpt_evictions
+        rep["ckpt_pages_freed"] = self.stats.ckpt_freed
         return rep

@@ -1,0 +1,246 @@
+"""Fork-DAG bookkeeping and replay validation for COW sequence forking.
+
+`mvkv.paged.fork_sequence` makes a fork a *page-table version write*: the
+child's first table version shares every full page with the parent's current
+version (DESIGN.md §14).  The device side needs no refcounts — the
+reachability sweep (`paged._sweep_unreferenced`) frees a page exactly when no
+live table version references it, which is precisely "when the last
+descendant releases it".  What the device side cannot give us is *checking*:
+
+* :func:`page_refcounts` recomputes per-page reference counts from the table
+  versions, so tests can assert refcount == reachability (no leaked page, no
+  page freed while referenced).
+* :class:`ForkDAG` is the host-side parent-pointer DAG: which slot forked
+  from which, at what fork timestamp and prefix length.  The engines update
+  it in `fork`/`join`/`release` so telemetry and validators can see the
+  lineage structure the device arrays erase.
+* :class:`ForkValidator` extends the `ScanValidator` replay contract to
+  DAGs: a child's pre-fork prefix must stay **byte-stable** against the
+  parent's content at fork time, no matter how both sides append, fork
+  further, or how much GC runs in between.  A wrongly recycled shared page
+  changes the child's values even though its table row is untouched — the
+  exact failure mode refcount-free reclamation risks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.mvgc.pool import EMPTY
+from repro.mvkv.paged import NO_PAGE, PagedKV
+
+__all__ = [
+    "ForkDAG",
+    "ForkValidator",
+    "check_no_leak",
+    "page_refcounts",
+    "prefix_values",
+    "shared_page_count",
+]
+
+
+# ---------------------------------------------------------------------------
+# Page accounting (host-side ground truth the device sweep must agree with)
+# ---------------------------------------------------------------------------
+
+def page_refcounts(st: PagedKV) -> np.ndarray:
+    """i32[num_pages]: how many *live table versions* reference each page.
+
+    This is the refcount a copying implementation would maintain; the repo's
+    sweep is refcount-free, so recomputing it host-side is the independent
+    oracle: ``refcounts > 0`` must equal ``~st.free`` after every op."""
+    tables = np.asarray(st.tables)
+    table_free = np.asarray(st.table_free)
+    n_pages = int(np.asarray(st.free).shape[0])
+    refs = np.where(table_free[:, None], NO_PAGE, tables).reshape(-1)
+    refs = refs[refs >= 0]
+    return np.bincount(refs, minlength=n_pages).astype(np.int32)
+
+
+def check_no_leak(st: PagedKV) -> Tuple[bool, np.ndarray, np.ndarray]:
+    """The fork-DAG safety invariant: a page is free iff its refcount is 0.
+
+    Returns ``(ok, leaked, premature)`` where *leaked* pages are unreferenced
+    yet still marked live (space leak) and *premature* pages are referenced
+    yet marked free (use-after-free waiting to happen)."""
+    refs = page_refcounts(st)
+    free = np.asarray(st.free)
+    leaked = np.flatnonzero((refs == 0) & ~free)
+    premature = np.flatnonzero((refs > 0) & free)
+    return leaked.size == 0 and premature.size == 0, leaked, premature
+
+
+def shared_page_count(st: PagedKV) -> int:
+    """Pages referenced by the table versions of more than one *sequence
+    slot* — COW fork sharing, which the eager-copy control cannot have.
+    (A plain version chain also drives raw refcounts above 1: successive
+    versions of one sequence share their common prefix.  That sharing
+    exists with zero forks, so it is excluded here — this is the
+    ``pages_shared_peak`` metric of BENCH_fork rows.)"""
+    payload = np.asarray(st.mv.store.payload)         # [S, V] table indices
+    live = np.asarray(st.mv.store.ts) != EMPTY
+    tables = np.asarray(st.tables)
+    table_free = np.asarray(st.table_free)
+    n_pages = int(np.asarray(st.free).shape[0])
+    owners = np.zeros((n_pages,), np.int32)
+    for s in range(payload.shape[0]):
+        rows = payload[s][live[s]]
+        rows = rows[(rows >= 0) & ~table_free[rows]]
+        pages = np.unique(tables[rows])
+        owners[pages[pages >= 0]] += 1
+    return int((owners > 1).sum())
+
+
+def prefix_values(st: PagedKV, table_row: np.ndarray, length: int) -> tuple:
+    """Exact K values of the first ``length`` tokens under ``table_row`` —
+    the byte-stability fingerprint (same contract as serve_bench's
+    ``view_checksum``: content, not page ids)."""
+    k = np.asarray(st.k_pages)[:, :, 0, 0]
+    ps = st.page_size
+    return tuple(
+        float(k[int(table_row[j // ps]), j % ps]) for j in range(int(length)))
+
+
+# ---------------------------------------------------------------------------
+# The host-side lineage DAG
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Node:
+    parent: Optional[int]       # slot id of the parent at fork time (None=root)
+    fork_ts: int                # version-store ts of the child's first version
+    fork_len: int               # prefix length shared with the parent
+
+
+@dataclass
+class ForkDAG:
+    """Parent-pointer DAG over sequence slots.
+
+    Slots are reused (a released slot can be re-forked later), so nodes are
+    keyed by slot id and a release simply drops the node: the device-side
+    sweep — not this structure — decides page lifetime.  The DAG exists so
+    hosts can ask lineage questions (ancestors, live descendants) and so
+    :class:`ForkValidator` knows which prefixes must stay stable."""
+    nodes: Dict[int, _Node] = field(default_factory=dict)
+    forks: int = 0
+    joins: int = 0
+    releases: int = 0
+
+    def fork(self, parent: int, child: int, fork_ts: int,
+             fork_len: int) -> None:
+        self.nodes[child] = _Node(parent, int(fork_ts), int(fork_len))
+        self.forks += 1
+
+    def join(self, child: int, parent: int) -> None:
+        """Child's content adopted by the parent; the child slot is released.
+        Grandchildren forked off the child keep their pages alive through
+        their own table versions, so their nodes just lose lineage depth:
+        they are re-parented to the join target."""
+        for node in self.nodes.values():
+            if node.parent == child:
+                node.parent = parent
+        self.nodes.pop(child, None)
+        self.joins += 1
+
+    def release(self, slot: int) -> None:
+        for node in self.nodes.values():
+            if node.parent == slot:
+                node.parent = None
+        self.nodes.pop(slot, None)
+        self.releases += 1
+
+    def ancestors(self, slot: int) -> List[int]:
+        out: List[int] = []
+        seen = {slot}
+        node = self.nodes.get(slot)
+        while node is not None and node.parent is not None:
+            if node.parent in seen:   # defensive: slot reuse cannot cycle,
+                break                 # but never loop on a corrupted DAG
+            out.append(node.parent)
+            seen.add(node.parent)
+            node = self.nodes.get(node.parent)
+        return out
+
+    def descendants(self, slot: int) -> List[int]:
+        out = [c for c, n in self.nodes.items() if n.parent == slot]
+        i = 0
+        while i < len(out):
+            out.extend(c for c, n in self.nodes.items()
+                       if n.parent == out[i] and c not in out)
+            i += 1
+        return out
+
+    def as_dict(self) -> Dict[str, Any]:
+        """JSON-serializable form for `checkpoint()` round-trips."""
+        return {
+            "nodes": {str(slot): [node.parent, node.fork_ts, node.fork_len]
+                      for slot, node in self.nodes.items()},
+            "forks": self.forks,
+            "joins": self.joins,
+            "releases": self.releases,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ForkDAG":
+        dag = cls(forks=int(d.get("forks", 0)), joins=int(d.get("joins", 0)),
+                  releases=int(d.get("releases", 0)))
+        for slot, (parent, fork_ts, fork_len) in d.get("nodes", {}).items():
+            dag.nodes[int(slot)] = _Node(
+                None if parent is None else int(parent),
+                int(fork_ts), int(fork_len))
+        return dag
+
+
+# ---------------------------------------------------------------------------
+# Replay validation over the DAG
+# ---------------------------------------------------------------------------
+
+class ForkValidator:
+    """Byte-stability replay checking for fork DAGs (DESIGN.md §14).
+
+    At fork time, record the parent's prefix content (the exact K values the
+    child inherits).  At every later check, resolve the child's *current*
+    view and compare its pre-fork prefix against the recording — appends on
+    either side, deeper forks, reclamation storms, checkpoint eviction of the
+    parent: none of them may perturb a single inherited byte while the child
+    is live."""
+
+    def __init__(self, keep_examples: int = 5):
+        self.keep_examples = keep_examples
+        self.checked = 0
+        self.violations = 0
+        self.examples: List[Dict[str, Any]] = []
+        self._expect: Dict[int, tuple] = {}
+
+    def note_fork(self, st: PagedKV, child: int, table_row: np.ndarray,
+                  fork_len: int) -> None:
+        """Record the inherited prefix from the *child's own* just-committed
+        table row (identical to the parent's snapshot at fork-ts by
+        construction; reading it through the child exercises the shared
+        pages the validator is guarding)."""
+        self._expect[int(child)] = prefix_values(st, table_row, fork_len)
+
+    def drop(self, child: int) -> None:
+        """The child was released/joined/reset — its prefix obligation ends."""
+        self._expect.pop(int(child), None)
+
+    def check(self, st: PagedKV, child: int, table_row: np.ndarray,
+              length: int) -> bool:
+        """Compare the child's current view against its recorded prefix."""
+        want = self._expect.get(int(child))
+        if want is None:
+            return True
+        self.checked += 1
+        n = min(len(want), int(length))
+        got = prefix_values(st, table_row, n)
+        ok = got == want[:n] and int(length) >= len(want)
+        if not ok:
+            self.violations += 1
+            if len(self.examples) < self.keep_examples:
+                self.examples.append({
+                    "child": int(child), "want": want[:n], "got": got,
+                    "length": int(length), "fork_len": len(want),
+                })
+        return ok

@@ -320,3 +320,40 @@ class TestStraggler:
         assert wd.budget_s(grace_steps=4.0) == pytest.approx(8.0)
         assert wd.is_stale(8.5, grace_steps=4.0)
         assert not wd.is_stale(7.5, grace_steps=4.0)
+
+
+def test_make_grad_reduce_inside_shard_map_matches_pmean():
+    """The ``train.step.make_grad_reduce`` hook (ROADMAP item 3 leftover):
+    the ``shard_mapped=False`` ring body, applied leaf-wise to a gradient
+    pytree *inside* an enclosing shard_map over the DP axis, must equal
+    ``jax.lax.pmean`` on every leaf."""
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.train.step import make_grad_reduce
+        mesh = jax.make_mesh((4,), ("dp",))
+        grads = {"w": jnp.arange(48.0).reshape(8, 6) * 0.5 - 3.0,
+                 "b": jnp.arange(8.0) * -0.125}
+        reduce_fn = make_grad_reduce(mesh, "dp", reduce="mean")
+
+        ring = jax.shard_map(reduce_fn, mesh=mesh,
+                             in_specs=({"w": P("dp"), "b": P("dp")},),
+                             out_specs={"w": P("dp"), "b": P("dp")})
+        ref = jax.shard_map(lambda g: jax.tree.map(
+                                lambda x: jax.lax.pmean(x, "dp"), g),
+                            mesh=mesh,
+                            in_specs=({"w": P("dp"), "b": P("dp")},),
+                            out_specs={"w": P("dp"), "b": P("dp")})
+        got = jax.jit(ring)(grads)
+        want = jax.jit(ref)(grads)
+        for k in grads:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]), rtol=1e-6)
+        print("grad_reduce OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=300, env=env)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"

@@ -62,6 +62,16 @@ class TestReclaimStats:
         assert "versions_reclaimed" in row and "peak_versions" in row
 
 
+    def test_ckpt_eviction_fields(self):
+        st = ReclaimStats(unit="pages")
+        st.note_ckpt_eviction(3, 5)
+        st.note_ckpt_eviction(2, 5)
+        row = st.as_row()
+        assert row["ckpt_evictions"] == 5
+        assert row["ckpt_pages_freed"] == 10
+        assert "ckpt_versions_freed" in ReclaimStats(unit="versions").as_row()
+
+
 class TestGCConfig:
     def test_kernel_kwargs(self):
         gc = GCConfig(use_kernel=True, kernel_interpret=False)

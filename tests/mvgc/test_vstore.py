@@ -350,3 +350,102 @@ def test_use_kernel_differential_random_trace(policy):
             rb = vstore.snapshot_gather(base, q, jnp.int32(t), values)
             for gk, gb in zip(rk, rb):
                 np.testing.assert_array_equal(np.asarray(gk), np.asarray(gb))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-coupled eviction: turso's sole-survivor rule (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+class TestCheckpointEviction:
+    S, V, P = 4, 4, 2
+
+    def _state(self):
+        return vstore.make_state(self.S, self.V, self.P, ring_capacity=16)
+
+    def _write(self, st, slots, payloads):
+        st, _, ovf = vstore.write_step(
+            st, jnp.asarray(slots, jnp.int32),
+            jnp.asarray(payloads, jnp.int32),
+            jnp.ones((len(slots),), bool))
+        assert not bool(ovf.any())
+        return st
+
+    def test_kill_mask_requires_every_condition(self):
+        st = self._write(self._state(), [0, 1, 2], [10, 11, 12])
+        ck = int(st.now)
+        st = self._write(st, [2], [22])      # slot 2 written after the ckpt
+        kill = np.asarray(vstore.ckpt_kill_mask(st, jnp.int32(ck)))
+        # idle sole survivors at ts <= ckpt_max: evictable
+        assert int(kill[0].sum()) == 1 and int(kill[1].sum()) == 1
+        # written-since-checkpoint slot: chain length 2 AND current version
+        # past ckpt_max — nothing evictable (durable copy is stale)
+        assert int(kill[2].sum()) == 0
+        assert int(kill[3].sum()) == 0       # empty slot
+        # the EMPTY sentinel disables the rule without retracing
+        assert int(np.asarray(
+            vstore.ckpt_kill_mask(st, jnp.int32(EMPTY))).sum()) == 0
+
+    def test_pins_block_eviction_like_every_policy(self):
+        st = self._write(self._state(), [0, 1], [10, 11])
+        st, _ = vstore.begin_snapshot(
+            st, jnp.array([0], jnp.int32), jnp.array([True]))
+        ck = int(st.now)
+        assert int(np.asarray(
+            vstore.ckpt_kill_mask(st, jnp.int32(ck))).sum()) == 0
+        st = vstore.end_snapshot(
+            st, jnp.array([0], jnp.int32), jnp.array([True]))
+        # unpinned but the epoch hasn't advanced: the EBR bound is `now`,
+        # so ts == now versions stay protected (a writer may still be in
+        # this epoch) ...
+        assert int(np.asarray(
+            vstore.ckpt_kill_mask(st, jnp.int32(ck))).sum()) == 0
+        # ... one later write advances the clock and unlocks both
+        st = self._write(st, [3], [33])
+        assert int(np.asarray(
+            vstore.ckpt_kill_mask(st, jnp.int32(ck))).sum()) == 2
+        # extra_pins (the sharded stack's global LWM) is honoured identically
+        pinned = np.asarray(vstore.ckpt_kill_mask(
+            st, jnp.int32(ck), extra_pins=jnp.array([ck], jnp.int32)))
+        assert int(pinned.sum()) == 0
+
+    def test_evict_checkpointed_frees_and_reports(self):
+        st = self._write(self._state(), [0, 1, 2, 3], [10, 11, 12, 13])
+        ck = int(st.now)
+        st = self._write(st, [3], [33])      # clock past the ckpt epoch
+        st2, freed, n = vstore.evict_checkpointed(st, jnp.int32(ck))
+        freed = np.asarray(freed)
+        assert sorted(freed[freed != EMPTY].tolist()) == [10, 11, 12]
+        assert int(n) == 3
+        _, found = pool.read_current(st2.store,
+                                     jnp.arange(3, dtype=jnp.int32))
+        assert not bool(np.asarray(found).any())   # cold-miss until restore
+
+    @pytest.mark.parametrize("policy", ["ebr", "steam", "dlrt", "slrt"])
+    def test_gc_step_ckpt_post_pass_inherited_by_every_policy(self, policy):
+        """No policy can evict a current version on its own; with ckpt_max
+        threaded through gc_step every policy inherits the new reclamation
+        edge with zero policy-specific code."""
+        st = self._write(self._state(), [0, 1], [10, 11])
+        ck = int(st.now)
+        st = self._write(st, [2], [22])      # clock past the ckpt epoch
+        _, freed_plain = vstore.gc_step(st, policy=policy, force=True)
+        plain = np.asarray(freed_plain).reshape(-1)
+        assert (plain == EMPTY).all()
+        st2, freed_ck = vstore.gc_step(st, policy=policy, force=True,
+                                       ckpt_max=jnp.int32(ck))
+        got = np.asarray(freed_ck).reshape(-1)
+        assert sorted(got[got != EMPTY].tolist()) == [10, 11]
+        assert int(vstore.live_versions(st2)) == 1   # slot 2 survives
+
+    @pytest.mark.parametrize("policy", ["ebr", "steam", "dlrt", "slrt"])
+    def test_reclaim_on_pressure_ckpt_post_pass(self, policy):
+        st = self._write(self._state(), [0, 1, 2], [10, 11, 12])
+        ck = int(st.now)
+        st = self._write(st, [3], [33])      # clock past the ckpt epoch
+        hot = vstore.hot_slots(st, 2)
+        _, _, n_plain = vstore.reclaim_on_pressure(
+            st, hot, jnp.int32(8), policy=policy)
+        st2, _, n_ck = vstore.reclaim_on_pressure(
+            st, hot, jnp.int32(8), policy=policy, ckpt_max=jnp.int32(ck))
+        assert int(n_plain) == 0               # sole current versions: stuck
+        assert int(n_ck) == 3                  # the checkpoint unlocks them
+        assert int(vstore.live_versions(st2)) == 1   # slot 3 survives

@@ -152,3 +152,41 @@ def test_undersized_ring_surfaces_dropped_retires():
     # properly sized ring: zero drops on the identical workload
     stats_ok = run_steps(ring_capacity=0)   # 0 = default sizing
     assert stats_ok["dropped_retires"] == 0, stats_ok
+
+
+# ---------------------------------------------------------------------------
+# fork counters: the schema's `forks` field is wired to real engine ops
+# ---------------------------------------------------------------------------
+def test_fork_counters_dormant_zero_then_exact():
+    """Regression for the once-dormant ``ServeMeasurement.forks`` field:
+    a fork-free decode run reports exactly 0 (what serve_bench rows carry),
+    and fork/join/release report exact op counts (what fork_bench rows
+    carry) — masked-out and lineage-only ops never inflate them."""
+    from repro.core.telemetry import GCConfig
+    from repro.serve.engine import PagedKVEngine
+
+    e = PagedKVEngine(4, 16, 4, 4, 1, 4,
+                      gc=GCConfig(policy="slrt", versions_per_slot=8,
+                                  reader_lanes=2))
+    ids = jnp.arange(4, dtype=jnp.int32)
+    kv = jnp.ones((4, 1, 4), jnp.float32)
+    for _ in range(4):
+        e.step(ids, kv, kv, jnp.ones((4,), bool))
+    assert (e.forks, e.joins, e.releases) == (0, 0, 0)
+    assert e.space()["forks"] == 0
+
+    # two forks in one call; a masked-out lane must not count
+    failed = e.fork(jnp.array([0, 1, 0], jnp.int32),
+                    jnp.array([2, 3, 3], jnp.int32),
+                    jnp.array([True, True, False]))
+    assert not bool(np.asarray(failed)[:2].any())
+    assert e.forks == 2
+    assert set(e.dag.nodes) == {2, 3}
+
+    e.join(jnp.array([2], jnp.int32), jnp.array([0], jnp.int32),
+           jnp.ones((1,), bool))
+    e.release(jnp.array([3], jnp.int32), jnp.ones((1,), bool))
+    assert (e.forks, e.joins, e.releases) == (2, 1, 1)
+    sp = e.space()
+    assert (sp["forks"], sp["joins"], sp["releases"]) == (2, 1, 1)
+    assert not e.dag.nodes

@@ -1,0 +1,175 @@
+"""Property tests for the fork-DAG lifecycle (DESIGN.md §14): random
+fork/append/join/release/reclaim interleavings over `PagedKVEngine` must
+never leak a page (host-recomputed refcounts agree with the refcount-free
+reachability sweep: a page is free iff no live table version references it),
+never free a reachable page, and never perturb a byte of any live child's
+inherited prefix.  Runs on the vendored mini-hypothesis when the real
+package is absent (tests/conftest.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as hst
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.core.telemetry import GCConfig
+from repro.serve import forking
+from repro.serve.engine import PagedKVEngine
+
+B, PAGES, PS, MP, V = 4, 14, 2, 3, 5
+NOW = 2**31 - 2
+
+
+def _mk(policy):
+    return PagedKVEngine(B, PAGES, PS, MP, 1, 4,
+                         gc=GCConfig(policy=policy, versions_per_slot=V,
+                                     reader_lanes=2),
+                         dtype=jnp.float32)
+
+
+class _Model:
+    """Host-side mirror of the engine: which slots are live, the lineage
+    DAG the engine should be maintaining, and the prefix obligations."""
+
+    def __init__(self, policy):
+        self.eng = _mk(policy)
+        self.live = {0}                    # slot 0 seeded with one token
+        self.validator = forking.ForkValidator()
+        self.token = 0.0
+        self._append([0])
+
+    def _views(self):
+        tbl, ln = self.eng.view_at(NOW)
+        return np.asarray(tbl), np.asarray(ln)
+
+    def _append(self, slots):
+        self.token += 1.0
+        mask = np.zeros((B,), bool)
+        for s in slots:
+            mask[s] = True
+        base = np.arange(B, dtype=np.float32) + B * self.token
+        kv = jnp.asarray(np.broadcast_to(base[:, None, None], (B, 1, 4)))
+        failed = np.asarray(self.eng.step(
+            jnp.arange(B, dtype=jnp.int32), kv, kv, jnp.asarray(mask)))
+        return [s for s in slots if not failed[s]]
+
+    def append(self, slots):
+        self._append([s for s in slots if s in self.live])
+
+    def fork(self, parent, child):
+        if parent not in self.live or child in self.live:
+            return
+        failed = np.asarray(self.eng.fork(
+            jnp.asarray([parent], jnp.int32), jnp.asarray([child], jnp.int32),
+            jnp.ones((1,), bool)))
+        if not failed[0]:
+            self.live.add(child)
+            tbl, ln = self._views()
+            self.validator.note_fork(self.eng.st, child, tbl[child],
+                                     int(ln[child]))
+
+    def join(self, child, target):
+        if child not in self.live or target not in self.live or \
+                child == target:
+            return
+        failed = np.asarray(self.eng.join(
+            jnp.asarray([child], jnp.int32), jnp.asarray([target], jnp.int32),
+            jnp.ones((1,), bool)))
+        if not failed[0]:
+            self.live.discard(child)
+            self.validator.drop(child)
+            # the target's content changed wholesale: it took the child's
+            # prefix obligation (the child's bytes now live under target)
+            self.validator.drop(target)
+
+    def release(self, slot):
+        if slot not in self.live or len(self.live) == 1:
+            return
+        failed = np.asarray(self.eng.release(
+            jnp.asarray([slot], jnp.int32), jnp.ones((1,), bool)))
+        if not failed[0]:
+            self.live.discard(slot)
+            self.validator.drop(slot)
+
+    def reclaim(self):
+        self.eng.reclaim(PAGES)
+
+    def check(self):
+        ok, leaked, premature = forking.check_no_leak(self.eng.st)
+        assert ok, (f"leaked={leaked.tolist()} "
+                    f"premature={premature.tolist()}")
+        # drained freed handles must be free at drain time
+        free_now = np.asarray(self.eng.st.free)
+        for h in self.eng.freed_pages():
+            assert free_now[h], f"freed_pages() handed out live page {h}"
+        # every live child's inherited prefix is byte-stable
+        tbl, ln = self._views()
+        for s in sorted(self.live):
+            assert self.validator.check(self.eng.st, s, tbl[s], int(ln[s])), \
+                self.validator.examples
+        # DAG bookkeeping matches the model
+        assert set(self.eng.dag.nodes) <= self.live
+        for s in self.eng.dag.nodes:
+            assert s not in self.eng.dag.ancestors(s)   # acyclic
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=hst.data(),
+       policy=hst.sampled_from(["ebr", "steam", "dlrt", "slrt"]))
+def test_random_fork_interleavings_never_leak_or_free_reachable(data, policy):
+    m = _Model(policy)
+    ops = data.draw(hst.integers(15, 30))
+    for _ in range(ops):
+        op = data.draw(hst.sampled_from(
+            ["append", "append", "fork", "fork", "join", "release",
+             "reclaim"]))
+        if op == "append":
+            k = data.draw(hst.integers(1, B))
+            m.append(sorted(m.live)[:k])
+        elif op == "fork":
+            frees = sorted(set(range(B)) - m.live)
+            if frees:
+                m.fork(data.draw(hst.sampled_from(sorted(m.live))),
+                       data.draw(hst.sampled_from(frees)))
+        elif op == "join":
+            if len(m.live) > 1:
+                pair = sorted(m.live)
+                m.join(data.draw(hst.sampled_from(pair)),
+                       data.draw(hst.sampled_from(pair)))
+        elif op == "release":
+            m.release(data.draw(hst.sampled_from(sorted(m.live))))
+        else:
+            m.reclaim()
+        m.check()
+    assert m.validator.violations == 0
+    assert m.eng.forks >= m.eng.joins
+
+
+@settings(max_examples=3, deadline=None)
+@given(data=hst.data())
+def test_deep_fork_chains_share_then_free(data):
+    """A chain root -> c1 -> c2 -> ... shares the root prefix page all the
+    way down; releasing the whole chain (in random order) returns every
+    page — end live pages equals what the surviving root alone references."""
+    m = _Model("slrt")
+    for _ in range(PS * 2):                    # root owns 2 full pages
+        m.append([0])
+    chain = []
+    for child in range(1, B):
+        parent = chain[-1] if chain else 0
+        m.fork(parent, child)
+        chain.append(child)
+        m.append([child])
+        m.check()
+    assert forking.shared_page_count(m.eng.st) > 0
+    order = list(chain)
+    while order:
+        i = data.draw(hst.integers(0, len(order) - 1))
+        m.release(order.pop(i))
+        m.check()
+    m.reclaim()
+    m.check()
+    refs = forking.page_refcounts(m.eng.st)
+    live = int((~np.asarray(m.eng.st.free)).sum())
+    assert live == int((refs > 0).sum())

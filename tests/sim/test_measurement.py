@@ -331,3 +331,70 @@ def test_committed_bench_files_pass_the_trajectory_gate(tmp_path):
                   os.path.join(REPO, committed), fresh,
                   "--tolerance", "0.15"])
         assert p.returncode == 0, p.stdout + p.stderr
+
+
+def _fork_measurement(**over):
+    from repro.core.sim.measure import ForkMeasurement
+
+    base = dict(
+        bench="fork", figure="fork_dag/beam", ds="paged_kv", scheme="slrt",
+        mix="beam", scan_size=0, zipf=0.0, n_keys=40, num_procs=8,
+        ops_per_proc=20, seed=0, updates=100, lookups=0, scans=4,
+        scan_keys=10, total_work=110, ops_per_mwork=0.0,
+        updates_per_mwork=0.0, scan_keys_per_mwork=0.0,
+        peak_space_words=10, peak_versions=3, avg_space_words=0,
+        end_space_words=6, end_versions_per_list=1.0, scans_validated=10,
+        scan_violations=0, wall_s=0.1, reclaims_triggered=2,
+        peak_space_post_reclaim=8, pressure_events=2, pages_reclaimed=4,
+        peak_pages=10, peak_pages_post_reclaim=8, page_pool=40, page_size=4,
+        decode_steps=20, tokens_appended=100, sequences_completed=0,
+        forks=4, give_ups=0, snapshot_pins=0, overflow_count=0,
+        dropped_retires=0, joins=2, releases=2, pages_shared_peak=3,
+        eager_peak_pages=14, shared_savings_pages=4, prefix_checks=10,
+        prefix_violations=0, ckpt_saves=1, ckpt_evictions=2,
+        ckpt_pages_freed=3, control_ckpt_pages_freed=0,
+        control_end_pages=9)
+    base.update(over)
+    return ForkMeasurement(**base)
+
+
+def test_fork_schema_invariants():
+    """check_fork_rows (DESIGN.md §14): the layered fork invariants catch
+    each doctored cell that a valid row passes."""
+    from repro.core.sim.measure import bench_payload, schema_of_payload
+
+    payload = bench_payload("fork", [_fork_measurement()], schema="fork")
+    assert validate_bench_payload(payload) == []
+    schema = schema_of_payload(payload)
+    assert schema.name == "fork" and schema.panel == "serve"
+
+    def run(rows, options=None):
+        probs = []
+        for inv in schema.invariants:
+            probs.extend(inv(rows, options or {}))
+        return probs
+
+    assert run(payload["rows"]) == []
+    assert run(payload["rows"], {"require_pressure": True}) == []
+
+    def bad(substr, **over):
+        probs = run([dict(_fork_measurement(**over).to_row())])
+        assert any(substr in p for p in probs), (substr, probs, over)
+
+    bad("prefix_violations", prefix_violations=1)
+    bad("pages_shared_peak", pages_shared_peak=11)
+    bad("every join consumes", joins=5)
+    bad("zero-fork", forks=0, joins=0, releases=0, pages_shared_peak=0,
+        shared_savings_pages=4, eager_peak_pages=0)
+    bad("strictly beat", eager_peak_pages=10, shared_savings_pages=0)
+    bad("shared_savings_pages", eager_peak_pages=14, shared_savings_pages=1)
+    bad("no-checkpoint", control_ckpt_pages_freed=1)
+    bad("ckpt_saves=0", ckpt_saves=0)
+    bad("stuck holding", control_end_pages=6)
+
+    # require_pressure needs at least one row proving the checkpoint edge
+    no_edge = dict(_fork_measurement(ckpt_saves=0, ckpt_evictions=0,
+                                     ckpt_pages_freed=0,
+                                     control_end_pages=0).to_row())
+    probs = run([no_edge], {"require_pressure": True})
+    assert any("checkpoint" in p and "edge" in p for p in probs)
